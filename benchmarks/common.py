@@ -1,0 +1,50 @@
+"""Benchmark harness utilities.
+
+Columns follow the paper's evaluation design (§5.3): every parallel region is
+measured three ways —
+  serial    the single-team baseline (the original direct-GPU-compilation
+            limitation: a sequential outer loop),
+  gpu_first the automatically expanded version (core/expand.py),
+  manual    the hand-written vectorized port.
+The paper's claim is gpu_first ~ manual, so the expansion predicts the payoff
+of a manual port.  On this CPU container the absolute numbers are CPU numbers;
+the *ratios* are the reproduction target.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+
+ROWS = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds of a jitted callable (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def emit_region(name: str, serial_s: float, gpu_first_s: float,
+                manual_s: float) -> None:
+    """The three-column comparison of one parallel region."""
+    emit(f"{name}/serial", serial_s * 1e6)
+    emit(f"{name}/gpu_first", gpu_first_s * 1e6,
+         f"speedup_vs_serial={serial_s / gpu_first_s:.2f}x")
+    emit(f"{name}/manual", manual_s * 1e6,
+         f"gpu_first_vs_manual={gpu_first_s / manual_s:.3f}")

@@ -1,0 +1,49 @@
+"""Paper Fig. 9a: the HeCBench "interleaved" micro benchmark.
+
+Array-of-struct (interleaved) vs struct-of-array (non-interleaved) memory
+access from a data-parallel region: the canonical layout experiment whose
+outcome differs between CPUs and accelerators — GPU First lets you measure
+the difference without porting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_region, time_fn
+from repro.core.expand import parallel_for, serial_for
+
+N = 1 << 16
+FIELDS = 8
+
+
+def compute_fields(rec):
+    """Per-element body: a little arithmetic over all 8 struct fields."""
+    s = rec[0] * rec[1] + rec[2] - rec[3]
+    s = s + jnp.sqrt(jnp.abs(rec[4])) * rec[5]
+    return s + rec[6] * rec[7]
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    aos = jax.random.normal(key, (N, FIELDS))      # interleaved
+    soa = jnp.transpose(aos)                        # (FIELDS, N)
+
+    body_aos = lambda i, a: compute_fields(a[i])
+    body_soa = lambda i, a: compute_fields(a[:, i])
+
+    emit_region(
+        "fig9a/interleaved_aos",
+        time_fn(jax.jit(lambda a: serial_for(body_aos, N, a).sum()), aos),
+        time_fn(jax.jit(lambda a: parallel_for(body_aos, N, a).sum()), aos),
+        time_fn(jax.jit(lambda a: jax.vmap(compute_fields)(a).sum()), aos))
+
+    emit_region(
+        "fig9a/noninterleaved_soa",
+        time_fn(jax.jit(lambda a: serial_for(body_soa, N, a).sum()), soa),
+        time_fn(jax.jit(lambda a: parallel_for(body_soa, N, a).sum()), soa),
+        time_fn(jax.jit(lambda a: compute_fields(a).sum()), soa))
+
+
+if __name__ == "__main__":
+    run()

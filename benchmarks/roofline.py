@@ -1,0 +1,44 @@
+"""Roofline report: renders the dry-run JSONs into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_all() -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        data = json.load(open(path))
+        if isinstance(data, dict):
+            data = [data]
+        rows.extend(data)
+    return rows
+
+
+def run() -> None:
+    rows = load_all()
+    if not rows:
+        emit("roofline/none", 0.0, "run repro.launch.dryrun first")
+        return
+    seen = set()
+    for r in rows:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("rules"))
+        if key in seen or r.get("status") != "ok":
+            continue
+        seen.add(key)
+        rf = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['rules']}",
+             rf["bound_time_s"] * 1e6,
+             f"dominant={rf['dominant']};fraction={rf['roofline_fraction']:.4f};"
+             f"useful={rf['useful_compute_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Paper Fig. 7: RPC round-trip cost and where the time goes.
+
+The paper calls fprintf(stderr, "...", buffer[128]) 1000 times by RPC and
+finds 975 us/call, ~89% of it the device waiting on host acknowledgement.
+Here: an ordered io_callback shipping a 128-byte readwrite buffer, issued from
+inside a jitted loop, vs (a) the same loop without the RPC (device-only cost),
+(b) the host function body alone (host-side work), and (c) the device-libc
+LogRing alternative that BUFFERS device-side and flushes once per loop — the
+GPU First antidote to per-call RPC cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.libc import LogRing, drain_log_lines
+from repro.core.rpc import Ref, host_rpc, reset_rpc_stats
+
+N_CALLS = 200
+
+
+def run() -> None:
+    reset_rpc_stats()
+    sink = []
+
+    @host_rpc(result_shape=jax.ShapeDtypeStruct((), jnp.int32))
+    def fprintf_like(tag, buf):
+        # the host wrapper: unpack, "print" (buffered), return
+        sink.append((int(tag), float(buf[0])))
+        buf[:] = buf + 1.0
+        return np.int32(128)
+
+    from jax import lax
+
+    def rpc_loop(x):
+        def body(i, buf):
+            _, (buf,) = fprintf_like.rpc(i, Ref(buf))
+            return buf
+        return lax.fori_loop(0, N_CALLS, body, x)
+
+    def device_only_loop(x):
+        return lax.fori_loop(0, N_CALLS, lambda i, buf: buf + 1.0, x)
+
+    def buffered_loop(x):
+        ring = LogRing.create(N_CALLS)
+
+        def body(i, carry):
+            buf, ring = carry
+            buf = buf + 1.0
+            return buf, ring.log(i, buf[0])
+
+        buf, ring = lax.fori_loop(0, N_CALLS, body, (x, ring))
+        ring.flush()
+        return buf
+
+    x = jnp.zeros((32,), jnp.float32)     # 128 bytes, as in the paper
+    t_rpc = time_fn(jax.jit(rpc_loop), x, warmup=1, iters=3)
+    t_dev = time_fn(jax.jit(device_only_loop), x, warmup=1, iters=3)
+    t_buf = time_fn(jax.jit(buffered_loop), x, warmup=1, iters=3)
+
+    # host body alone
+    host_buf = np.zeros(32, np.float32)
+    t0 = time.perf_counter()
+    for i in range(N_CALLS):
+        fprintf_like(i, host_buf)
+    t_host = (time.perf_counter() - t0)
+
+    per_call = (t_rpc - t_dev) / N_CALLS
+    wait_frac = 1.0 - min(t_host / max(t_rpc - t_dev, 1e-12), 1.0)
+    emit("fig7/rpc_roundtrip", per_call * 1e6,
+         f"wait_fraction={wait_frac:.3f}")
+    emit("fig7/host_body", t_host / N_CALLS * 1e6)
+    emit("fig7/buffered_logring", (t_buf - t_dev) / N_CALLS * 1e6,
+         f"rpc_vs_buffered={per_call / max((t_buf - t_dev) / N_CALLS, 1e-12):.1f}x")
+    drain_log_lines()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,86 @@
+"""Paper Fig. 8b: RSBench (multipole cross-section representation proxy).
+
+Instead of table interpolation, each lookup evaluates a windowed sum of
+complex poles plus a low-order polynomial fit — compute-heavier and
+gather-lighter than XSBench, which is why the paper contrasts the two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from benchmarks.common import emit_region, time_fn
+from repro.core.expand import parallel_for, serial_for
+
+N_NUCLIDES = 32
+N_WINDOWS = 100
+POLES_PER_WINDOW = 4
+FIT_ORDER = 6
+N_LOOKUPS = 2048
+N_PARTICLES = 128
+N_HISTORY = 16
+
+
+def make_data(key):
+    ks = jax.random.split(key, 4)
+    poles = (jax.random.normal(ks[0], (N_NUCLIDES, N_WINDOWS,
+                                       POLES_PER_WINDOW, 2))
+             + 1j * jax.random.normal(ks[1], (N_NUCLIDES, N_WINDOWS,
+                                              POLES_PER_WINDOW, 2)))
+    fit = jax.random.normal(ks[2], (N_NUCLIDES, N_WINDOWS, FIT_ORDER))
+    conc = jax.random.uniform(ks[3], (N_NUCLIDES,))
+    return poles, fit, conc
+
+
+def lookup_one(e, poles, fit, conc):
+    w = jnp.clip((e * N_WINDOWS).astype(jnp.int32), 0, N_WINDOWS - 1)
+    pw = poles[:, w]                                  # (nuc, poles, 2)
+    fw = fit[:, w]                                    # (nuc, order)
+    sqrt_e = jnp.sqrt(e)
+    z = pw[..., 0] / (sqrt_e - pw[..., 1])            # (nuc, poles) complex
+    sigma = jnp.sum(jnp.real(z), axis=-1)             # (nuc,)
+    powers = e ** jnp.arange(FIT_ORDER)
+    sigma = sigma + fw @ powers
+    return jnp.dot(conc, sigma)
+
+
+def history_chain(e0, poles, fit, conc):
+    def step(e, _):
+        s = lookup_one(e, poles, fit, conc)
+        e_next = jnp.abs(jnp.sin(e * 777.0 + s)) * 0.999 + 5e-4
+        return e_next, s
+    _, outs = lax.scan(step, e0, None, length=N_HISTORY)
+    return jnp.sum(outs)
+
+
+def run() -> None:
+    poles, fit, conc = make_data(jax.random.PRNGKey(0))
+    energies = jax.random.uniform(jax.random.PRNGKey(1), (N_LOOKUPS,),
+                                  minval=1e-3, maxval=0.999)
+    seeds = jax.random.uniform(jax.random.PRNGKey(2), (N_PARTICLES,),
+                               minval=1e-3, maxval=0.999)
+
+    body = lambda i, e: lookup_one(e[i], poles, fit, conc)
+    emit_region(
+        "fig8b/rsbench_event",
+        time_fn(jax.jit(lambda e: serial_for(body, N_LOOKUPS, e).sum()),
+                energies),
+        time_fn(jax.jit(lambda e: parallel_for(body, N_LOOKUPS, e).sum()),
+                energies),
+        time_fn(jax.jit(lambda e: jax.vmap(
+            lambda ee: lookup_one(ee, poles, fit, conc))(e).sum()), energies))
+
+    hbody = lambda i, s: history_chain(s[i], poles, fit, conc)
+    emit_region(
+        "fig8b/rsbench_history",
+        time_fn(jax.jit(lambda s: serial_for(hbody, N_PARTICLES, s).sum()),
+                seeds),
+        time_fn(jax.jit(lambda s: parallel_for(hbody, N_PARTICLES, s).sum()),
+                seeds),
+        time_fn(jax.jit(lambda s: jax.vmap(
+            lambda ss: history_chain(ss, poles, fit, conc))(s).sum()), seeds))
+
+
+if __name__ == "__main__":
+    run()

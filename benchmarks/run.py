@@ -1,0 +1,52 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (allocator_bench, amgmk_pagerank_bench, hypterm_bench,
+                        interleaved_bench, roofline, rpc_bench, rsbench_bench,
+                        spec_bench, xsbench_bench)
+
+SUITES = {
+    "fig6_allocator": allocator_bench.run,
+    "fig7_rpc": rpc_bench.run,
+    "fig8a_xsbench": xsbench_bench.run,
+    "fig8b_rsbench": rsbench_bench.run,
+    "fig9a_interleaved": interleaved_bench.run,
+    "fig9b_hypterm": hypterm_bench.run,
+    "fig9c_amgmk_pagerank": amgmk_pagerank_bench.run,
+    "fig10_spec": spec_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite prefixes")
+    args = ap.parse_args(argv)
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in SUITES.items():
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

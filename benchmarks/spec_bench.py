@@ -1,0 +1,138 @@
+"""Paper Fig. 10: SPEC OMP 2012 analogues — 358.botsalgn, 359.botsspar,
+372.smithwa.
+
+* botsalgn: pairwise sequence alignment tasks.  Tasks execute immediately on
+  the encountering thread under the GPU OpenMP runtime, so parallelism is
+  capped by the number of sequences — the rewrite (as in the paper) converts
+  task spawning into a data-parallel loop over pairs.
+* botsspar: blocked sparse LU — one thread produces tasks, others consume;
+  rewritten as a parallel loop over independent blocks per elimination step.
+* smithwa: Smith–Waterman with producer-consumer wavefronts + barriers: the
+  anti-diagonal dependence makes parallelism proportional to the diagonal
+  length, and barrier cost grows with sequence length — the paper's example
+  of an algorithm needing reorganization for accelerators.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from benchmarks.common import emit, emit_region, time_fn
+from repro.core.expand import parallel_for, serial_for
+
+SEQ_LEN = 64
+N_PAIRS = 64
+MATCH, MISMATCH, GAP = 2, -1, -1
+
+
+def _sw_score(a, b):
+    """Smith-Waterman local-alignment score via anti-diagonal scan."""
+    La, Lb = a.shape[0], b.shape[0]
+
+    def diag_step(carry, d):
+        prev2, prev1 = carry                       # diagonals d-2, d-1
+        i = jnp.arange(La + 1)
+        j = d - i
+        valid = (i >= 1) & (j >= 1) & (j <= Lb)
+        sub = jnp.where(a[jnp.clip(i - 1, 0, La - 1)] ==
+                        b[jnp.clip(j - 1, 0, Lb - 1)], MATCH, MISMATCH)
+        diag_val = prev2[jnp.clip(i - 1, 0, La)] + sub
+        up_val = prev1[jnp.clip(i - 1, 0, La)] + GAP
+        left_val = prev1[i] + GAP
+        h = jnp.maximum(jnp.maximum(diag_val, up_val),
+                        jnp.maximum(left_val, 0))
+        h = jnp.where(valid, h, 0)
+        return (prev1, h), jnp.max(h)
+
+    init = (jnp.zeros(La + 1, jnp.int32), jnp.zeros(La + 1, jnp.int32))
+    _, best = lax.scan(diag_step, init, jnp.arange(2, La + Lb + 1))
+    return jnp.max(best)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    seqs_a = jax.random.randint(key, (N_PAIRS, SEQ_LEN), 0, 4)
+    seqs_b = jax.random.randint(jax.random.PRNGKey(1), (N_PAIRS, SEQ_LEN), 0, 4)
+
+    # ---- 358.botsalgn: tasks -> data-parallel pairs -----------------------------
+    body = lambda i, a, b: _sw_score(a[i], b[i])
+    emit_region(
+        "fig10a/botsalgn",
+        time_fn(jax.jit(lambda a, b: serial_for(
+            lambda i: body(i, a, b), N_PAIRS).sum()), seqs_a, seqs_b),
+        time_fn(jax.jit(lambda a, b: parallel_for(
+            lambda i: body(i, a, b), N_PAIRS).sum()), seqs_a, seqs_b),
+        time_fn(jax.jit(lambda a, b: jax.vmap(_sw_score)(a, b).sum()),
+                seqs_a, seqs_b))
+
+    # ---- 359.botsspar: blocked LU ------------------------------------------------
+    NB, BS = 8, 16          # 8x8 grid of 16x16 blocks
+    A = jax.random.normal(jax.random.PRNGKey(2), (NB, NB, BS, BS)) \
+        + jnp.eye(BS) * NB * 4
+
+    def lu_step(A, k):
+        """One elimination step: factor pivot, update row/col/trailing."""
+        piv = A[k, k]
+        inv = jnp.linalg.inv(piv)
+        row = jnp.einsum("jab,bc->jac", A[k], inv)        # U row
+        col = jnp.einsum("iab,bc->iac", A[:, k], inv)      # L col
+        upd = jnp.einsum("iab,jbc->ijac", col, row)
+        mask = (jnp.arange(NB)[:, None] > k) & (jnp.arange(NB)[None, :] > k)
+        A = A - upd * mask[:, :, None, None]
+        return A
+
+    def lu_manual(A):
+        for k in range(NB):
+            A = lu_step(A, k)
+        return jnp.sum(jnp.abs(A))
+
+    def lu_serial(A):
+        # single-team: trailing blocks updated one at a time
+        for k in range(NB):
+            piv_inv = jnp.linalg.inv(A[k, k])
+
+            def blk(i, A=A, k=k, piv_inv=piv_inv):
+                r, c = i // NB, i % NB
+                upd = A[r, k] @ piv_inv @ A[k, c]
+                take = (r > k) & (c > k)
+                return jnp.where(take, A[r, c] - upd, A[r, c])
+
+            blocks = serial_for(blk, NB * NB)
+            A = blocks.reshape(NB, NB, BS, BS)
+        return jnp.sum(jnp.abs(A))
+
+    def lu_gpu_first(A):
+        for k in range(NB):
+            piv_inv = jnp.linalg.inv(A[k, k])
+
+            def blk(i, A=A, k=k, piv_inv=piv_inv):
+                r, c = i // NB, i % NB
+                upd = A[r, k] @ piv_inv @ A[k, c]
+                take = (r > k) & (c > k)
+                return jnp.where(take, A[r, c] - upd, A[r, c])
+
+            blocks = parallel_for(blk, NB * NB)
+            A = blocks.reshape(NB, NB, BS, BS)
+        return jnp.sum(jnp.abs(A))
+
+    emit_region("fig10b/botsspar",
+                time_fn(jax.jit(lu_serial), A),
+                time_fn(jax.jit(lu_gpu_first), A),
+                time_fn(jax.jit(lu_manual), A))
+
+    # ---- 372.smithwa: wavefront + barrier scaling --------------------------------
+    # relative cost per cell as the sequence grows: the barrier-per-diagonal
+    # structure means time grows ~ O(L) barriers; flag the blow-up point.
+    for L in (32, 64, 128):
+        a = jax.random.randint(jax.random.PRNGKey(3), (L,), 0, 4)
+        b = jax.random.randint(jax.random.PRNGKey(4), (L,), 0, 4)
+        t = time_fn(jax.jit(_sw_score), a, b)
+        emit(f"fig10c/smithwa_L{L}", t * 1e6,
+             f"us_per_cell={t / (L * L) * 1e6:.3f}")
+
+
+if __name__ == "__main__":
+    run()

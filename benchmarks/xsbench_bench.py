@@ -1,0 +1,93 @@
+"""Paper Fig. 8a: XSBench (OpenMC macroscopic cross-section lookup proxy).
+
+Two algorithms, as in XSBench v20:
+  event    — a flat pool of independent lookups (the algorithm the manual GPU
+             port uses),
+  history  — per-particle chains of lookups where each lookup's energy depends
+             on the previous one (the CPU-only algorithm; GPU First lets you
+             measure it on the accelerator *without* porting — the paper's
+             headline use case).
+Each lookup: binary-search the unionized energy grid, then interpolate and
+sum micro cross sections over the nuclides of a material.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from benchmarks.common import emit_region, time_fn
+from repro.core.expand import parallel_for, serial_for
+
+N_GRID = 2048          # unionized grid points
+N_NUCLIDES = 68        # H-M large has 355; 68 ~ small
+XS = 5                 # total, elastic, absorption, fission, nu-fission
+N_LOOKUPS = 4096       # event pool
+N_PARTICLES = 128      # history mode
+N_HISTORY = 16         # lookups per particle (34 in XSBench; data-dependent)
+
+
+def make_data(key):
+    ks = jax.random.split(key, 3)
+    egrid = jnp.sort(jax.random.uniform(ks[0], (N_GRID,)))
+    xs = jax.random.uniform(ks[1], (N_NUCLIDES, N_GRID, XS))
+    conc = jax.random.uniform(ks[2], (N_NUCLIDES,))
+    return egrid, xs, conc
+
+
+def lookup_one(e, egrid, xs, conc):
+    """One macroscopic XS lookup (the paper's timed kernel body)."""
+    idx = jnp.clip(jnp.searchsorted(egrid, e) - 1, 0, N_GRID - 2)
+    f = (e - egrid[idx]) / jnp.maximum(egrid[idx + 1] - egrid[idx], 1e-9)
+    lo = xs[:, idx, :]
+    hi = xs[:, idx + 1, :]
+    micro = lo + f * (hi - lo)                        # (nuclides, XS)
+    macro = jnp.einsum("n,nx->x", conc, micro)
+    return macro
+
+
+def history_chain(e0, egrid, xs, conc):
+    """Data-dependent chain: next energy derives from the previous result."""
+    def step(e, _):
+        macro = lookup_one(e, egrid, xs, conc)
+        e_next = jnp.abs(jnp.sin(e * 1000.0 + macro[0])) * 0.999 + 5e-4
+        return e_next, macro[0]
+    _, outs = lax.scan(step, e0, None, length=N_HISTORY)
+    return jnp.sum(outs)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    egrid, xs, conc = make_data(key)
+    energies = jax.random.uniform(jax.random.PRNGKey(1), (N_LOOKUPS,),
+                                  minval=1e-3, maxval=0.999)
+    seeds = jax.random.uniform(jax.random.PRNGKey(2), (N_PARTICLES,),
+                               minval=1e-3, maxval=0.999)
+
+    # ---- event mode -----------------------------------------------------------
+    body = lambda i, e: lookup_one(e[i], egrid, xs, conc)[0]
+    serial = jax.jit(lambda e: serial_for(body, N_LOOKUPS, e).sum())
+    gpu_first = jax.jit(lambda e: parallel_for(body, N_LOOKUPS, e).sum())
+    manual = jax.jit(lambda e: jax.vmap(
+        lambda ee: lookup_one(ee, egrid, xs, conc)[0])(e).sum())
+    emit_region("fig8a/xsbench_event",
+                time_fn(serial, energies),
+                time_fn(gpu_first, energies),
+                time_fn(manual, energies))
+
+    # ---- history mode (not in the manual offload port: GPU First only) --------
+    hbody = lambda i, s: history_chain(s[i], egrid, xs, conc)
+    serial_h = jax.jit(lambda s: serial_for(hbody, N_PARTICLES, s).sum())
+    gpu_first_h = jax.jit(lambda s: parallel_for(hbody, N_PARTICLES, s).sum())
+    manual_h = jax.jit(lambda s: jax.vmap(
+        lambda ss: history_chain(ss, egrid, xs, conc))(s).sum())
+    emit_region("fig8a/xsbench_history",
+                time_fn(serial_h, seeds),
+                time_fn(gpu_first_h, seeds),
+                time_fn(manual_h, seeds))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Continuous-batching serving demo: mixed-length requests through the
+paged-KV engine (balanced-allocator pages), verified against step-by-step
+decode.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = get_config("qwen2.5-14b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServingEngine(model, params, batch_slots=4, max_len=128,
+                           page_size=16)
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6], [5, 3, 5, 8, 9, 7, 9],
+               [2, 7, 1, 8], [2, 8, 1, 8], [31, 41, 59]]
+    rids = [engine.submit(p, max_new=8 + i % 5) for i, p in enumerate(prompts)]
+
+    t0 = time.time()
+    results = engine.run_until_drained()
+    dt = time.time() - t0
+
+    # verify one request against plain cached decode
+    ref_cache, _ = model.init_cache(1, 128)
+    cur = None
+    for t in prompts[0][:-1]:
+        _, ref_cache = model.decode_step(params, ref_cache,
+                                         jnp.asarray([t], jnp.int32))
+    out, cur = [], prompts[0][-1]
+    for _ in range(8):
+        lg, ref_cache = model.decode_step(params, ref_cache,
+                                          jnp.asarray([cur], jnp.int32))
+        cur = int(jnp.argmax(lg[0]))
+        out.append(cur)
+    assert results[rids[0]] == out, (results[rids[0]], out)
+
+    total = sum(len(v) for v in results.values())
+    for rid in rids:
+        print(f"[serve] request {rid}: {results[rid]}")
+    print(f"[serve] {len(results)} requests / {total} tokens in {dt:.1f}s "
+          f"(verified vs reference decode)")
+
+
+if __name__ == "__main__":
+    main()

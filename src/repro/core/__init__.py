@@ -1,0 +1,28 @@
+"""GPU First core: the paper's contributions as composable JAX modules.
+
+  device_main — whole-program device execution (C1: §3.1)
+  rpc         — auto-generated host RPCs with object migration (C1: §3.2)
+  expand      — single-team -> whole-machine parallelism expansion (C2: §3.3)
+  allocator   — generic + balanced heap allocators w/ tracking (C3: §3.4)
+  libc        — partial device libc (C3: §3.4)
+"""
+from repro.core.allocator import (
+    BalancedAllocator, BalancedState, GenericAllocator, GenericState)
+from repro.core.device_main import HostHook, device_run, host_driven_run
+from repro.core.expand import (
+    barrier, expand, num_teams, num_threads, parallel_for, serial_for,
+    team_id, thread_id, ws_range)
+from repro.core.libc import LogRing, atoi, rand_u32, rand_uniform, realloc, strtod
+from repro.core.rpc import (
+    READ, READWRITE, WRITE, ArenaRef, Ref, host_rpc, rpc_call, rpc_stats,
+    reset_rpc_stats)
+
+__all__ = [
+    "BalancedAllocator", "BalancedState", "GenericAllocator", "GenericState",
+    "HostHook", "device_run", "host_driven_run",
+    "barrier", "expand", "num_teams", "num_threads", "parallel_for",
+    "serial_for", "team_id", "thread_id", "ws_range",
+    "LogRing", "atoi", "rand_u32", "rand_uniform", "realloc", "strtod",
+    "READ", "READWRITE", "WRITE", "ArenaRef", "Ref", "host_rpc", "rpc_call",
+    "rpc_stats", "reset_rpc_stats",
+]

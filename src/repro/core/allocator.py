@@ -1,0 +1,376 @@
+"""Heap allocators and allocation tracking (paper §3.4), JAX-traceable.
+
+XLA owns all device memory, so — exactly like the paper's allocators, which
+only manage a preallocated heap slab — these allocators manage *offsets into a
+preallocated arena*.  All metadata lives in device arrays and every operation
+is pure ``jnp``/``lax``, so allocation runs **inside** jitted device code (the
+whole point of GPU First: the program, including its heap, lives on the
+accelerator).
+
+Two allocators, as in the paper:
+
+* :class:`GenericAllocator` — one global allocation list + free-list reuse
+  (first fit).  Every request walks shared state: the JAX analogue of the
+  paper's single-lock design, and exactly as serial.
+
+* :class:`BalancedAllocator` — the heap is split into N (thread slots) x
+  M (team slots) chunks; chunk 0 is larger by a configurable ratio (the
+  initial thread allocates big serial-phase objects).  Entries form a
+  watermark stack per chunk (paper Fig. 5): frees mark entries unused without
+  moving memory; the top of the stack is reclaimed eagerly, trading
+  fragmentation for O(1) alloc/free in balanced lifetime patterns.  Chunks are
+  independent, so batched requests process **in parallel across chunks**
+  (``vmap``) — the per-chunk-lock concurrency story, TPU-style.
+
+Allocation tracking doubles as the RPC layer's runtime object lookup
+(``find_obj`` == the paper's ``_FindObj``), used to ship *underlying objects*
+of pointer arguments to the host (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+I32 = jnp.int32
+FAIL = jnp.int32(-1)
+
+
+# ---------------------------------------------------------------------------
+# Generic allocator
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GenericState:
+    offsets: jax.Array      # (CAP,) i32
+    sizes: jax.Array        # (CAP,) i32
+    in_use: jax.Array       # (CAP,) i32 (0/1)
+    count: jax.Array        # () i32  — entries ever created (stack top)
+    watermark: jax.Array    # () i32
+    heap_size: int
+
+    def tree_flatten(self):
+        return ((self.offsets, self.sizes, self.in_use, self.count,
+                 self.watermark), self.heap_size)
+
+    @classmethod
+    def tree_unflatten(cls, heap_size, leaves):
+        return cls(*leaves, heap_size)
+
+
+class GenericAllocator:
+    """Single free-list allocator; shared state => serialized semantics."""
+
+    @staticmethod
+    def init(heap_size: int, cap: int = 4096) -> GenericState:
+        z = jnp.zeros((cap,), I32)
+        return GenericState(z, z, z, jnp.zeros((), I32), jnp.zeros((), I32),
+                            heap_size)
+
+    @staticmethod
+    def malloc(st: GenericState, size) -> Tuple[GenericState, jax.Array]:
+        size = jnp.asarray(size, I32)
+        cap = st.offsets.shape[0]
+        # 1) first-fit over freed entries
+        reusable = (st.in_use == 0) & (st.sizes >= size) & \
+            (jnp.arange(cap) < st.count)
+        any_reuse = jnp.any(reusable)
+        reuse_idx = jnp.argmax(reusable)
+        # 2) bump the watermark
+        can_bump = (st.watermark + size <= st.heap_size) & (st.count < cap)
+
+        def do_reuse(st):
+            in_use = st.in_use.at[reuse_idx].set(1)
+            return dataclasses.replace(st, in_use=in_use), st.offsets[reuse_idx]
+
+        def do_bump(st):
+            def bump(st):
+                i = st.count
+                return dataclasses.replace(
+                    st,
+                    offsets=st.offsets.at[i].set(st.watermark),
+                    sizes=st.sizes.at[i].set(size),
+                    in_use=st.in_use.at[i].set(1),
+                    count=st.count + 1,
+                    watermark=st.watermark + size), st.watermark
+
+            return lax.cond(can_bump, bump, lambda st: (st, FAIL), st)
+
+        return lax.cond(any_reuse, do_reuse, do_bump, st)
+
+    @staticmethod
+    def free(st: GenericState, ptr) -> GenericState:
+        ptr = jnp.asarray(ptr, I32)
+        cap = st.offsets.shape[0]
+        hit = (st.offsets == ptr) & (st.in_use == 1) & \
+            (jnp.arange(cap) < st.count)
+        idx = jnp.argmax(hit)
+        in_use = jnp.where(jnp.any(hit), st.in_use.at[idx].set(0), st.in_use)
+        return dataclasses.replace(st, in_use=in_use)
+
+    @staticmethod
+    def find_obj(st: GenericState, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """The paper's ``_FindObj``: (found, base, size) of the underlying
+        object containing ``ptr``."""
+        ptr = jnp.asarray(ptr, I32)
+        cap = st.offsets.shape[0]
+        live = (st.in_use == 1) & (jnp.arange(cap) < st.count)
+        inside = live & (st.offsets <= ptr) & (ptr < st.offsets + st.sizes)
+        idx = jnp.argmax(inside)
+        found = jnp.any(inside)
+        return found, st.offsets[idx], st.sizes[idx]
+
+    @staticmethod
+    def malloc_many(st: GenericState, sizes) -> Tuple[GenericState, jax.Array]:
+        """Batched allocation — necessarily serial (one shared structure)."""
+        return lax.scan(lambda s, sz: GenericAllocator.malloc(s, sz), st, sizes)
+
+    @staticmethod
+    def free_many(st: GenericState, ptrs) -> GenericState:
+        st, _ = lax.scan(lambda s, p: (GenericAllocator.free(s, p), 0), st, ptrs)
+        return st
+
+
+# ---------------------------------------------------------------------------
+# Balanced allocator (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BalancedState:
+    chunk_start: jax.Array   # (NC,) i32 — absolute base of each chunk
+    chunk_size: jax.Array    # (NC,) i32
+    offsets: jax.Array       # (NC, CAP) i32 — entry offsets (chunk-relative)
+    sizes: jax.Array         # (NC, CAP) i32
+    in_use: jax.Array        # (NC, CAP) i32
+    count: jax.Array         # (NC,) i32 — stack top per chunk
+    watermark: jax.Array     # (NC,) i32 — chunk-relative
+    n_slots: int             # N (thread slots)
+    m_slots: int             # M (team slots)
+
+    def tree_flatten(self):
+        return ((self.chunk_start, self.chunk_size, self.offsets, self.sizes,
+                 self.in_use, self.count, self.watermark),
+                (self.n_slots, self.m_slots))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+class BalancedAllocator:
+    @staticmethod
+    def init(heap_size: int, n_slots: int, m_slots: int, *,
+             cap: int = 256, first_chunk_ratio: float = 4.0) -> BalancedState:
+        nc = n_slots * m_slots
+        # chunk 0 gets `first_chunk_ratio` x the share of the others
+        unit = heap_size / (nc - 1 + first_chunk_ratio)
+        sizes = [int(unit * first_chunk_ratio)] + [int(unit)] * (nc - 1)
+        sizes[-1] += heap_size - sum(sizes)          # absorb rounding
+        starts = [0]
+        for s in sizes[:-1]:
+            starts.append(starts[-1] + s)
+        z2 = jnp.zeros((nc, cap), I32)
+        return BalancedState(
+            jnp.asarray(starts, I32), jnp.asarray(sizes, I32),
+            z2, z2, z2, jnp.zeros((nc,), I32), jnp.zeros((nc,), I32),
+            n_slots, m_slots)
+
+    # -- chunk selection (paper: thread id % N, team id % M) -------------------
+    @staticmethod
+    def chunk_of(st: BalancedState, tid, team) -> jax.Array:
+        return (jnp.asarray(tid, I32) % st.n_slots) * st.m_slots + \
+            (jnp.asarray(team, I32) % st.m_slots)
+
+    # -- single-chunk primitives (operate on chunk-local rows) ------------------
+    @staticmethod
+    def _chunk_malloc(row, size):
+        """row: dict of chunk-local arrays/scalars -> (row, rel_offset).
+
+        ``size <= 0`` is a no-op returning FAIL (lets batched grid requests
+        conditionally skip — e.g. the paged KV cache allocating a page only
+        when a sequence crosses a page boundary)."""
+        cap = row["offsets"].shape[0]
+        fits_top = (size > 0) & (row["wm"] + size <= row["csize"]) & \
+            (row["count"] < cap)
+
+        def top(row):
+            i = row["count"]
+            out = dict(row)
+            out["offsets"] = row["offsets"].at[i].set(row["wm"])
+            out["sizes"] = row["sizes"].at[i].set(size)
+            out["in_use"] = row["in_use"].at[i].set(1)
+            out["count"] = row["count"] + 1
+            out["wm"] = row["wm"] + size
+            return out, row["wm"]
+
+        def hole(row):
+            live_range = jnp.arange(cap) < row["count"]
+            ok = (row["in_use"] == 0) & (row["sizes"] >= size) & live_range
+            has = jnp.any(ok) & (size > 0)
+            j = jnp.argmax(ok)
+
+            def take(row):
+                out = dict(row)
+                out["in_use"] = row["in_use"].at[j].set(1)
+                return out, row["offsets"][j]
+
+            return lax.cond(has, take, lambda r: (r, FAIL), row)
+
+        return lax.cond(fits_top, top, hole, row)
+
+    @staticmethod
+    def _chunk_free(row, rel_ptr):
+        cap = row["offsets"].shape[0]
+        live_range = jnp.arange(cap) < row["count"]
+        hit = (row["offsets"] == rel_ptr) & (row["in_use"] == 1) & live_range
+        idx = jnp.argmax(hit)
+        row = dict(row)
+        row["in_use"] = jnp.where(jnp.any(hit),
+                                  row["in_use"].at[idx].set(0), row["in_use"])
+
+        # reclaim the top of the stack while it is unused (paper Fig. 5 bottom)
+        def cond(r):
+            top_unused = (r["count"] > 0) & \
+                (r["in_use"][jnp.maximum(r["count"] - 1, 0)] == 0)
+            return top_unused
+
+        def body(r):
+            i = r["count"] - 1
+            r = dict(r)
+            r["wm"] = r["offsets"][i]
+            r["count"] = i
+            return r
+
+        return lax.while_loop(cond, body, row)
+
+    # -- public API ---------------------------------------------------------------
+    @staticmethod
+    def _row(st: BalancedState, c):
+        return {
+            "offsets": st.offsets[c], "sizes": st.sizes[c],
+            "in_use": st.in_use[c], "count": st.count[c],
+            "wm": st.watermark[c], "csize": st.chunk_size[c],
+        }
+
+    @staticmethod
+    def _put_row(st: BalancedState, c, row) -> BalancedState:
+        return dataclasses.replace(
+            st,
+            offsets=st.offsets.at[c].set(row["offsets"]),
+            sizes=st.sizes.at[c].set(row["sizes"]),
+            in_use=st.in_use.at[c].set(row["in_use"]),
+            count=st.count.at[c].set(row["count"]),
+            watermark=st.watermark.at[c].set(row["wm"]))
+
+    @staticmethod
+    def malloc(st: BalancedState, tid, team, size
+               ) -> Tuple[BalancedState, jax.Array]:
+        c = BalancedAllocator.chunk_of(st, tid, team)
+        row, rel = BalancedAllocator._chunk_malloc(
+            BalancedAllocator._row(st, c), jnp.asarray(size, I32))
+        ptr = jnp.where(rel == FAIL, FAIL, st.chunk_start[c] + rel)
+        return BalancedAllocator._put_row(st, c, row), ptr
+
+    @staticmethod
+    def free(st: BalancedState, ptr) -> BalancedState:
+        ptr = jnp.asarray(ptr, I32)
+        c = jnp.clip(jnp.searchsorted(st.chunk_start, ptr, side="right") - 1,
+                     0, st.chunk_start.shape[0] - 1)
+        row = BalancedAllocator._chunk_free(
+            BalancedAllocator._row(st, c), ptr - st.chunk_start[c])
+        return BalancedAllocator._put_row(st, c, row)
+
+    @staticmethod
+    def find_obj(st: BalancedState, ptr
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        ptr = jnp.asarray(ptr, I32)
+        c = jnp.clip(jnp.searchsorted(st.chunk_start, ptr, side="right") - 1,
+                     0, st.chunk_start.shape[0] - 1)
+        rel = ptr - st.chunk_start[c]
+        cap = st.offsets.shape[1]
+        live = (st.in_use[c] == 1) & (jnp.arange(cap) < st.count[c])
+        inside = live & (st.offsets[c] <= rel) & \
+            (rel < st.offsets[c] + st.sizes[c])
+        idx = jnp.argmax(inside)
+        return jnp.any(inside), st.chunk_start[c] + st.offsets[c][idx], \
+            st.sizes[c][idx]
+
+    # -- grid-batched ops: the paper's "all threads allocate at a parallel-region
+    # boundary" pattern.  Requests with a regular (tid, team) grid map onto
+    # chunks bijectively, so chunks process their request streams in parallel
+    # (vmap) — the per-chunk-lock concurrency of the paper, minus the locks.
+    @staticmethod
+    def malloc_grid(st: BalancedState, n_threads: int, n_teams: int, sizes
+                    ) -> Tuple[BalancedState, jax.Array]:
+        """sizes: (n_threads, n_teams) i32 -> ptrs of the same shape."""
+        N, M = st.n_slots, st.m_slots
+        assert n_threads % N == 0 and n_teams % M == 0, \
+            "grid must tile the chunk slots"
+        sizes = jnp.asarray(sizes, I32)
+        grouped = _group_grid(sizes, N, M)            # (NC, per_chunk)
+
+        def per_chunk(row, reqs):
+            def step(row, sz):
+                row, rel = BalancedAllocator._chunk_malloc(row, sz)
+                return row, rel
+            row, rels = lax.scan(step, row, reqs)
+            return row, rels
+
+        rows = {
+            "offsets": st.offsets, "sizes": st.sizes, "in_use": st.in_use,
+            "count": st.count, "wm": st.watermark, "csize": st.chunk_size,
+        }
+        rows, rels = jax.vmap(per_chunk)(rows, grouped)
+        new_st = dataclasses.replace(
+            st, offsets=rows["offsets"], sizes=rows["sizes"],
+            in_use=rows["in_use"], count=rows["count"], watermark=rows["wm"])
+        ptrs = jnp.where(rels == FAIL, FAIL,
+                         st.chunk_start[:, None] + rels)
+        return new_st, _ungroup_grid(ptrs, n_threads, n_teams, N, M)
+
+    @staticmethod
+    def free_grid(st: BalancedState, n_threads: int, n_teams: int, ptrs
+                  ) -> BalancedState:
+        N, M = st.n_slots, st.m_slots
+        ptrs = jnp.asarray(ptrs, I32)
+        grouped = _group_grid(ptrs, N, M)
+        rel = grouped - st.chunk_start[:, None]
+
+        def per_chunk(row, reqs):
+            def step(row, p):
+                return BalancedAllocator._chunk_free(row, p), 0
+            row, _ = lax.scan(step, row, reqs)
+            return row
+
+        rows = {
+            "offsets": st.offsets, "sizes": st.sizes, "in_use": st.in_use,
+            "count": st.count, "wm": st.watermark, "csize": st.chunk_size,
+        }
+        rows = jax.vmap(per_chunk)(rows, rel)
+        return dataclasses.replace(
+            st, offsets=rows["offsets"], sizes=rows["sizes"],
+            in_use=rows["in_use"], count=rows["count"], watermark=rows["wm"])
+
+
+def _group_grid(grid: jax.Array, N: int, M: int) -> jax.Array:
+    """(n_threads, n_teams) -> (N*M, per_chunk) grouped by (tid%N, team%M)."""
+    T, G = grid.shape
+    a, b = T // N, G // M
+    # index (n*a + i, m*b_ ... ) — tid%N == n requires tid = i*N + n layout:
+    g = grid.reshape(a, N, b, M)          # tid = i*N+n -> (i, n); team = j*M+m
+    g = jnp.transpose(g, (1, 3, 0, 2))    # (N, M, a, b)
+    return g.reshape(N * M, a * b)
+
+
+def _ungroup_grid(grouped: jax.Array, T: int, G: int, N: int, M: int
+                  ) -> jax.Array:
+    a, b = T // N, G // M
+    g = grouped.reshape(N, M, a, b)
+    g = jnp.transpose(g, (2, 0, 3, 1))    # (a, N, b, M)
+    return g.reshape(T, G)

@@ -1,0 +1,104 @@
+"""Whole-program device execution (paper §3.1): ``main()`` lives on the TPU.
+
+Classical offload drives the accelerator step-by-step from a host loop — one
+launch + sync per step (the analogue of the paper's "legacy" CPU-driven app).
+GPU First inverts this: the *entire* program runs on the device, escaping to
+the host only through RPCs.  Here that is a single jitted program containing
+the full multi-step loop (``lax.while_loop`` over steps, donated carry), with
+periodic host escapes (checkpoint, metrics, data refill) expressed as RPCs
+via ``io_callback`` under ``lax.cond`` — the loader below compiles it,
+transfers control, and only sees the device again when the program returns.
+
+The host round-trip cost this architecture removes is measured by
+``benchmarks/rpc_bench.py`` (the paper's Fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import io_callback
+
+
+@dataclasses.dataclass(frozen=True)
+class HostHook:
+    """A periodic host escape from the device main loop.
+
+    every:    fire on steps where step % every == 0 (and step > 0)
+    extract:  (step, state) -> pytree of arrays shipped to the host
+    host_fn:  host callback receiving (step, *leaves); return value ignored
+    """
+    every: int
+    extract: Callable[[jax.Array, Any], Any]
+    host_fn: Callable
+
+
+def _noop_like(*args):
+    return np.int32(0)
+
+
+def _fire(hook: HostHook, step, state):
+    payload = hook.extract(step, state)
+    leaves = jax.tree.leaves(payload)
+
+    def host(step_, *ls):
+        hook.host_fn(int(step_), *ls)
+        return np.int32(0)
+
+    def yes(_):
+        return io_callback(host, jax.ShapeDtypeStruct((), jnp.int32),
+                           step, *leaves, ordered=True)
+
+    def no(_):
+        return io_callback(_noop_like, jax.ShapeDtypeStruct((), jnp.int32),
+                           step, ordered=True)
+
+    should = (step % hook.every == 0) & (step > 0)
+    return lax.cond(should, yes, no, 0)
+
+
+def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
+               n_steps: int, *, hooks: Sequence[HostHook] = (),
+               donate: bool = True, jit_kwargs: Optional[dict] = None) -> Any:
+    """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
+
+    The whole loop is one compiled program; ``hooks`` are the only host
+    contact.  Returns the final state.
+    """
+    jit_kwargs = dict(jit_kwargs or {})
+    if donate:
+        jit_kwargs.setdefault("donate_argnums", (0,))
+
+    @functools.partial(jax.jit, **jit_kwargs)
+    def program(state):
+        def body(carry):
+            step, state = carry
+            state = step_fn(step, state)
+            for h in hooks:
+                _fire(h, step + 1, state)
+            return (step + 1, state)
+
+        def cond(carry):
+            return carry[0] < n_steps
+
+        _, final = lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), state))
+        return final
+
+    return program(state)
+
+
+def host_driven_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
+                    n_steps: int) -> Any:
+    """The classical offload baseline: one jitted step per host-loop
+    iteration, with a host sync every step.  Used by the benchmarks to
+    measure what whole-program device execution saves."""
+    step_jit = jax.jit(step_fn, donate_argnums=(1,))
+    for i in range(n_steps):
+        state = step_jit(jnp.int32(i), state)
+        jax.block_until_ready(state)
+    return state

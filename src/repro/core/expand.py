@@ -1,0 +1,163 @@
+"""Parallelism expansion (paper §3.3): single-team code -> the whole machine.
+
+Under OpenMP offload semantics a ``parallel`` region maps to ONE thread block;
+the paper's compiler pass rewrites work-sharing, thread-id queries, and
+barriers so the region runs across every team on the GPU, with *continuous*
+thread ids.  The TPU analogue of "team" is a mesh device; of "thread within a
+team", a vectorized lane.  This module provides:
+
+* the **single-team semantics** primitives legacy-style code is written
+  against: :func:`thread_id`, :func:`num_threads`, :func:`barrier`,
+  :func:`ws_range` (the ``omp for`` static schedule);
+
+* :func:`expand` — the multi-team rewrite: wraps a single-shard function in
+  ``shard_map`` over *all* mesh axes so the same primitives now report global
+  coordinates (continuous ids across teams, exactly Fig. 4), work-sharing
+  distributes over every device, and ``barrier`` synchronizes the mesh;
+
+* :func:`parallel_for` / :func:`serial_for` — the measurable contrast the
+  paper's Fig. 8–10 are built on: the *expanded* execution of an iteration
+  space versus the *single-team* (sequential-outer-loop) execution.
+
+The sequential part of the program stays single-team (one logical thread);
+entering an expanded region corresponds to the paper's kernel split — in JAX
+the "launch" is simply calling the expanded (shard_map) function, and the
+result flowing back is the host-RPC completion of Fig. 4.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+class _Env(threading.local):
+    def __init__(self):
+        self.axes: Tuple[str, ...] = ()     # mesh axes visible to the region
+        self.lanes: int = 1                  # vectorized lanes per device
+
+
+_ENV = _Env()
+
+
+@contextlib.contextmanager
+def _team_env(axes: Tuple[str, ...], lanes: int):
+    old = (_ENV.axes, _ENV.lanes)
+    _ENV.axes, _ENV.lanes = axes, lanes
+    try:
+        yield
+    finally:
+        _ENV.axes, _ENV.lanes = old
+
+
+# ---------------------------------------------------------------------------
+# Single-team semantics (the vocabulary legacy-style code is written in)
+# ---------------------------------------------------------------------------
+
+def team_id():
+    """Continuous team id across the whole mesh (0 when unexpanded)."""
+    if not _ENV.axes:
+        return jnp.zeros((), jnp.int32)
+    tid = jnp.zeros((), jnp.int32)
+    for ax in _ENV.axes:
+        tid = tid * lax.axis_size(ax) + lax.axis_index(ax)
+    return tid
+
+
+def num_teams() -> int:
+    n = 1
+    for ax in _ENV.axes:
+        n *= lax.axis_size(ax)
+    return n
+
+
+def thread_id(lane=None):
+    """Continuous global thread id = team_id * lanes + lane (paper Fig. 4:
+    teams are 'bulked together as one large team')."""
+    lane = jnp.zeros((), jnp.int32) if lane is None else lane
+    return team_id() * _ENV.lanes + lane
+
+
+def num_threads() -> int:
+    return num_teams() * _ENV.lanes
+
+
+def barrier():
+    """Cross-team barrier.  The paper implements this with global atomic
+    counters (outside the OpenMP standard); on TPU the idiomatic equivalent is
+    a collective, which orders all shards of the expanded region."""
+    if _ENV.axes:
+        lax.psum(jnp.zeros((), jnp.float32), _ENV.axes)
+
+
+def ws_range(n: int) -> Tuple[jax.Array, int]:
+    """``omp for schedule(static)`` over [0, n): this team's (start, count)."""
+    teams = num_teams()
+    assert n % teams == 0, f"iteration space {n} must tile {teams} teams"
+    per = n // teams
+    return team_id() * per, per
+
+
+# ---------------------------------------------------------------------------
+# Expansion
+# ---------------------------------------------------------------------------
+
+def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
+           lanes: int = 1, check_vma: bool = False) -> Callable:
+    """Rewrite single-team ``fn`` for multi-team execution over ``mesh``.
+
+    Inside ``fn`` the single-team primitives report *global* coordinates.
+    This is the paper's compiler transformation; here it is a higher-order
+    function because JAX programs are traced, not linked.
+    """
+    axes = tuple(mesh.axis_names)
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        def body(*shard_args):
+            with _team_env(axes, lanes):
+                return fn(*shard_args)
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)(*args)
+
+    return wrapped
+
+
+def parallel_for(body: Callable, n: int, *arrays,
+                 mesh: Optional[Mesh] = None):
+    """Expanded execution of ``for i in range(n): out[i] = body(i, *arrays)``.
+
+    Work is block-distributed over all mesh devices (teams) and vectorized
+    within each block (threads) — ``omp distribute parallel for``.  Without a
+    mesh it still vectorizes (one team, many threads).
+    """
+    if mesh is None or mesh.size == 1:
+        return jax.vmap(lambda i: body(i, *arrays))(jnp.arange(n))
+
+    axes = tuple(mesh.axis_names)
+    per = n // mesh.size
+    assert n % mesh.size == 0
+
+    def shard_body():
+        with _team_env(axes, per):
+            start, count = ws_range(n)
+            idx = start + jnp.arange(count)
+            return jax.vmap(lambda i: body(i, *arrays))(idx)
+
+    spec = P(axes)
+    out = jax.shard_map(shard_body, mesh=mesh, in_specs=(),
+                        out_specs=spec, check_vma=False)()
+    return out
+
+
+def serial_for(body: Callable, n: int, *arrays):
+    """Single-team execution of the same loop: a sequential outer loop (the
+    original direct-GPU-compilation limitation the paper fixes).  This is the
+    baseline column of Fig. 8–10."""
+    return lax.map(lambda i: body(i, *arrays), jnp.arange(n))

@@ -1,0 +1,235 @@
+"""Partial device libc (paper §3.4): host-library functionality that runs
+natively in device code, so no RPC round-trip is needed.
+
+The paper extended its GPU libc guided by benchmarks (``strtod``, ``rand``,
+``realloc``, buffered I/O).  The JAX analogues here are the services a
+device-resident training/serving loop would otherwise escape to the host for:
+
+* ``rand_*``       — counter-based RNG (threefry): stateless, splittable,
+                     identical results regardless of expansion (the device
+                     analogue of C ``rand``'s hidden state is a carried
+                     counter).
+* ``strtod/atoi``  — numeric parsing of byte buffers *on device* (pure lax
+                     ops on uint8 codes); used by the RPC data path when the
+                     host feeds raw text records.
+* ``LogRing``      — a fixed-size on-device log ring buffer: ``log()`` is a
+                     pure array update inside jit; ``flush()`` is ONE ordered
+                     RPC that drains the buffer to the host — the paper's
+                     buffered ``fprintf`` (and the antidote to its Fig. 7
+                     975 us per-call RPC cost).
+* ``realloc``      — allocator-integrated grow/copy on arena arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import io_callback
+
+from repro.core.allocator import (
+    BalancedAllocator, BalancedState, GenericAllocator, GenericState)
+
+
+# ---------------------------------------------------------------------------
+# rand — counter-based threefry
+# ---------------------------------------------------------------------------
+
+def rand_init(seed: int) -> jax.Array:
+    """RNG state: (key||counter) packed as (3,) uint32."""
+    return jnp.array([seed & 0xFFFFFFFF, (seed >> 32) & 0xFFFFFFFF, 0],
+                     jnp.uint32)
+
+
+def rand_u32(state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """C ``rand()``: returns (state', uniform uint32)."""
+    key = jax.random.wrap_key_data(
+        jnp.stack([state[0], state[1]]), impl="threefry2x32")
+    val = jax.random.bits(jax.random.fold_in(key, state[2]), (), jnp.uint32)
+    return state.at[2].add(1), val
+
+
+def rand_uniform(state: jax.Array, shape=()) -> Tuple[jax.Array, jax.Array]:
+    key = jax.random.wrap_key_data(
+        jnp.stack([state[0], state[1]]), impl="threefry2x32")
+    val = jax.random.uniform(jax.random.fold_in(key, state[2]), shape)
+    return state.at[2].add(1), val
+
+
+# ---------------------------------------------------------------------------
+# strtod / atoi — numeric parsing on device
+# ---------------------------------------------------------------------------
+
+_ZERO, _NINE, _MINUS, _PLUS, _DOT, _E, _EU = 48, 57, 45, 43, 46, 101, 69
+
+
+def _is_digit(c):
+    return (c >= _ZERO) & (c <= _NINE)
+
+
+def atoi(buf: jax.Array) -> jax.Array:
+    """Parse an int from a uint8 code buffer (leading ws not supported;
+    stops at the first non-digit).  Returns int32."""
+    buf = buf.astype(jnp.int32)
+    neg = buf[0] == _MINUS
+    start = jnp.where(neg | (buf[0] == _PLUS), 1, 0)
+
+    def step(carry, i):
+        val, done = carry
+        c = buf[jnp.minimum(i, buf.shape[0] - 1)]
+        ok = (~done) & (i >= start) & (i < buf.shape[0]) & _is_digit(c)
+        val = jnp.where(ok, val * 10 + (c - _ZERO), val)
+        done = done | ((i >= start) & ~_is_digit(c))
+        return (val, done), None
+
+    (val, _), _ = lax.scan(step, (jnp.int32(0), jnp.bool_(False)),
+                           jnp.arange(buf.shape[0]))
+    return jnp.where(neg, -val, val)
+
+
+def strtod(buf: jax.Array) -> jax.Array:
+    """Parse a decimal float (optional sign, fraction, e-exponent) from a
+    uint8 code buffer.  Returns float64-accurate float32."""
+    buf = buf.astype(jnp.int32)
+    n = buf.shape[0]
+
+    neg = buf[0] == _MINUS
+    start = jnp.where(neg | (buf[0] == _PLUS), 1, 0)
+
+    def step(carry, i):
+        (mant, frac_digits, in_frac, in_exp, exp_val, exp_neg, done) = carry
+        c = buf[jnp.minimum(i, n - 1)]
+        active = (~done) & (i >= start) & (i < n)
+        is_d = _is_digit(c)
+        is_dot = c == _DOT
+        is_e = (c == _E) | (c == _EU)
+        is_sign = (c == _MINUS) | (c == _PLUS)
+
+        # mantissa digits
+        take_mant = active & is_d & (~in_exp)
+        mant = jnp.where(take_mant, mant * 10.0 + (c - _ZERO), mant)
+        frac_digits = jnp.where(take_mant & in_frac, frac_digits + 1,
+                                frac_digits)
+        # exponent digits
+        take_exp = active & is_d & in_exp
+        exp_val = jnp.where(take_exp, exp_val * 10 + (c - _ZERO), exp_val)
+
+        enter_frac = active & is_dot & (~in_frac) & (~in_exp)
+        in_frac = in_frac | enter_frac
+        enter_exp = active & is_e & (~in_exp)
+        in_exp = in_exp | enter_exp
+        exp_neg = jnp.where(active & in_exp & is_sign & (c == _MINUS),
+                            True, exp_neg)
+
+        bad = active & ~(is_d | is_dot | is_e |
+                         (is_sign & in_exp))
+        done = done | bad
+        return (mant, frac_digits, in_frac, in_exp, exp_val, exp_neg,
+                done), None
+
+    init = (jnp.float64(0.0) if jax.config.jax_enable_x64 else jnp.float32(0.0),
+            jnp.int32(0), jnp.bool_(False), jnp.bool_(False), jnp.int32(0),
+            jnp.bool_(False), jnp.bool_(False))
+    (mant, frac_digits, _, _, exp_val, exp_neg, _), _ = lax.scan(
+        step, init, jnp.arange(n))
+    exp = jnp.where(exp_neg, -exp_val, exp_val) - frac_digits
+    val = mant * jnp.power(jnp.float32(10.0), exp.astype(jnp.float32))
+    return jnp.where(neg, -val, val).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# LogRing — buffered device-side logging, flushed by one RPC
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LogRing:
+    tags: jax.Array      # (N,) int32
+    values: jax.Array    # (N,) float32
+    head: jax.Array      # () int32 — total records ever written
+
+    def tree_flatten(self):
+        return ((self.tags, self.values, self.head), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @staticmethod
+    def create(capacity: int = 1024) -> "LogRing":
+        return LogRing(jnp.zeros((capacity,), jnp.int32),
+                       jnp.zeros((capacity,), jnp.float32),
+                       jnp.zeros((), jnp.int32))
+
+    def log(self, tag, value) -> "LogRing":
+        """Pure device-side append (overwrites oldest when full)."""
+        i = self.head % self.tags.shape[0]
+        return LogRing(self.tags.at[i].set(jnp.asarray(tag, jnp.int32)),
+                       self.values.at[i].set(jnp.asarray(value, jnp.float32)),
+                       self.head + 1)
+
+    def flush(self, sink: Optional[Callable] = None) -> "LogRing":
+        """ONE ordered RPC drains the ring to the host."""
+        sink = sink or _default_sink
+
+        def host(tags, values, head):
+            n = int(head)
+            cap = tags.shape[0]
+            lo = max(0, n - cap)
+            for j in range(lo, n):
+                sink(int(tags[j % cap]), float(values[j % cap]))
+            return np.int32(n)
+
+        io_callback(host, jax.ShapeDtypeStruct((), jnp.int32),
+                    self.tags, self.values, self.head, ordered=True)
+        return LogRing(self.tags, self.values, jnp.zeros((), jnp.int32))
+
+
+_LOG_LINES = []
+
+
+def _default_sink(tag: int, value: float):
+    _LOG_LINES.append((tag, value))
+
+
+def drain_log_lines():
+    out = list(_LOG_LINES)
+    _LOG_LINES.clear()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# realloc — allocator-integrated
+# ---------------------------------------------------------------------------
+
+def realloc(state, arena: jax.Array, ptr, new_size, *, balanced: bool = False,
+            tid=0, team=0):
+    """malloc new, copy min(old,new), free old.  Returns (state, arena, ptr').
+
+    Copy uses a fixed window of ``new_size`` elements (sizes are traced);
+    elements beyond the old size are whatever the new region held (as in C).
+    """
+    A = BalancedAllocator if balanced else GenericAllocator
+    found, base, old_size = A.find_obj(state, ptr)
+    if balanced:
+        state, new_ptr = A.malloc(state, tid, team, new_size)
+    else:
+        state, new_ptr = A.malloc(state, new_size)
+
+    def do_copy(arena):
+        idx = jnp.arange(arena.shape[0])
+        src = jnp.clip(ptr + idx, 0, arena.shape[0] - 1)
+        take = idx < jnp.minimum(old_size, new_size)
+        window = jnp.where(take, arena[src], 0)
+        dst_valid = idx < new_size
+        dst = jnp.clip(new_ptr + idx, 0, arena.shape[0] - 1)
+        return arena.at[dst].set(
+            jnp.where(dst_valid & take, window, arena[dst]))
+
+    arena = lax.cond(found & (new_ptr >= 0), do_copy, lambda a: a, arena)
+    state = lax.cond(found & (new_ptr >= 0),
+                     lambda s: A.free(s, ptr), lambda s: s, state)
+    return state, arena, new_ptr

@@ -1,0 +1,230 @@
+"""Automatically generated host RPCs (paper §3.2), on JAX host callbacks.
+
+The paper replaces host-only library calls in device code with generated RPC
+stubs: arguments are marshalled into an ``RPCInfo`` object, pointer arguments
+ship their *underlying object* (with offset/size and read/write/readwrite
+access), variadic callees get one non-variadic **landing pad** per distinct
+call-site argument-type tuple, and the device thread blocks until the host
+acknowledges.
+
+TPU/JAX translation: the transport is a host callback (``io_callback`` for
+ordered, effectful calls; ``pure_callback`` for pure ones) instead of polled
+managed memory — the protocol (synchronous, stateless client/server, opaque
+marshalled buffers) is the paper's.  "Compile time" is trace time: the first
+trace of a call site with a new flattened signature *generates* its landing
+pad, exactly like the LTO pass monomorphizing a variadic callee.
+
+Argument categories (paper Fig. 3):
+  * value args      — leaves passed by value; never written back.
+  * ref args        — ``Ref(array, access=...)``: the underlying array ships
+                      to the host; ``write``/``readwrite`` refs return the
+                      mutated buffer, which the stub hands back to the caller
+                      (device code must thread it into its carry — JAX is
+                      functional; this *is* the paper's copy-back).
+  * tracked refs    — ``ArenaRef(arena, ptr, allocator_state)``: a pointer
+                      into the device heap; the underlying object is located
+                      at **runtime** via the allocator's tracking table
+                      (the paper's ``_FindObj``), then shipped base+size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core import allocator as alloc_mod
+
+
+# ---------------------------------------------------------------------------
+# Argument specs
+# ---------------------------------------------------------------------------
+
+READ, WRITE, READWRITE = "read", "write", "readwrite"
+
+
+@dataclasses.dataclass
+class Ref:
+    """A pointer-like argument: ships its underlying array to the host."""
+    array: jax.Array
+    access: str = READWRITE
+    offset: Any = 0            # element offset of the "pointer" into the array
+
+    def __post_init__(self):
+        assert self.access in (READ, WRITE, READWRITE), self.access
+
+
+@dataclasses.dataclass
+class ArenaRef:
+    """A heap pointer whose underlying object is found at runtime via the
+    allocator's tracking table (the paper's dynamically-identified objects)."""
+    arena: jax.Array           # the 1-D heap array
+    ptr: Any                   # element offset returned by malloc
+    state: Any                 # GenericState | BalancedState
+    access: str = READWRITE
+
+
+# ---------------------------------------------------------------------------
+# Registry: host functions + per-signature landing pads + stats
+# ---------------------------------------------------------------------------
+
+class _Registry:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.hosts: Dict[str, Callable] = {}
+        self.pads: Dict[Tuple, int] = {}       # signature -> enum id
+        self.stats: Dict[str, Dict[str, float]] = {}
+
+    def register(self, name: str, fn: Callable):
+        with self.lock:
+            self.hosts[name] = fn
+            self.stats.setdefault(
+                name, {"calls": 0, "bytes_in": 0, "bytes_out": 0, "pads": 0})
+
+    def landing_pad(self, name: str, sig: Tuple) -> int:
+        """One pad per (callee, flattened arg-type tuple): the variadic
+        monomorphization of the paper."""
+        with self.lock:
+            key = (name,) + sig
+            if key not in self.pads:
+                self.pads[key] = len(self.pads)
+                self.stats[name]["pads"] += 1
+            return self.pads[key]
+
+    def bump(self, name, bytes_in, bytes_out):
+        with self.lock:
+            s = self.stats[name]
+            s["calls"] += 1
+            s["bytes_in"] += bytes_in
+            s["bytes_out"] += bytes_out
+
+
+REGISTRY = _Registry()
+
+
+def rpc_stats(name: Optional[str] = None):
+    if name is not None:
+        return dict(REGISTRY.stats.get(name, {}))
+    return {k: dict(v) for k, v in REGISTRY.stats.items()}
+
+
+def reset_rpc_stats():
+    for s in REGISTRY.stats.values():
+        for k in s:
+            s[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrapper generation
+# ---------------------------------------------------------------------------
+
+def _np_bytes(tree) -> int:
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
+
+
+def _make_host_wrapper(name: str, n_val: int, ref_accesses: Tuple[str, ...]):
+    """Generates the host landing pad: unpack RPCInfo -> call -> pack result +
+    write-back refs (paper Fig. 3b)."""
+    fn = REGISTRY.hosts[name]
+
+    def wrapper(*flat):
+        vals = flat[:n_val]
+        refs = list(flat[n_val:])
+        out_refs = [np.asarray(r).copy() for r in refs]
+        result = fn(*vals, *out_refs)
+        ret = [np.asarray(result)]
+        for acc, orig, new in zip(ref_accesses, refs, out_refs):
+            if acc in (WRITE, READWRITE):
+                ret.append(new)
+            else:
+                ret.append(np.asarray(orig))   # read-only: no copy-back
+        REGISTRY.bump(name, _np_bytes(flat), _np_bytes(ret))
+        return tuple(ret)
+
+    return wrapper
+
+
+# ---------------------------------------------------------------------------
+# Device-side stub
+# ---------------------------------------------------------------------------
+
+def rpc_call(name: str, *args, result_shape, ordered: bool = True):
+    """Issue a blocking host RPC from device code (traceable).
+
+    ``args`` may mix plain arrays/scalars (value args), :class:`Ref`, and
+    :class:`ArenaRef`.  Returns ``(result, updated_ref_arrays)`` — updated
+    arrays appear for every Ref/ArenaRef in order (read-only refs are
+    returned unchanged so the call-site structure is static).
+    """
+    if name not in REGISTRY.hosts:
+        raise KeyError(f"no host function registered for RPC {name!r}")
+
+    vals, refs, accesses = [], [], []
+    arena_info = []                       # (index into refs, ArenaRef)
+    for a in args:
+        if isinstance(a, Ref):
+            refs.append(a.array)
+            accesses.append(a.access)
+        elif isinstance(a, ArenaRef):
+            # runtime object lookup via the allocator tracking table
+            found, base, size = _find_obj(a.state, a.ptr)
+            # ship the (maximal) underlying object as a fixed-size window;
+            # host sees (object, offset-of-ptr, valid-size)
+            obj = a.arena                  # single-level indirection (§4.1)
+            vals.extend([jnp.asarray(a.ptr, jnp.int32), base, size,
+                         found.astype(jnp.int32)])
+            refs.append(obj)
+            accesses.append(a.access)
+        else:
+            vals.append(jnp.asarray(a))
+    del arena_info
+
+    sig = tuple((tuple(np.shape(v)), str(jnp.result_type(v))) for v in vals) \
+        + tuple((tuple(np.shape(r)), str(jnp.result_type(r)), acc)
+                for r, acc in zip(refs, accesses))
+    REGISTRY.landing_pad(name, sig)
+
+    wrapper = _make_host_wrapper(name, len(vals), tuple(accesses))
+    result_shapes = (jax.tree.map(lambda s: s, result_shape),) + tuple(
+        jax.ShapeDtypeStruct(np.shape(r), jnp.result_type(r)) for r in refs)
+    out = io_callback(wrapper, result_shapes, *vals, *refs, ordered=ordered)
+    result, updated = out[0], list(out[1:])
+    return result, updated
+
+
+def _find_obj(state, ptr):
+    if isinstance(state, alloc_mod.GenericState):
+        return alloc_mod.GenericAllocator.find_obj(state, ptr)
+    return alloc_mod.BalancedAllocator.find_obj(state, ptr)
+
+
+# ---------------------------------------------------------------------------
+# Decorator: register + generate a typed device stub
+# ---------------------------------------------------------------------------
+
+def host_rpc(name: Optional[str] = None, *, result_shape, ordered: bool = True):
+    """Register ``fn`` as host-only and return its device-callable stub.
+
+    >>> @host_rpc(result_shape=jax.ShapeDtypeStruct((), jnp.int32))
+    ... def fetch_seed(epoch):           # runs on the HOST
+    ...     return np.int32(lookup(epoch))
+    ...
+    >>> seed, _ = fetch_seed.rpc(epoch)  # callable from jitted device code
+    """
+    def deco(fn):
+        rpc_name = name or fn.__name__
+        REGISTRY.register(rpc_name, fn)
+
+        def stub(*args):
+            return rpc_call(rpc_name, *args, result_shape=result_shape,
+                            ordered=ordered)
+
+        fn.rpc = stub
+        fn.rpc_name = rpc_name
+        return fn
+
+    return deco

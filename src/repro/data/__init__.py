@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    SyntheticLM, host_feed_batch, make_host_pipeline, make_synthetic_batch)
+
+__all__ = ["SyntheticLM", "host_feed_batch", "make_host_pipeline",
+           "make_synthetic_batch"]

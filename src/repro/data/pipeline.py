@@ -1,0 +1,137 @@
+"""Data pipeline: on-device synthetic token stream + host-RPC feed.
+
+Two sources, matching the GPU First execution model:
+
+* :class:`SyntheticLM` — a fully on-device generator (counter-based RNG from
+  the device libc): zero host contact; what dry-runs and perf benches use.
+  The stream is a deterministic Zipf-ish mixture so losses actually descend.
+
+* :func:`make_host_pipeline` — the paper's fscanf-by-RPC, for tokens: a host
+  RPC (ordered ``io_callback``) pulls the next batch from a host-side
+  iterator into the jitted loop.  This is the *only* host contact of a
+  device-resident training job, and it overlaps with compute because the
+  callback result feeds the NEXT step (one-batch prefetch queue on the host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.libc import rand_uniform
+
+
+# ---------------------------------------------------------------------------
+# On-device synthetic stream
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    """Deterministic on-device LM data: mixture of a copy task and noise so a
+    model can reduce loss (used by examples/train_100m.py)."""
+    vocab_size: int
+    seq_len: int
+    batch: int
+
+    def batch_at(self, rng_state: jax.Array, step: jax.Array
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        state = rng_state.at[2].set(step.astype(jnp.uint32))
+        state, u = rand_uniform(state, (self.batch, self.seq_len))
+        # period-8 repeating pattern + jitter: next-token is predictable
+        base = (jnp.arange(self.seq_len) % 8) * (self.vocab_size // 8)
+        noise = (u * 7).astype(jnp.int32)
+        tokens = (base[None, :] + noise) % self.vocab_size
+        return state, {"tokens": tokens.astype(jnp.int32)}
+
+
+def make_synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+                         ) -> Dict[str, jax.Array]:
+    """A concrete batch matching ``input_specs`` (for tests/benches)."""
+    k = jax.random.PRNGKey(seed)
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.Array] = {}
+    if cfg.embeds_input:
+        out["embeds"] = jax.random.normal(k, (B, S, cfg.d_model),
+                                          jnp.dtype(cfg.dtype)) * 0.2
+        if cfg.family == "encdec":
+            out["tokens"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+        else:
+            out["labels"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+            if cfg.mrope_sections:
+                pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                       (B, S))
+                out["positions"] = jnp.broadcast_to(
+                    pos[None], (len(cfg.mrope_sections), B, S))
+    else:
+        out["tokens"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host-RPC feed
+# ---------------------------------------------------------------------------
+
+def host_feed_batch(it: Iterator[Dict[str, np.ndarray]],
+                    specs: Dict[str, jax.ShapeDtypeStruct]):
+    """Build the host callback that serves ``next(it)`` (shape-checked)."""
+    keys = sorted(specs)
+
+    def host(_step) -> Tuple[np.ndarray, ...]:
+        b = next(it)
+        out = []
+        for k in keys:
+            a = np.asarray(b[k])
+            want = specs[k]
+            assert a.shape == tuple(want.shape), (k, a.shape, want.shape)
+            out.append(a.astype(want.dtype))
+        return tuple(out)
+
+    return host, keys
+
+
+def make_host_pipeline(it: Iterator[Dict[str, np.ndarray]],
+                       specs: Dict[str, jax.ShapeDtypeStruct],
+                       *, prefetch: int = 2) -> Callable:
+    """Returns ``fetch(step) -> batch`` callable from device code.
+
+    A background thread keeps ``prefetch`` batches staged host-side so the
+    ordered RPC returns immediately (straggler mitigation for the input
+    pipeline: the device never waits on storage, only on the staging queue).
+    """
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def producer():
+        try:
+            for b in it:
+                if stop.is_set():
+                    return
+                q.put(b)
+        finally:
+            q.put(None)
+
+    threading.Thread(target=producer, daemon=True).start()
+    keys = sorted(specs)
+
+    def host(_step):
+        b = q.get()
+        if b is None:
+            raise StopIteration("host pipeline exhausted")
+        return tuple(np.asarray(b[k]).astype(specs[k].dtype) for k in keys)
+
+    shapes = tuple(specs[k] for k in keys)
+
+    def fetch(step):
+        out = io_callback(host, shapes, step, ordered=True)
+        batch = dict(zip(keys, out))
+        return batch
+
+    fetch.stop = stop.set
+    return fetch

@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    logical_sharding,
+    logical_spec,
+    with_logical_constraint,
+    ShardingCtx,
+)
+from repro.distributed import collectives
+
+__all__ = [
+    "LOGICAL_RULES", "logical_sharding", "logical_spec",
+    "with_logical_constraint", "ShardingCtx", "collectives",
+]

@@ -1,0 +1,31 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage follows the mandated layout:
+
+  kernels/<name>/kernel.py  — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  kernels/<name>/ops.py     — jit'd public wrapper with TPU/CPU dispatch
+  kernels/<name>/ref.py     — pure-jnp oracle
+
+On CPU (this container, and the 512-device dry-run) the ops wrappers dispatch
+to the XLA reference path; the Pallas bodies are validated in interpret mode by
+the test suite.  Set ``REPRO_FORCE_PALLAS=interpret`` to force interpret-mode
+kernels everywhere (slow; tests only).
+"""
+import os
+
+import jax
+
+
+def use_pallas() -> bool:
+    mode = os.environ.get("REPRO_FORCE_PALLAS", "auto")
+    if mode == "never":
+        return False
+    if mode in ("interpret", "always"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "interpret":
+        return True
+    return jax.default_backend() != "tpu"

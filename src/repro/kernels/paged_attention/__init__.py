@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.ops import paged_decode_attention
+
+__all__ = ["paged_decode_attention"]

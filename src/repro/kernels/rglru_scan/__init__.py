@@ -1,0 +1,3 @@
+from repro.kernels.rglru_scan.ops import linear_scan, linear_scan_decode_step
+
+__all__ = ["linear_scan", "linear_scan_decode_step"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the diagonal linear recurrence (RG-LRU core).
+
+  h_t = a_t * h_{t-1} + b_t        a, b: (B, S, W)
+
+Parallelized with ``lax.associative_scan`` over the composition monoid
+(a1,b1) . (a2,b2) = (a1*a2, b1*a2 + b2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_reference(
+    a: jnp.ndarray,                      # (B, S, W), in (0, 1]
+    b: jnp.ndarray,                      # (B, S, W)
+    h0: Optional[jnp.ndarray] = None,    # (B, W)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (h (B,S,W), h_last (B,W)); computes in fp32."""
+    dt = b.dtype
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+
+    def combine(left, right):
+        (al, bl), (ar, br) = left, right
+        return (al * ar, bl * ar + br)
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    if h0 is not None:
+        h = b_sc + a_sc * h0.astype(jnp.float32)[:, None, :]
+    else:
+        h = b_sc
+    return h.astype(dt), h[:, -1].astype(jnp.float32)

@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_decode_step
+
+__all__ = ["ssd_scan", "ssd_decode_step"]

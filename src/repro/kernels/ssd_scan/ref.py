@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the mamba2 SSD (state-space duality) chunked scan.
+
+Semantics (per head h, state (P, N)):
+  state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * x_t (x) B_t
+  y_t     = C_t . state_t + D_h * x_t
+
+The chunked formulation (Dao & Gu, 2024, §6) splits the sequence into chunks
+of length Q: an intra-chunk quadratic term (the "duality" with masked
+attention) plus an inter-chunk linear recurrence on chunk states.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk(x: jnp.ndarray, q: int) -> jnp.ndarray:
+    b, s = x.shape[:2]
+    assert s % q == 0, (s, q)
+    return x.reshape((b, s // q, q) + x.shape[2:])
+
+
+def ssd_scan_reference(
+    x: jnp.ndarray,       # (B, S, H, P)
+    dt: jnp.ndarray,      # (B, S, H) positive
+    A: jnp.ndarray,       # (H,) negative
+    B: jnp.ndarray,       # (B, S, N)
+    C: jnp.ndarray,       # (B, S, N)
+    D: jnp.ndarray,       # (H,)
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)); computes in fp32."""
+    in_dtype = x.dtype
+    bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+
+    xc = _chunk(x32, Q)                      # (b, nc, Q, H, P)
+    dtc = _chunk(dt32, Q)                    # (b, nc, Q, H)
+    Bc = _chunk(B32, Q)                      # (b, nc, Q, N)
+    Cc = _chunk(C32, Q)                      # (b, nc, Q, N)
+
+    da = dtc * A32                           # (b, nc, Q, H)
+    cs = jnp.cumsum(da, axis=2)              # inclusive cumsum within chunk
+
+    # --- intra-chunk (masked quadratic / "attention" form) -------------------
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (b, nc, Q, Q)
+    # mask BEFORE exp: for j > i the argument is positive (cs decreases), and
+    # where(mask, exp(big), 0) poisons gradients with 0 * inf = NaN
+    arg = cs[:, :, :, None, :] - cs[:, :, None, :, :]     # (b,nc,Q,Q,H) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    arg = jnp.where(mask[None, None, :, :, None], arg, -1e30)
+    seg = jnp.exp(arg)
+    M = G[..., None] * seg * dtc[:, :, None, :, :]        # (b,nc,Q,Q,H) weight j->i
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # --- chunk state contributions -------------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)          # (b, nc, Q, H)
+    S_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_to_end * dtc, xc, Bc)
+
+    # --- inter-chunk linear recurrence over chunk states ----------------------
+    T_c = jnp.exp(cs[:, :, -1, :])                          # (b, nc, H) chunk decay
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, H, P, N), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    def combine(left, right):
+        (ta, sa), (tb, sb) = left, right
+        return (ta * tb, sa * tb + sb)
+
+    t_scan, s_scan = jax.lax.associative_scan(
+        combine, (T_c[..., None, None], S_c), axis=1)
+    # inclusive state after chunk c, given zero init; add initial_state term
+    s_incl = s_scan + t_scan * initial_state[:, None]
+    final_state = s_incl[:, -1]
+    # exclusive state entering chunk c
+    s_excl = jnp.concatenate(
+        [initial_state[:, None], s_incl[:, :-1]], axis=1)   # (b, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, s_excl, jnp.exp(cs))
+
+    y = (y_intra + y_inter).reshape(bsz, S, H, P)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x32
+    return y.astype(in_dtype), final_state
+
+
+def ssd_decode_reference(
+    x: jnp.ndarray,       # (B, H, P) one token
+    dt: jnp.ndarray,      # (B, H)
+    A: jnp.ndarray,       # (H,)
+    B: jnp.ndarray,       # (B, N)
+    C: jnp.ndarray,       # (B, N)
+    D: jnp.ndarray,       # (H,)
+    state: jnp.ndarray,   # (B, H, P, N) fp32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * A.astype(jnp.float32))            # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt32, x32, B.astype(jnp.float32))
+    new_state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None, :, None] * x32
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,430 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production mesh, with ShapeDtypeStruct inputs (no allocation), and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — which is why this module must never be imported by
+code that wants a single-device runtime.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--rules baseline]
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import CONFIGS, SHAPES, applicable, get_config, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    ShardingCtx, logical_sharding, param_sharding_tree, zero1_sharding_tree)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import (
+    Model, batch_sharding_axes, build_model, input_specs)
+from repro.models.common import merge_params
+from repro.launch import hlocost
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.step import make_train_step
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e target)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+# ---------------------------------------------------------------------------
+# Rule sets (hillclimbing control surface; see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+RULE_SETS: Dict[str, Optional[Tuple]] = {
+    # the paper-faithful baseline: expansion by the default rules table
+    "baseline": None,
+    # replicate KV heads instead of uneven padding (GQA kv < tp)
+    "kv_repl": (("kv_heads", None),),
+    # sequence-parallel attention: shard seq, replicate heads
+    "seq_attn": (("heads", None), ("kv_heads", None), ("qkv", None),
+                 ("seq", "model")),
+    # decode: shard the KV-cache sequence dim over model instead of kv heads
+    "kv_seq": (("kv_heads", None),),
+    # no FSDP (pure DP + TP): measures what ZeRO-3 sharding buys
+    "no_fsdp": (("fsdp", None),),
+    # batch over (data, model) for decode (more batch parallelism, no TP)
+    "decode_dp": (("batch", ("pod", "data", "model")), ("heads", None),
+                  ("kv_heads", None), ("vocab", None), ("ffn", None)),
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (post-SPMD, per-device)
+    HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s+\S+\s+(\S+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(1).split(".")[0]
+        if op.rstrip("-start") not in _COLLECTIVES and op not in _COLLECTIVES:
+            continue
+        # operand shapes appear inside the call parens
+        paren = stripped[stripped.index(m.group(1)):]
+        inner = paren[paren.index("(") + 1:]
+        depth, end = 1, 0
+        for i, c in enumerate(inner):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = inner[:end]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(args):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        key = op[:-6] if op.endswith("-start") else op
+        if key in out:
+            out[key] += nbytes
+    return out
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Pick grad-accum steps so per-device saved activations fit ~4 GB."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    L = max(cfg.num_layers, 1)
+    if cfg.family == "encdec":
+        # decoder layers carry self-attn + cross-attn residuals
+        L = cfg.encoder_layers + 2 * cfg.decoder_layers
+    act = shape.global_batch * shape.seq_len * cfg.d_model * 2 * L
+    k = max(1, math.ceil(act / (dp * 4e9)))
+    k = 1 << (k - 1).bit_length()                     # round up to pow2
+    return min(k, max(1, shape.global_batch // dp))
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, rules=None,
+               microbatches: Optional[int] = None,
+               gather_once: bool = False):
+    """Returns (jitted_fn, arg_specs (SDS trees), donate_argnums)."""
+    model = build_model(cfg)
+    with ShardingCtx(mesh, rules):
+        values, axes = model.param_specs()
+        v_shard = param_sharding_tree(axes, mesh, rules, like=values)
+        batch = input_specs(cfg, shape)
+        b_axes = batch_sharding_axes(cfg, shape)
+        b_shard = jax.tree.map(
+            lambda a, l: logical_sharding(*a, shape=l.shape), b_axes, batch,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                x is None or isinstance(x, str) for x in v))
+        repl = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            mb = microbatches or auto_microbatches(cfg, shape, mesh)
+            opt = jax.eval_shape(adamw_init, values)
+            z_shard = zero1_sharding_tree(v_shard, values, mesh)
+            o_shard = type(opt)(master=z_shard, mu=z_shard, nu=z_shard,
+                                step=repl)
+            step_fn = make_train_step(model, axes, OptConfig(),
+                                      microbatches=mb,
+                                      gather_once=gather_once)
+
+            def fn(values, opt, batch):
+                with ShardingCtx(mesh, rules):
+                    return step_fn(values, opt, batch)
+
+            metrics_shape = jax.eval_shape(fn, values, opt, batch)[2]
+            m_shard = jax.tree.map(lambda _: repl, metrics_shape)
+            jitted = jax.jit(fn,
+                             in_shardings=(v_shard, o_shard, b_shard),
+                             out_shardings=(v_shard, o_shard, m_shard),
+                             donate_argnums=(0, 1))
+            return jitted, (values, opt, batch), {"microbatches": mb}
+
+        if shape.kind == "prefill":
+            def fn(values, batch):
+                with ShardingCtx(mesh, rules):
+                    params = merge_params(values, axes)
+                    logits, cache = model.prefill(params, batch,
+                                                  shape.seq_len)
+                    return logits, cache
+
+            jitted = jax.jit(fn, in_shardings=(v_shard, b_shard))
+            return jitted, (values, batch), {}
+
+        # decode / long_decode: one token against a cache of seq_len.
+        # eval_shape avoids allocating the cache; the axes tree is static
+        # python, recovered from a tiny concrete instantiation.
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)[0])
+        cache_axes = model.init_cache(1, 8)[1]
+        c_shard = jax.tree.map(
+            lambda a, l: logical_sharding(*a, shape=l.shape)
+            if isinstance(a, tuple) else repl,
+            cache_axes, cache,
+            is_leaf=lambda v: isinstance(v, tuple) and all(
+                x is None or isinstance(x, str) for x in v))
+        tok_shard = logical_sharding("batch", shape=(shape.global_batch,))
+
+        def fn(values, cache, tokens):
+            with ShardingCtx(mesh, rules):
+                params = merge_params(values, axes)
+                logits, new_cache = model.decode_step(params, cache, tokens)
+                return logits, new_cache
+
+        tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        jitted = jax.jit(fn, in_shardings=(v_shard, c_shard, tok_shard),
+                         donate_argnums=(1,))
+        return jitted, (values, cache, tokens), {}
+
+
+# ---------------------------------------------------------------------------
+# Roofline extraction
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful-compute estimate: 6·N·D train (2·N·D inference) + attention."""
+    n_active = cfg.active_params()
+    hd = cfg.resolved_head_dim
+    if shape.kind == "train":
+        D = shape.tokens
+        base = 6.0 * n_active * D
+        attn = 6.0 * cfg.num_layers * shape.global_batch * \
+            (shape.seq_len ** 2) * cfg.num_heads * hd          # causal, fwd+bwd
+        return base + (attn if cfg.family not in ("ssm",) else 0.0)
+    if shape.kind == "prefill":
+        D = shape.tokens
+        base = 2.0 * n_active * D
+        attn = 2.0 * cfg.num_layers * shape.global_batch * \
+            (shape.seq_len ** 2) * cfg.num_heads * hd / 2
+        return base + (attn if cfg.family not in ("ssm",) else 0.0)
+    # decode: one token per sequence
+    base = 2.0 * n_active * shape.global_batch
+    if cfg.family == "ssm":
+        return base
+    window = cfg.local_window or shape.seq_len
+    kv_len = min(window, shape.seq_len)
+    attn = 4.0 * cfg.num_layers * shape.global_batch * kv_len * \
+        cfg.num_heads * hd
+    return base + attn
+
+
+def flash_kernel_bytes(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       blk_q: int = 2048) -> float:
+    """Analytic per-device HBM bytes of the Pallas attention kernels for this
+    cell: q/k/v/o streams + the K/V restream per q block (fwd; x3 with the
+    recompute backward), for the TP/DP sharding the cell uses."""
+    if cfg.family == "ssm":
+        return 0.0
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    hq = max(cfg.padded_heads // tp, 1)
+    hkv = max(cfg.num_kv_heads // tp, 1) if cfg.num_kv_heads % tp == 0         else cfg.num_kv_heads                     # replicated kv
+    hd = cfg.resolved_head_dim
+    B_loc = max(shape.global_batch // dp, 1)
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len
+        L = cfg.num_layers if cfg.family != "encdec"             else cfg.encoder_layers + 2 * cfg.decoder_layers
+        passes = 3.0 if shape.kind == "train" else 1.0
+        streams = 2.0 * (2 * hq + 2 * hkv) * B_loc * S * hd
+        restream = 2.0 * (S / blk_q) * S * hkv * hd * B_loc
+        return passes * L * (streams + restream)
+    # decode: one token vs the (seq-sharded) cache: k+v read, bf16
+    S = min(cfg.local_window or shape.seq_len, shape.seq_len)
+    L = cfg.num_layers if cfg.family != "encdec" else 2 * cfg.decoder_layers
+    return 2.0 * L * B_loc * (S / tp) * cfg.num_kv_heads * hd * 2.0
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, int], n_chips: int,
+             cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    # costs are for the per-device (post-SPMD) module
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes", cost.get("bytes accessed", 0.0)))
+    coll_dev = float(sum(coll.values()))
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * n_chips
+    return {
+        "attn_xla_bytes_per_device": cost.get("attn_bytes"),
+        "memory_s_kernel_adj": cost.get("mem_adj_s"),
+        "roofline_fraction_kernel_adj": cost.get("rf_adj"),
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_breakdown": coll,
+        "model_flops": mf,
+        "useful_compute_ratio": (mf / hlo_global) if hlo_global else None,
+        "bound_time_s": max(terms.values()),
+        "roofline_fraction": (mf / n_chips / PEAK_FLOPS) /
+                             max(max(terms.values()), 1e-30),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules_name: str = "baseline",
+             microbatches: Optional[int] = None,
+             gather_once: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "rules": rules_name, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = RULE_SETS[rules_name]
+    t0 = time.time()
+    jitted, args, extra = build_cell(cfg, shape, mesh, rules=rules,
+                                     microbatches=microbatches,
+                                     gather_once=gather_once)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    xla_cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    cost = hlocost.analyze(hlo_text)      # trip-count-aware (scan bodies x L)
+    # kernel-aware memory adjustment: swap the XLA-lowered attention-region
+    # traffic for the Pallas kernels' analytic HBM bytes (EXPERIMENTS §Perf)
+    try:
+        attn_bytes = hlocost.attention_region_bytes(hlo_text)
+        kern_bytes = flash_kernel_bytes(cfg, shape, mesh)
+        adj_bytes = max(cost["bytes"] - attn_bytes, 0.0) + kern_bytes
+        cost["attn_bytes"] = attn_bytes
+        cost["mem_adj_s"] = adj_bytes / HBM_BW
+    except Exception:
+        pass
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:                            # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    coll = {k: cost["collectives"].get(k, 0.0) for k in _COLLECTIVES}
+    n_chips = mesh.size
+    if "mem_adj_s" in cost:
+        bound_adj = max(cost["flops"] / PEAK_FLOPS, cost["mem_adj_s"],
+                        sum(coll.values()) / LINK_BW)
+        cost["rf_adj"] = (model_flops(cfg, shape) / n_chips / PEAK_FLOPS) / \
+            max(bound_adj, 1e-30)
+    rf = roofline(cost, coll, n_chips, cfg, shape)
+
+    result.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": {"flops": cost["flops"], "bytes": cost["bytes"]},
+        "xla_cost_analysis": {k: xla_cost.get(k) for k in
+                              ("flops", "bytes accessed") if k in xla_cost},
+        "roofline": rf,
+        **extra,
+    })
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="baseline", choices=sorted(RULE_SETS))
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--gather-once", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in sorted(CONFIGS):
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in cells:
+        print(f"=== {arch} x {shape} mesh={'2x16x16' if args.multi_pod else '16x16'} "
+              f"rules={args.rules} ===", flush=True)
+        try:
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         rules_name=args.rules,
+                         microbatches=args.microbatches,
+                         gather_once=args.gather_once)
+        except Exception as e:
+            r = {"arch": arch, "shape": shape, "status": "error",
+                 "error": f"{type(e).__name__}: {e}"}
+        print(json.dumps(r, indent=2, default=str), flush=True)
+        results.append(r)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} errors={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,501 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) counts a
+``while`` body ONCE — under ``lax.scan``-over-layers that understates FLOPs by
+the layer count (verified in EXPERIMENTS.md §Dry-run).  This module parses the
+post-SPMD HLO text and computes:
+
+  flops  — dot: 2 x prod(result dims) x prod(contracting dims); reduce &
+           elementwise: prod(shape); sort: n log n
+  bytes  — HBM proxy: operand + result bytes of top-level (post-fusion) ops;
+           a fusion node counts only its boundary, matching XLA's model
+  coll   — collective bytes by op kind (operand sizes)
+
+with ``while`` bodies multiplied by their trip count (recovered from the loop
+condition's comparison constant — lax.scan/fori_loop emit canonical
+``compare(iter, constant)`` conditions), recursively through nested loops,
+fusions, calls and conditionals (max over branches).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "cosine", "sine", "logistic", "expm1", "log1p",
+    "select", "compare", "and", "or", "xor", "not", "clamp", "remainder",
+    "atan2", "erf", "cbrt", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_type", "args_str", "attrs", "arg_names")
+
+    def __init__(self, name, kind, result_type, args_str, attrs):
+        self.name = name
+        self.kind = kind
+        self.result_type = result_type
+        self.args_str = args_str
+        self.attrs = attrs
+        self.arg_names = re.findall(r"%?([\w.\-]+)", args_str) \
+            if "[" not in args_str else []
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.ops: List[_Op] = []
+        self.types: Dict[str, str] = {}      # symbol -> result type
+
+
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(s: str):
+    """Manual parse: '%name = TYPE kind(args), attrs'.  TYPE may be a tuple
+    containing nested parens and '/*index=N*/' comments."""
+    m = _NAME_RE.match(s)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = s[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, c in enumerate(rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    rtype = rest[:i + 1]
+                    rest = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    km = re.match(r"([\w\-]+)\(", rest)
+    if not km:
+        return None
+    kind = km.group(1)
+    rest = rest[km.end():]
+    depth, idx = 1, len(rest)
+    for i, c in enumerate(rest):
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                idx = i
+                break
+    return name, rtype, kind, rest[:idx], rest[idx + 1:]
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\],{}\s/]+?))"
+                       r"(?:,|$)")
+
+
+def _split_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # a header is '%name (params...) -> type {'; an op line always has
+        # '%name = ' — test for the op form first (param lists may contain
+        # '=' inside /*index=N*/ comments, so don't scan for '=')
+        if s.endswith("{") and "->" in s and not _NAME_RE.match(s):
+            h = _HEADER_RE.match(s)
+            if h:
+                name = "__ENTRY__" if h.group(1) else h.group(2)
+                cur = _Comp(name)
+                comps[name] = cur
+                # header parameters carry their types
+                for pname, ptype in _PARAM_RE.findall(h.group(3)):
+                    cur.types[pname] = ptype
+                continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(s)
+        if parsed:
+            name, rtype, kind, args, attrs = parsed
+            op = _Op(name, kind, rtype, args, attrs)
+            cur.ops.append(op)
+            cur.types[name] = rtype
+    return comps
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(comp: _Comp) -> int:
+    """lax loops compare the induction var against a constant in the cond."""
+    best = 1
+    for op in comp.ops:
+        if op.kind != "constant":
+            continue
+        m = re.match(r"^(-?\d+)$", op.args_str.strip())
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    # -- shape resolution -------------------------------------------------------
+    def _operand_types(self, comp: _Comp, op: _Op) -> str:
+        if "[" in op.args_str:                   # types inlined
+            return op.args_str
+        return " ".join(comp.types.get(a, "") for a in op.arg_names)
+
+    def _operand_bytes(self, comp: _Comp, op: _Op) -> int:
+        return _shape_bytes(self._operand_types(comp, op))
+
+    # -- computation cost --------------------------------------------------------
+    def _comp_cost(self, name: str, count_bytes: bool
+                   ) -> Tuple[float, float, Dict[str, float]]:
+        key = f"{name}|{count_bytes}"
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = (0.0, 0.0, {})          # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        nbytes = 0.0
+        coll: Dict[str, float] = {}
+        for op in comp.ops:
+            f, b, c = self._op_cost(comp, op, count_bytes)
+            flops += f
+            nbytes += b
+            for k, v in c.items():
+                coll[k] = coll.get(k, 0.0) + v
+        self._memo[key] = (flops, nbytes, coll)
+        return self._memo[key]
+
+    def _op_cost(self, comp: _Comp, op: _Op, count_bytes: bool
+                 ) -> Tuple[float, float, Dict[str, float]]:
+        kind = op.kind
+        if kind in ("parameter", "constant", "get-tuple-element", "tuple",
+                    "after-all", "iota", "partition-id", "replica-id",
+                    "bitcast", "reshape", "opt-barrier", "domain",
+                    "add-dependency"):
+            return 0.0, 0.0, {}
+
+        # slicing ops touch only the slice, not the whole operand (match
+        # XLA's HloCostAnalysis bytes model)
+        if kind in ("slice", "dynamic-slice", "gather", "pad",
+                    "concatenate", "reverse", "broadcast"):
+            b = 2.0 * _shape_bytes(op.result_type) if count_bytes else 0.0
+            return 0.0, b, {}
+        if kind in ("dynamic-update-slice", "scatter"):
+            upd_idx = 1 if kind == "dynamic-update-slice" else 2
+            b = 0.0
+            if count_bytes:
+                if "[" in op.args_str:
+                    shapes = _SHAPE_RE.findall(op.args_str)
+                    if len(shapes) > upd_idx:
+                        dt, dims = shapes[upd_idx]
+                        n = 1
+                        for d in dims.split(","):
+                            if d:
+                                n *= int(d)
+                        b = 2.0 * n * _DTYPE_BYTES.get(dt, 0)
+                elif len(op.arg_names) > upd_idx:
+                    b = 2.0 * _shape_bytes(
+                        comp.types.get(op.arg_names[upd_idx], ""))
+            return 0.0, b, {}
+
+        boundary = float(self._operand_bytes(comp, op) +
+                         _shape_bytes(op.result_type)) if count_bytes else 0.0
+
+        base = kind[:-6] if kind.endswith("-start") else kind
+        if base in _COLLECTIVES:
+            cb = float(self._operand_bytes(comp, op))
+            return 0.0, boundary, {base: cb}
+
+        if kind == "while":
+            cond = _called(op.attrs, "condition")
+            body = _called(op.attrs, "body")
+            trips = _trip_count(self.comps[cond]) if cond in self.comps else 1
+            f, b, c = self._comp_cost(body, count_bytes) if body else (0, 0, {})
+            fc, bc, cc = self._comp_cost(cond, count_bytes) if cond else (0, 0, {})
+            coll = {k: v * trips for k, v in c.items()}
+            return (f + fc) * trips, (b + bc) * trips, coll
+
+        if kind == "fusion":
+            called = _called(op.attrs, "calls")
+            f, _, c = self._comp_cost(called, False) if called else (0, 0, {})
+            b = self._fusion_boundary(called, op) if count_bytes else 0.0
+            return f, b, dict(c)
+
+        if kind in ("call", "async-start"):
+            called = _called(op.attrs, "to_apply") or _called(op.attrs, "calls")
+            if called:
+                return self._comp_cost(called, count_bytes)
+            return 0.0, boundary, {}
+
+        if kind == "conditional":
+            branches = re.findall(r"%([\w.\-]+)", op.attrs)
+            best = (0.0, 0.0, {})
+            for br in branches:
+                if br in self.comps:
+                    cand = self._comp_cost(br, count_bytes)
+                    if cand[0] >= best[0]:
+                        best = cand
+            return best[0], best[1] + boundary, best[2]
+
+        if kind == "dot":
+            out_elems = _shape_elems(op.result_type)
+            m = re.search(r"rhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+            k = 1
+            rhs_shape = None
+            if m:
+                if "[" in op.args_str:
+                    shapes = _SHAPE_RE.findall(op.args_str)
+                    rhs_shape = shapes[1] if len(shapes) >= 2 else None
+                elif len(op.arg_names) >= 2:
+                    ss = _SHAPE_RE.findall(comp.types.get(op.arg_names[1], ""))
+                    rhs_shape = ss[0] if ss else None
+            if m and rhs_shape:
+                rhs_dims = [int(d) for d in rhs_shape[1].split(",") if d]
+                for i in (int(x) for x in m.group(1).split(",") if x):
+                    if i < len(rhs_dims):
+                        k *= rhs_dims[i]
+            return 2.0 * out_elems * k, boundary, {}
+
+        if kind == "convolution":
+            types = self._operand_types(comp, op)
+            shapes = _SHAPE_RE.findall(types)
+            k_elems = 1
+            if len(shapes) >= 2:
+                dims = [int(d) for d in shapes[1][1].split(",") if d]
+                for d in dims[:-1]:
+                    k_elems *= d
+            return 2.0 * _shape_elems(op.result_type) * k_elems, boundary, {}
+
+        if kind in ("reduce", "reduce-window"):
+            return float(_shape_elems(self._operand_types(comp, op))), \
+                boundary, {}
+
+        if kind == "sort":
+            n = _shape_elems(op.result_type)
+            return n * max(1.0, math.log2(max(n, 2))), boundary, {}
+
+        if kind in _ELEMENTWISE:
+            return float(_shape_elems(op.result_type)), boundary, {}
+
+        # everything else (reshape/slice/gather/scatter/custom-call/...):
+        # data movement only
+        return 0.0, boundary, {}
+
+    _SLICING = ("slice", "dynamic-slice", "gather")
+
+    def _fusion_boundary(self, called: Optional[str], op: _Op) -> float:
+        """Bytes a fusion actually moves: per input parameter, the accessed
+        bytes — slice results when the parameter only feeds slicing ops (the
+        scan-carry pattern: a fused dynamic-slice of a stacked tensor reads
+        one layer's worth, not the whole stack) — plus the fusion result.
+
+        In-place carry updates: a fusion containing a dynamic-update-slice
+        whose destination is a same-size parameter is the scan-ys
+        accumulation pattern; on TPU the destination aliases (donation), so
+        the boundary is the UPDATE slice, not a full rewrite of the stacked
+        buffer (XLA's own cost model agrees).  Without this, a 48-layer scan
+        looks like it rewrites its 2 GB residual stack 48 times."""
+        out_b = float(_shape_bytes(op.result_type))
+        comp = self.comps.get(called or "")
+        if comp is None:
+            return out_b + float(_shape_bytes(op.args_str))
+        full_read: Dict[str, bool] = {}
+        conv_read: Dict[str, bool] = {}       # consumed only by dtype converts
+        slice_read: Dict[str, float] = {}
+        param_sizes: Dict[str, float] = {
+            o.name: float(_shape_bytes(o.result_type))
+            for o in comp.ops if o.kind == "parameter"}
+        param_elems: Dict[str, int] = {
+            o.name: _shape_elems(o.result_type)
+            for o in comp.ops if o.kind == "parameter"}
+        dus_updates: List[float] = []
+        for o in comp.ops:
+            if o.kind == "parameter":
+                continue
+            names = o.arg_names if o.arg_names else \
+                re.findall(r"%([\w.\-]+)", o.args_str)
+            if o.kind == "dynamic-update-slice":
+                upd = names[1] if len(names) > 1 else None
+                dus_updates.append(
+                    float(_shape_bytes(comp.types.get(upd, ""))) if upd
+                    else 0.0)
+                # the destination (names[0]) is aliased, not read
+                for a in names[1:]:
+                    if a in param_sizes:
+                        full_read[a] = True
+                continue
+            for a in names:
+                if a not in param_sizes:
+                    continue
+                if o.kind in self._SLICING:
+                    slice_read[a] = slice_read.get(a, 0.0) + \
+                        float(_shape_bytes(o.result_type))
+                elif o.kind in ("convert", "bitcast", "copy",
+                                "reduce-precision"):
+                    conv_read[a] = True
+                else:
+                    full_read[a] = True
+        in_b = 0.0
+        out_elems = _shape_elems(op.result_type)
+        aliased = False
+        if dus_updates:
+            # an element-count-matching param that is only slice/convert-
+            # consumed is the aliased scan-carry destination
+            for pname in list(param_sizes):
+                if param_elems[pname] == out_elems \
+                        and not full_read.get(pname):
+                    param_sizes.pop(pname)
+                    slice_read.pop(pname, None)
+                    aliased = True
+                    break
+            if aliased:
+                out_b = 2.0 * sum(dus_updates)   # slice write (+ its read)
+        for pname, psize in param_sizes.items():
+            if full_read.get(pname) or conv_read.get(pname):
+                in_b += psize
+            elif pname in slice_read:
+                in_b += min(slice_read[pname], psize)
+            # parameters never touched inside cost 0
+        return in_b + out_b
+
+    def entry_cost(self) -> Dict[str, float]:
+        f, b, c = self._comp_cost("__ENTRY__", True)
+        return {"flops": f, "bytes": b, "collectives": c,
+                "collective_bytes": sum(c.values())}
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    return HloCost(hlo_text).entry_cost()
+
+
+# ---------------------------------------------------------------------------
+# Attention-region accounting (kernel-aware roofline adjustment)
+# ---------------------------------------------------------------------------
+
+_ATTN_MARKS = ("bqhgd", "bhgqk", "bhgqd", "bhgt", "bhgd")
+
+
+def attention_region_bytes(text: str) -> float:
+    """Bytes attributed to the XLA-lowered attention region.  A ``while``
+    whose subtree contains an op labeled with our attention einsum signatures
+    (the chunked-flash q/k loops) is attributed wholesale; marked ops outside
+    such loops (the dense decode path) are attributed individually.  On the
+    TPU target these spans are replaced by the Pallas flash/decode kernels,
+    whose tiles live in VMEM — the dry-run roofline substitutes an analytic
+    kernel-HBM estimate for this measured XLA-path traffic."""
+    hc = HloCost(text)
+
+    def marked(op) -> bool:
+        m = re.search(r'op_name="([^"]*)"', op.attrs)
+        return bool(m and any(mk in m.group(1) for mk in _ATTN_MARKS))
+
+    _contains_memo: Dict[str, bool] = {}
+
+    def contains_mark_direct(name: str) -> bool:
+        """Marked op in this computation or its fusions/calls — NOT through
+        nested whiles (so only the INNERMOST attention loop is attributed
+        wholesale, not the enclosing layer scan)."""
+        if name in _contains_memo:
+            return _contains_memo[name]
+        _contains_memo[name] = False          # cycle guard
+        comp = hc.comps.get(name)
+        found = False
+        for op in (comp.ops if comp else ()):
+            if marked(op):
+                found = True
+                break
+            if op.kind == "while":
+                continue
+            for key in ("calls", "to_apply"):
+                sub = _called(op.attrs, key)
+                if sub and contains_mark_direct(sub):
+                    found = True
+                    break
+            if found:
+                break
+        _contains_memo[name] = found
+        return found
+
+    total = 0.0
+
+    def walk(name: str, mult: float):
+        nonlocal total
+        comp = hc.comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                cond = _called(op.attrs, "condition")
+                body = _called(op.attrs, "body")
+                trips = _trip_count(hc.comps[cond]) if cond in hc.comps else 1
+                if body and contains_mark_direct(body):
+                    _, b, _ = hc._comp_cost(body, True)
+                    total += b * trips * mult
+                elif body:
+                    walk(body, mult * trips)
+                continue
+            if marked(op):
+                _, b, _ = hc._op_cost(comp, op, True)
+                total += b * mult
+
+    walk("__ENTRY__", 1.0)
+    return total

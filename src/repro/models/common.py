@@ -1,0 +1,202 @@
+"""Shared model substrate: parameter system, norms, embeddings, RoPE/M-RoPE.
+
+Parameters are built as pytrees whose leaves are :class:`Param` — a value
+paired with its *logical axis names*.  ``split_params`` separates the two so
+the same init code drives real initialization (CPU smoke tests) and
+``jax.eval_shape`` dry runs (512-device lowering with no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Parameter leaves
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Param:
+    value: jax.Array          # array or ShapeDtypeStruct (under eval_shape)
+    axes: Tuple[Optional[str], ...]
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, vals: Param(vals[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """tree of Param -> (tree of values, tree of axes-tuples)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def merge_params(values, axes):
+    return jax.tree.map(lambda v, a: Param(v, a), values, axes,
+                        is_leaf=lambda x: x is None)
+
+
+def param_count(tree) -> int:
+    vals = jax.tree.leaves(jax.tree.map(lambda p: p.value, tree, is_leaf=is_param))
+    import numpy as np
+    return int(sum(np.prod(v.shape) for v in vals))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal(key, shape, axes, dtype, scale: Optional[float] = None) -> Param:
+    scale = scale if scale is not None else (shape[0] ** -0.5 if len(shape) > 1 else 0.02)
+    v = (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+    return Param(v, axes)
+
+
+def zeros(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype=dtype), axes)
+
+
+def ones(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype=dtype), axes)
+
+
+def stack_params(trees):
+    """Stack a list of identically-structured Param trees along a new leading
+    ``stack`` axis (for ``lax.scan`` over layers)."""
+    def _stack(*ps):
+        vals = jnp.stack([p.value for p in ps])
+        return Param(vals, ("stack",) + ps[0].axes)
+    return jax.tree.map(_stack, *trees, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Param:
+    return ones((d,), (None,), dtype)
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Param:
+    # padded_vocab x d_model, REPLICATED: a gather from a sharded table inside
+    # a (vjp'd) scan trips the SPMD partitioner (minimal repro in §Dry-run
+    # notes), and the bf16 table is small next to activations.  The fp32
+    # optimizer copies do NOT replicate — ZeRO-1 shards them (train/step.py).
+    return normal(key, (cfg.padded_vocab, cfg.d_model), (None, None),
+                  jnp.dtype(cfg.param_dtype), scale=0.02)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _embed_lookup(emb: jax.Array, tokens: jax.Array, vshape, dtype_str):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _embed_lookup_fwd(emb, tokens, vshape, dtype_str):
+    return _embed_lookup(emb, tokens, vshape, dtype_str), tokens
+
+
+def _embed_lookup_bwd(vshape, dtype_str, tokens, dy):
+    g = jnp.zeros(vshape, jnp.float32).at[tokens].add(dy.astype(jnp.float32))
+    # grad shards (vocab@data, d@model): the scatter computes replicated (it
+    # is bandwidth-trivial), the constraint makes the grad-accum carry and
+    # the optimizer update sharded
+    g = with_logical_constraint(g, "fsdp", "embed_p")
+    return g.astype(jnp.dtype(dtype_str)), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = _embed_lookup(emb, tokens, tuple(emb.shape), str(emb.dtype))
+    return with_logical_constraint(x, "batch", "seq", "embed").astype(cfg.dtype)
+
+
+def lm_head_init(key, cfg: ModelConfig) -> Param:
+    # d_model x padded_vocab, vocab-parallel (column): logits shard over vocab.
+    return normal(key, (cfg.d_model, cfg.padded_vocab), ("fsdp", "vocab"),
+                  jnp.dtype(cfg.param_dtype))
+
+
+def lm_logits(x: jax.Array, head: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:   # mask pad columns (fused where)
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return with_logical_constraint(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Tuple[int, ...] = ()) -> jax.Array:
+    """positions: (B, S) int — or (3, B, S) for M-RoPE — -> (B, S, half) angles."""
+    freqs = _rope_freqs(head_dim, theta)              # (half,)
+    if mrope_sections:
+        # M-RoPE: split the half-dim into (t, h, w) sections, each section uses
+        # its own position stream (Qwen2-VL §3.1).
+        assert positions.ndim == 3 and positions.shape[0] == len(mrope_sections)
+        angle_parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            angle_parts.append(positions[i][..., None].astype(jnp.float32) * f)
+            start += sec
+        return jnp.concatenate(angle_parts, axis=-1)   # (B, S, half)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); angles: (B, S, D//2). Rotate-half convention."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+def default_positions(batch: int, seq: int, cfg: ModelConfig) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, :], (batch, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (len(cfg.mrope_sections), batch, seq))
+    return pos

@@ -1,0 +1,31 @@
+"""SwiGLU MLP with tensor-parallel (column x row) sharding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.models.common import normal
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    ks = jax.random.split(key, 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "wi_gate": normal(ks[0], (d, f), ("fsdp", "ffn"), pd),
+        "wi_up": normal(ks[1], (d, f), ("fsdp", "ffn"), pd),
+        "wo": normal(ks[2], (f, d), ("ffn", "fsdp"), pd, scale=f ** -0.5),
+    }
+
+
+def mlp_apply(p, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].value.astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].value.astype(dt))
+    h = jax.nn.silu(g) * u
+    h = wlc(h, "batch", "seq", "ffn")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].value.astype(dt))
+    return wlc(out, "batch", "seq", "embed")

@@ -1,0 +1,149 @@
+"""Model facade: one uniform interface over all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common, encdec, transformer
+from repro.models.common import Param, split_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Uniform facade. ``params`` are Param-leaved pytrees from ``init``;
+    the ``*_v`` variants take bare value pytrees + the static ``axes`` tree
+    (what optimizers and jit boundaries carry)."""
+
+    cfg: ModelConfig
+
+    # -- init -----------------------------------------------------------------
+    def init(self, key) -> Any:
+        if self.cfg.family == "encdec":
+            return encdec.encdec_init(key, self.cfg)
+        return transformer.lm_init(key, self.cfg)
+
+    def param_specs(self) -> Tuple[Any, Any]:
+        """(ShapeDtypeStruct value tree, logical-axes tree) with no allocation."""
+        tree = jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+        return split_params(tree)
+
+    # -- train / full forward ---------------------------------------------------
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        if self.cfg.family == "encdec":
+            return encdec.encdec_forward(params, batch, self.cfg)
+        return transformer.lm_forward(params, batch, self.cfg)
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        if self.cfg.family == "encdec":
+            logits, aux = encdec.encdec_forward(params, batch, self.cfg)
+            tokens = batch["tokens"]
+            labels = jnp.concatenate(
+                [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+            mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+            ce, denom = transformer.cross_entropy(logits, labels, mask)
+            return ce, {"loss": ce, "ce": ce, "aux": aux, "tokens": denom}
+        return transformer.lm_loss(params, batch, self.cfg)
+
+    # -- serving -----------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Tuple[Any, Any]:
+        if self.cfg.family == "encdec":
+            return encdec.encdec_init_cache(self.cfg, batch, max_len)
+        return transformer.lm_init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, batch, max_len: int) -> Tuple[jax.Array, Any]:
+        if self.cfg.family == "encdec":
+            cache, _ = encdec.encdec_init_cache(
+                self.cfg, batch["embeds"].shape[0], max_len,
+                enc_len=batch["embeds"].shape[1])
+            enc_lens = batch.get(
+                "enc_lens",
+                jnp.full((batch["embeds"].shape[0],), batch["embeds"].shape[1],
+                         jnp.int32))
+            cache = encdec.encdec_prefill_cross(
+                params, cache, batch["embeds"], enc_lens, self.cfg)
+            # teacher tokens may seed the decoder; here we start empty
+            bos = batch.get("tokens")
+            if bos is not None and bos.shape[1] > 0:
+                logits, cache = encdec.encdec_decode_step(
+                    params, cache, bos[:, 0], self.cfg)
+                return logits, cache
+            return None, cache
+        return transformer.lm_prefill(params, batch, self.cfg, max_len)
+
+    def decode_step(self, params, cache, tokens,
+                    embeds: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Any]:
+        if self.cfg.family == "encdec":
+            return encdec.encdec_decode_step(params, cache, tokens, self.cfg)
+        return transformer.lm_decode_step(params, cache, tokens, self.cfg,
+                                          embeds=embeds)
+
+    # -- value-tree variants (jit-boundary friendly) ------------------------------
+    def loss_v(self, values, axes, batch):
+        return self.loss(common.merge_params(values, axes), batch)
+
+    def forward_v(self, values, axes, batch):
+        return self.forward(common.merge_params(values, axes), batch)
+
+    def decode_step_v(self, values, axes, cache, tokens, embeds=None):
+        return self.decode_step(common.merge_params(values, axes), cache,
+                                tokens, embeds=embeds)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input, per
+# (arch x shape) cell — the dry-run's no-allocation batch.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Returns the ``batch`` pytree for train/prefill kinds, or the decode-step
+    inputs (tokens) for decode kinds (cache specs come from ``init_cache``)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.embeds_input:
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+            if cfg.family == "encdec":
+                batch["tokens"] = sds((B, S), i32)      # decoder side
+            else:
+                batch["labels"] = sds((B, S), i32)      # vlm next-token labels
+                if cfg.mrope_sections:
+                    batch["positions"] = sds(
+                        (len(cfg.mrope_sections), B, S), i32)
+        else:
+            batch["tokens"] = sds((B, S), i32)
+        return batch
+
+    # decode kinds: one new token against a cache of S
+    return {"tokens": sds((B,), i32)}
+
+
+def batch_sharding_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical axes for each input_specs leaf (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        axes: Dict[str, Any] = {}
+        if cfg.embeds_input:
+            axes["embeds"] = ("batch", "seq", "embed")
+            if cfg.family == "encdec":
+                axes["tokens"] = ("batch", "seq")
+            else:
+                axes["labels"] = ("batch", "seq")
+                if cfg.mrope_sections:
+                    axes["positions"] = (None, "batch", "seq")
+        else:
+            axes["tokens"] = ("batch", "seq")
+        return axes
+    return {"tokens": ("batch",)}

@@ -1,0 +1,125 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma).
+
+Structure per block: two parallel branches from d_model —
+  (1) linear -> causal depthwise conv -> RG-LRU gated linear recurrence
+  (2) linear -> GeLU (the multiplicative gate)
+— merged by elementwise product and projected back to d_model.
+
+The RG-LRU recurrence (diagonal gates):
+  r_t = sigmoid(g_r * u_t + b_r)           recurrence gate
+  i_t = sigmoid(g_i * u_t + b_i)           input gate
+  a_t = exp(-c * softplus(a_param) * r_t)  (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.kernels.rglru_scan import linear_scan, linear_scan_decode_step
+from repro.models.common import Param, normal, zeros
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": normal(ks[0], (d, w), ("fsdp", "lru"), pd),
+        "gate_proj": normal(ks[1], (d, w), ("fsdp", "lru"), pd),
+        "conv_w": normal(ks[2], (cfg.conv_width, w), ("conv", "lru"), pd,
+                         scale=cfg.conv_width ** -0.5),
+        "conv_b": zeros((w,), ("lru",), pd),
+        "g_r": zeros((w,), ("lru",), jnp.dtype("float32")),
+        "b_r": zeros((w,), ("lru",), jnp.dtype("float32")),
+        "g_i": zeros((w,), ("lru",), jnp.dtype("float32")),
+        "b_i": zeros((w,), ("lru",), jnp.dtype("float32")),
+        # a in (0.9, 0.999) at init, as in Griffin
+        "a_param": Param(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, max(w, 1))) / _C))
+            .astype(jnp.float32), ("lru",)),
+        "out_proj": normal(ks[3], (w, d), ("lru", "fsdp"), pd, scale=w ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _gates(p, u):
+    """u: (..., w) fp32 -> (a, b) of the recurrence h' = a h + b."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["g_r"].value * u32 + p["b_r"].value)
+    i = jax.nn.sigmoid(p["g_i"].value * u32 + p["b_i"].value)
+    log_a = -_C * jax.nn.softplus(p["a_param"].value) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * u32)
+    return a, b
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                return_state: bool = False):
+    """Full-sequence recurrent branch. x: (B,S,d) -> (B,S,d)."""
+    dt_ = x.dtype
+    B_, S, _ = x.shape
+    u_pre = jnp.einsum("bsd,dw->bsw", x, p["in_proj"].value.astype(dt_))
+    u = _causal_conv(u_pre, p["conv_w"].value, p["conv_b"].value)
+    u = wlc(u, "batch", "seq", "lru")
+    a, b = _gates(p, u)
+    h, h_last = linear_scan(a.astype(jnp.float32), b)
+    h = wlc(h.astype(dt_), "batch", "seq", "lru")
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["gate_proj"].value.astype(dt_)))
+    out = jnp.einsum("bsw,wd->bsd", h * gate, p["out_proj"].value.astype(dt_))
+    out = wlc(out, "batch", "seq", "embed")
+    if return_state:
+        w = cfg.conv_width
+        pad = jnp.zeros((B_, max(w - 1 - S, 0), cfg.lru_width), u_pre.dtype)
+        conv_tail = jnp.concatenate([pad, u_pre[:, -(w - 1):]], axis=1)
+        return out, {"conv": conv_tail.astype(jnp.dtype(cfg.dtype)),
+                     "h": h_last}
+    return out
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width),
+                          jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_axes(cfg: ModelConfig):
+    return {"conv": ("batch", None, "lru"), "h": ("batch", "lru")}
+
+
+def rglru_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, dict]:
+    """One-token step. x: (B,1,d)."""
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_proj"].value.astype(dt_))
+    new_conv = jnp.concatenate([cache["conv"], u], axis=1)[:, 1:]
+    u = _causal_conv(u, p["conv_w"].value, p["conv_b"].value,
+                     state=cache["conv"])
+    a, b = _gates(p, u[:, 0])
+    h = linear_scan_decode_step(a, b, cache["h"])
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["gate_proj"].value.astype(dt_)))
+    out = jnp.einsum("bsw,wd->bsd", h.astype(dt_)[:, None] * gate,
+                     p["out_proj"].value.astype(dt_))
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,148 @@
+"""Mamba2 (SSD) block: in-proj, causal depthwise conv, SSD scan, gated norm.
+
+Layout follows the mamba2 reference: a single input projection packs
+(z gate | x | B | C | dt); x/B/C pass through a width-``conv_width`` causal
+depthwise convolution; the SSD scan runs per head with head_dim P and state N.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import with_logical_constraint as wlc
+from repro.kernels.ssd_scan import ssd_scan, ssd_decode_step
+from repro.models.common import Param, normal, zeros, ones, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    proj_dim = 2 * di + 2 * n + h       # z, x, B, C, dt
+    return di, n, h, conv_dim, proj_dim
+
+
+def ssd_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, n, h, conv_dim, proj_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    pd = jnp.dtype(cfg.param_dtype)
+    return {
+        # separate projections per component so each output dim shards
+        # cleanly over the model axis (the packed 2*di+2*n+h dim does not
+        # divide 16 for mamba2 — see EXPERIMENTS.md §Dry-run)
+        "in_proj_zx": normal(ks[0], (d, 2 * di), ("fsdp", "ssm_inner"), pd),
+        "in_proj_bc": normal(ks[4], (d, 2 * n), ("fsdp", "ssm_state"), pd),
+        "in_proj_dt": normal(ks[2], (d, h), ("fsdp", None), pd),
+        "conv_w": normal(ks[1], (cfg.conv_width, conv_dim), ("conv", "ssm_inner"),
+                         pd, scale=cfg.conv_width ** -0.5),
+        "conv_b": zeros((conv_dim,), ("ssm_inner",), pd),
+        "dt_bias": zeros((h,), ("ssm_heads",), jnp.dtype("float32")),
+        "a_log": Param(jnp.log(jnp.linspace(1.0, 16.0, max(h, 1), dtype=jnp.float32)),
+                       ("ssm_heads",)),
+        "d_skip": ones((h,), ("ssm_heads",), jnp.dtype("float32")),
+        "gate_norm": ones((di,), ("ssm_inner",), pd),
+        "out_proj": normal(ks[3], (di, d), ("ssm_inner", "fsdp"), pd,
+                           scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). state: (B,W-1,C) history."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              return_state: bool = False):
+    """Full-sequence SSD block (training / prefill). x: (B,S,d) -> (B,S,d)."""
+    B_, S, d = x.shape
+    di, n, h, conv_dim, proj_dim = _dims(cfg)
+    dt_ = x.dtype
+    zx = jnp.einsum("bsd,dp->bsp", x, p["in_proj_zx"].value.astype(dt_))
+    zx = wlc(zx, "batch", "seq", "ssm_inner")
+    bc = jnp.einsum("bsd,dp->bsp", x, p["in_proj_bc"].value.astype(dt_))
+    dt_raw = jnp.einsum("bsd,dp->bsp", x, p["in_proj_dt"].value.astype(dt_))
+    z, xin = jnp.split(zx, [di], axis=-1)
+    Bm, Cm = jnp.split(bc, [n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].value, p["conv_b"].value)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xin = wlc(xin, "batch", "seq", "ssm_inner")
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].value)
+    A = -jnp.exp(p["a_log"].value)
+    xh = xin.reshape(B_, S, h, cfg.ssm_head_dim)
+    xh = wlc(xh, "batch", "seq", "ssm_heads", None)
+    y, final_state = ssd_scan(xh, dt, A, Bm, Cm, p["d_skip"].value,
+                              chunk=cfg.ssd_chunk)
+    y = y.reshape(B_, S, di)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"].value, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].value.astype(dt_))
+    out = wlc(out, "batch", "seq", "embed")
+    if return_state:
+        w = cfg.conv_width
+        pad = jnp.zeros((B_, max(w - 1 - S, 0), conv_dim), conv_in.dtype)
+        conv_tail = jnp.concatenate([pad, conv_in[:, -(w - 1):]], axis=1)
+        return out, {"conv": conv_tail.astype(jnp.dtype(cfg.dtype)),
+                     "ssm": final_state}
+    return out
+
+
+def ssd_init_cache(cfg: ModelConfig, batch: int):
+    """Per-layer decode state: (conv history, SSM state)."""
+    di, n, h, conv_dim, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def ssd_cache_axes(cfg: ModelConfig):
+    return {
+        "conv": ("batch", None, "ssm_inner"),
+        "ssm": ("batch", "ssm_heads", None, None),
+    }
+
+
+def ssd_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+               ) -> Tuple[jax.Array, dict]:
+    """One-token step. x: (B,1,d) -> (out (B,1,d), new cache)."""
+    B_, _, d = x.shape
+    di, n, h, conv_dim, proj_dim = _dims(cfg)
+    dt_ = x.dtype
+    zx = jnp.einsum("bsd,dp->bsp", x, p["in_proj_zx"].value.astype(dt_))
+    bc = jnp.einsum("bsd,dp->bsp", x, p["in_proj_bc"].value.astype(dt_))
+    dt_raw = jnp.einsum("bsd,dp->bsp", x, p["in_proj_dt"].value.astype(dt_))
+    z, xin = jnp.split(zx, [di], axis=-1)
+    Bm, Cm = jnp.split(bc, [n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)       # (B,1,conv_dim)
+    new_conv = jnp.concatenate([cache["conv"], conv_in], axis=1)[:, 1:]
+    conv_out = _causal_conv(conv_in, p["conv_w"].value, p["conv_b"].value,
+                            state=cache["conv"])
+    xin, Bm, Cm = jnp.split(conv_out[:, 0], [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].value)
+    A = -jnp.exp(p["a_log"].value)
+    xh = xin.reshape(B_, h, cfg.ssm_head_dim)
+    y, new_ssm = ssd_decode_step(xh, dt, A, Bm, Cm, p["d_skip"].value,
+                                 cache["ssm"])
+    y = y.reshape(B_, 1, di)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"].value, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].value.astype(dt_))
+    return out, {"conv": new_conv, "ssm": new_ssm}

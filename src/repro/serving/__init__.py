@@ -1,0 +1,4 @@
+from repro.serving.kvcache import PagedKV, paged_cache_init
+from repro.serving.engine import ServingEngine
+
+__all__ = ["PagedKV", "paged_cache_init", "ServingEngine"]

@@ -1,0 +1,210 @@
+"""Continuous-batching serving engine with paged KV (decoder-only LMs).
+
+Slot-based continuous batching: a fixed grid of request slots decodes in
+lock-step (one jitted ``serve_step`` for the whole batch); finished slots are
+released in O(1) (balanced-allocator watermark reclaim) and refilled from the
+request queue without disturbing in-flight neighbors.
+
+Attention-family models use the paged KV cache; SSM/hybrid models have O(1)
+recurrent state, so they use their native state caches through the same slot
+machinery (paging is pointless for constant-size state — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.attention import _mask_heads, _project_qkv
+from repro.models.common import merge_params, rmsnorm, split_params
+from repro.models.mlp import mlp_apply
+from repro.models.moe import moe_apply
+from repro.models.model_zoo import Model
+from repro.models.transformer import _slice_layer
+from repro.serving import kvcache
+from repro.serving.kvcache import PagedKV
+
+
+# ---------------------------------------------------------------------------
+# Paged decode step (dense / moe / vlm families)
+# ---------------------------------------------------------------------------
+
+def paged_decode_step(params, kv: PagedKV, tokens: jax.Array,
+                      active: jax.Array, cfg: ModelConfig
+                      ) -> Tuple[jax.Array, PagedKV]:
+    """tokens: (B,) -> (logits (B, V), kv')."""
+    B = tokens.shape[0]
+    kv = kvcache.ensure_pages(kv, active)
+    x = common.embed_tokens(params["embed"].value, tokens[:, None], cfg)
+    pos = kv.lengths[:, None]
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (len(cfg.mrope_sections), B, 1))
+    angles = common.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                                cfg.mrope_sections)
+
+    stacked_vals, stacked_axes = split_params(params["layers"])
+    L = cfg.num_layers
+
+    def body(carry, scanned):
+        x, kv = carry
+        layer_vals, li = scanned
+        layer = _slice_layer(stacked_axes, layer_vals)
+        h = rmsnorm(x, layer["ln1"].value, cfg.norm_eps)
+        q, k, v = _project_qkv(layer["attn"], h, cfg, angles)
+        kv = _write_layer(kv, li, k[:, 0], v[:, 0], active)
+        a = kvcache.paged_attend(kv, li, q[:, 0])
+        a = _mask_heads(a[:, None], cfg)[:, 0]
+        a = jnp.einsum("bhk,hkd->bd", a, layer["attn"]["wo"].value.astype(x.dtype))
+        x = x + a[:, None]
+        h = rmsnorm(x, layer["ln2"].value, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_apply(layer["moe"], h, cfg)
+        else:
+            y = mlp_apply(layer["mlp"], h)
+        return (x + y, kv), ()
+
+    (x, kv), _ = lax.scan(body, (x, kv),
+                          (stacked_vals, jnp.arange(L, dtype=jnp.int32)))
+    kv = kvcache.advance(kv, active)
+    x = rmsnorm(x, params["ln_f"].value, cfg.norm_eps)
+    head = params["embed"].value.T if cfg.tie_embeddings \
+        else params["lm_head"].value
+    logits = common.lm_logits(x, head, cfg)[:, 0]
+    return logits, kv
+
+
+def _write_layer(kv: PagedKV, layer, k, v, active) -> PagedKV:
+    """Dynamic-layer-index variant of kvcache.write_token_kv (scan-safe)."""
+    B = kv.lengths.shape[0]
+    pos = kv.lengths
+    pidx = jnp.minimum(pos // kv.page_size, kv.page_table.shape[1] - 1)
+    page = kv.page_table[jnp.arange(B), pidx]
+    off = pos % kv.page_size
+    NP = kv.k_pages.shape[1]
+    page = jnp.where(active, page, NP)           # OOB scatter -> dropped
+    k_pages = kv.k_pages.at[layer, page, off, :, :].set(
+        k.astype(kv.k_pages.dtype))
+    v_pages = kv.v_pages.at[layer, page, off, :, :].set(
+        v.astype(kv.v_pages.dtype))
+    return dataclasses.replace(kv, k_pages=k_pages, v_pages=v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int = -1
+    prompt: List[int] = dataclasses.field(default_factory=list)
+    fed: int = 0
+    out: List[int] = dataclasses.field(default_factory=list)
+    max_new: int = 0
+
+
+class ServingEngine:
+    """Host-side orchestration; all device work is one jitted step."""
+
+    def __init__(self, model: Model, params, *, batch_slots: int = 4,
+                 max_len: int = 256, page_size: int = 16,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.cfg = model.cfg
+        assert self.cfg.family in ("dense", "moe", "vlm"), \
+            "engine serves decoder-only attention LMs; SSM/hybrid use their" \
+            " native state caches via Model.decode_step"
+        self.params = params
+        self.B = batch_slots
+        self.kv = kvcache.paged_cache_init(
+            self.cfg, batch_slots, max_len, page_size=page_size)
+        self.eos_id = eos_id
+        self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
+        self.queue: List[Tuple[int, List[int], int]] = []
+        self.finished: Dict[int, List[int]] = {}
+        self._next_id = 0
+        self._step = jax.jit(
+            lambda values, axes_h, kv, tokens, active: paged_decode_step(
+                merge_params(values, axes_h.tree), kv, tokens, active,
+                self.cfg),
+            static_argnums=(1,))
+        self._values, self._axes = split_params(params)
+        self._axes_h = _Hashable(self._axes)
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, list(prompt), max_new))
+        return rid
+
+    def step(self) -> None:
+        """One engine tick: refill slots, one batched decode step, harvest."""
+        for s in self.slots:
+            if s.request_id < 0 and self.queue:
+                rid, prompt, max_new = self.queue.pop(0)
+                s.request_id, s.prompt, s.fed, s.out, s.max_new = \
+                    rid, prompt, 0, [], max_new
+
+        tokens, active = [], []
+        for s in self.slots:
+            if s.request_id < 0:
+                tokens.append(0)
+                active.append(False)
+            elif s.fed < len(s.prompt):
+                tokens.append(s.prompt[s.fed])
+                active.append(True)
+            else:
+                tokens.append(s.out[-1] if s.out else s.prompt[-1])
+                active.append(True)
+
+        tok = jnp.asarray(tokens, jnp.int32)
+        act = jnp.asarray(active)
+        logits, self.kv = self._step(self._values, self._axes_h, self.kv,
+                                     tok, act)
+        nxt = jnp.argmax(logits, axis=-1)
+
+        for i, s in enumerate(self.slots):
+            if s.request_id < 0:
+                continue
+            if s.fed < len(s.prompt):
+                s.fed += 1
+                if s.fed < len(s.prompt):
+                    continue
+            if s.fed >= len(s.prompt):
+                t = int(nxt[i])
+                s.out.append(t)
+                done = len(s.out) >= s.max_new or \
+                    (self.eos_id is not None and t == self.eos_id)
+                if done:
+                    self.finished[s.request_id] = s.out
+                    self.kv = kvcache.release_slot(self.kv, i)
+                    self.slots[i] = _Slot()
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        ticks = 0
+        while (self.queue or any(s.request_id >= 0 for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return dict(self.finished)
+
+
+class _Hashable:
+    """Static-argnum wrapper for the axes tree."""
+
+    def __init__(self, tree):
+        self.tree = tree
+        leaves, treedef = jax.tree_util.tree_flatten(
+            tree, is_leaf=lambda v: isinstance(v, tuple))
+        self._key = (treedef, tuple(map(tuple, leaves)))
+
+    def __hash__(self):
+        return hash(str(self._key))
+
+    def __eq__(self, other):
+        return isinstance(other, _Hashable) and str(self._key) == str(other._key)

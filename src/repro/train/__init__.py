@@ -1,0 +1,5 @@
+from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
+from repro.train.step import make_train_step, train_state_shardings
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "make_train_step", "train_state_shardings"]

@@ -1,0 +1,144 @@
+"""Training step factory: mixed precision, remat, microbatch gradient
+accumulation, AdamW — one jittable function, shardable end to end.
+
+The step is written in single-shard semantics (logical constraints only);
+expansion to the production mesh is the sharding rules table — paper C2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    ShardingCtx, logical_sharding, param_sharding_tree, zero1_sharding_tree)
+from repro.models.model_zoo import Model, batch_sharding_axes
+from repro.train.optimizer import OptConfig, OptState, adamw_init, adamw_update
+
+
+def _split_mb_leaf(v, k):
+    # positions for M-RoPE are (3, B, S): split on axis 1
+    if v.ndim == 3 and v.shape[0] == 3 and v.shape[1] % k == 0:
+        s = v.reshape(3, k, v.shape[1] // k, v.shape[2])
+        return jnp.moveaxis(s, 1, 0)
+    return v.reshape((k, v.shape[0] // k) + v.shape[1:])
+
+
+def _is_axes(v) -> bool:
+    return isinstance(v, tuple) and all(
+        x is None or isinstance(x, str) for x in v)
+
+
+def make_train_step(model: Model, axes: Any, opt_cfg: OptConfig,
+                    *, microbatches: int = 1,
+                    gather_once: bool = False) -> Callable:
+    """Returns ``train_step(values, opt_state, batch) -> (values, opt_state,
+    metrics)``.  ``axes`` is the static logical-axes tree from
+    ``model.param_specs()``.
+
+    ``gather_once``: differentiate the whole microbatch scan instead of
+    accumulating per-microbatch grads, with the FSDP weight all-gather
+    hoisted OUT of the scan — weights gather once per STEP instead of once
+    per microbatch (all-gather bytes / k); grads are constrained back to the
+    FSDP layout (reduce-scatter).  The scan body is checkpointed, so
+    activation memory matches the manual accumulation path."""
+    from repro.distributed.sharding import with_logical_constraint as _wlc
+
+    def _degather(a):
+        return tuple(None if x == "fsdp" else x for x in a)
+
+    def loss_fn(values, mb):
+        loss, metrics = model.loss_v(values, axes, mb)
+        return loss, metrics
+
+    def train_step(values, opt_state: OptState, batch):
+        if gather_once and microbatches > 1:
+            mbs = jax.tree.map(lambda v: _split_mb_leaf(v, microbatches), batch)
+
+            def loss_all(values):
+                values_g = jax.tree.map(
+                    lambda v, a: _wlc(v, *_degather(a)) if _is_axes(a) else v,
+                    values, axes, is_leaf=_is_axes)
+
+                def body(carry, mb):
+                    loss, metrics = model.loss_v(values_g, axes, mb)
+                    return carry + loss, metrics
+
+                total, metrics = lax.scan(
+                    jax.checkpoint(
+                        body,
+                        policy=jax.checkpoint_policies.nothing_saveable),
+                    jnp.zeros((), jnp.float32), mbs)
+                metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+                return total / microbatches, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_all, has_aux=True)(values)
+            grads = jax.tree.map(
+                lambda g, a: _wlc(g, *a) if _is_axes(a) else g,
+                grads, axes, is_leaf=_is_axes)
+            new_values, opt_state, opt_metrics = adamw_update(
+                grads, opt_state, opt_cfg, values)
+            metrics = dict(metrics)
+            metrics.update(opt_metrics)
+            metrics["loss"] = loss
+            return new_values, opt_state, metrics
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(values, batch)
+        else:
+            mbs = jax.tree.map(lambda v: _split_mb_leaf(v, microbatches), batch)
+            zero = jax.tree.map(
+                lambda v: jnp.zeros(v.shape, jnp.float32), values)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(values, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            (grads, loss_sum), metrics = lax.scan(
+                accum, (zero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+
+        new_values, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, opt_cfg, values)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_values, opt_state, metrics
+
+    return train_step
+
+
+def train_state_shardings(model: Model, mesh: Mesh, shape=None,
+                          rules=None) -> Tuple[Any, Any, Any, Any, Any]:
+    """(value specs SDS, value shardings, opt shardings, batch shardings,
+    axes tree) for jit in/out_shardings under ``mesh``."""
+    values, axes = model.param_specs()
+    v_shard = param_sharding_tree(axes, mesh, rules, like=values)
+    opt_state = jax.eval_shape(adamw_init, values)
+    z_shard = zero1_sharding_tree(v_shard, values, mesh)
+    o_shard = OptState(master=z_shard, mu=z_shard, nu=z_shard,
+                       step=NamedSharding(mesh, P()))
+    b_shard = None
+    if shape is not None:
+        from repro.models.model_zoo import input_specs
+        b_axes = batch_sharding_axes(model.cfg, shape)
+        from repro.models.model_zoo import input_specs
+        batch = input_specs(model.cfg, shape)
+        with ShardingCtx(mesh, rules):
+            b_shard = jax.tree.map(
+                lambda a, l: logical_sharding(*a, shape=l.shape), b_axes, batch,
+                is_leaf=lambda v: isinstance(v, tuple) and all(
+                    x is None or isinstance(x, str) for x in v))
+    return values, v_shard, o_shard, b_shard, axes

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# single-device runtime for the test suite (the 512-device dry-run only ever
+# runs via ``python -m repro.launch.dryrun`` or the subprocess tests)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,164 @@
+"""Allocator unit + hypothesis property tests (paper §3.4 invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import BalancedAllocator as BA
+from repro.core.allocator import GenericAllocator as GA
+
+
+# ---------------------------------------------------------------------------
+# Generic allocator
+# ---------------------------------------------------------------------------
+
+def test_generic_basic():
+    s = GA.init(1000, cap=16)
+    s, p1 = GA.malloc(s, 100)
+    s, p2 = GA.malloc(s, 50)
+    assert int(p1) == 0 and int(p2) == 100
+    s = GA.free(s, p1)
+    s, p3 = GA.malloc(s, 80)        # first-fit reuse of p1's hole
+    assert int(p3) == 0
+    found, base, size = GA.find_obj(s, p2 + 49)
+    assert bool(found) and int(base) == 100 and int(size) == 50
+    found, _, _ = GA.find_obj(s, 999)
+    assert not bool(found)
+
+
+def test_generic_oom():
+    s = GA.init(100, cap=4)
+    s, p1 = GA.malloc(s, 100)
+    s, p2 = GA.malloc(s, 1)
+    assert int(p1) == 0 and int(p2) == -1
+
+
+def test_generic_malloc_many_inside_jit():
+    s = GA.init(1000, cap=64)
+    sizes = jnp.full((10,), 10, jnp.int32)
+    s, ptrs = jax.jit(GA.malloc_many)(s, sizes)
+    assert list(np.asarray(ptrs)) == [i * 10 for i in range(10)]
+    s = GA.free_many(s, ptrs[::2])
+    s, p = GA.malloc(s, 10)
+    assert int(p) in {0, 20, 40, 60, 80}
+
+
+# ---------------------------------------------------------------------------
+# Balanced allocator
+# ---------------------------------------------------------------------------
+
+def test_balanced_chunking_and_reclaim():
+    s = BA.init(8000, 4, 2, cap=8, first_chunk_ratio=2.0)
+    # chunk 0 is larger than chunk 1
+    assert int(s.chunk_size[0]) > int(s.chunk_size[1])
+    s, a = BA.malloc(s, 0, 0, 64)
+    s, b = BA.malloc(s, 0, 0, 32)
+    s, c = BA.malloc(s, 1, 0, 16)       # different chunk: independent
+    assert int(c) == int(s.chunk_start[2])
+    # free middle: not reclaimed (watermark stays)
+    wm_before = int(s.watermark[0])
+    s = BA.free(s, a)
+    assert int(s.watermark[0]) == wm_before
+    # free top: reclaims top AND the already-freed middle below it (Fig. 5)
+    s = BA.free(s, b)
+    assert int(s.watermark[0]) == 0
+    assert int(s.count[0]) == 0
+
+
+def test_balanced_hole_reuse_when_full():
+    s = BA.init(80, 2, 1, cap=8, first_chunk_ratio=1.0)  # chunks of 40
+    s, a = BA.malloc(s, 0, 0, 30)
+    s, b = BA.malloc(s, 0, 0, 10)      # chunk 0 now full
+    s = BA.free(s, a)                   # hole (not top)
+    s, c = BA.malloc(s, 0, 0, 25)      # must reuse the 30-hole
+    assert int(c) == int(a)
+
+
+def test_balanced_find_obj():
+    s = BA.init(8000, 4, 2, cap=8)
+    s, a = BA.malloc(s, 2, 1, 64)
+    found, base, size = BA.find_obj(s, a + 63)
+    assert bool(found) and int(base) == int(a) and int(size) == 64
+    found, _, _ = BA.find_obj(s, a + 64)
+    assert not bool(found)
+
+
+def test_balanced_grid_parallel():
+    s = BA.init(100000, 4, 2, cap=16)
+    sizes = jnp.full((8, 4), 10, jnp.int32)
+    s, ptrs = jax.jit(BA.malloc_grid, static_argnums=(1, 2))(s, 8, 4, sizes)
+    arr = np.asarray(ptrs).ravel()
+    assert (arr >= 0).all()
+    assert len(np.unique(arr)) == arr.size          # all distinct
+    s = BA.free_grid(s, 8, 4, ptrs)
+    assert int(jnp.max(s.watermark)) == 0            # everything reclaimed
+
+
+# ---------------------------------------------------------------------------
+# Property tests: no two live allocations overlap; find_obj is exact
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["malloc", "free"]),
+              st.integers(1, 40), st.integers(0, 7)),
+    min_size=1, max_size=30))
+def test_generic_no_overlap_property(ops):
+    s = GA.init(512, cap=64)
+    live = {}
+    for kind, size, idx in ops:
+        if kind == "malloc":
+            s, p = GA.malloc(s, size)
+            p = int(p)
+            if p >= 0:
+                live[p] = size
+        elif live:
+            keys = sorted(live)
+            victim = keys[idx % len(keys)]
+            s = GA.free(s, victim)
+            del live[victim]
+    # live allocations must be disjoint and inside the heap
+    spans = sorted((p, p + sz) for p, sz in live.items())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, (spans,)
+    for p, sz in live.items():
+        assert p + sz <= 512
+        found, base, fsize = GA.find_obj(s, p + sz // 2)
+        # first-fit reuse hands out the ORIGINAL (>=) block size — internal
+        # fragmentation by design (paper §3.4)
+        assert bool(found) and int(base) == p and int(fsize) >= sz
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["malloc", "free"]),
+              st.integers(1, 30), st.integers(0, 3), st.integers(0, 1),
+              st.integers(0, 7)),
+    min_size=1, max_size=25))
+def test_balanced_no_overlap_property(ops):
+    s = BA.init(1024, 4, 2, cap=32, first_chunk_ratio=2.0)
+    live = {}
+    for kind, size, tid, team, idx in ops:
+        if kind == "malloc":
+            s, p = BA.malloc(s, tid, team, size)
+            p = int(p)
+            if p >= 0:
+                live[p] = size
+        elif live:
+            keys = sorted(live)
+            victim = keys[idx % len(keys)]
+            s = BA.free(s, victim)
+            del live[victim]
+    spans = sorted((p, p + sz) for p, sz in live.items())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, (spans,)
+    for p, sz in live.items():
+        found, base, fsize = BA.find_obj(s, p)
+        assert bool(found) and int(base) == p and int(fsize) >= sz
+    # allocations stay inside their chunk
+    starts = np.asarray(s.chunk_start)
+    sizes_ = np.asarray(s.chunk_size)
+    for p, sz in live.items():
+        c = int(np.searchsorted(starts, p, side="right")) - 1
+        assert p + sz <= int(starts[c]) + int(sizes_[c])

@@ -1,0 +1,163 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, SHAPES, applicable, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_synthetic_batch
+from repro.models import build_model
+from repro.models.common import param_count
+from repro.models.model_zoo import input_specs
+
+ARCHS = sorted(CONFIGS)
+SMOKE_SHAPE = ShapeConfig(name="smoke", seq_len=16, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, rng):
+    """REDUCED config of the same family: one forward + loss on CPU,
+    asserting output shapes and no NaNs (the full config is exercised only by
+    the dry-run)."""
+    cfg = CONFIGS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    assert param_count(params) > 0
+    batch = {}
+    for k, v in input_specs(cfg, SMOKE_SHAPE).items():
+        if v.dtype == jnp.int32:
+            batch[k] = jax.random.randint(rng, v.shape, 0,
+                                          min(cfg.vocab_size, 100))
+        else:
+            batch[k] = jax.random.normal(rng, v.shape, v.dtype) * 0.2
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = model.loss(params, batch)
+    assert jnp.isfinite(loss)
+    # one gradient step exists and is finite
+    from repro.models.common import split_params
+    values, axes = split_params(params)
+    g = jax.grad(lambda v: model.loss_v(v, axes, batch)[0])(values)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_consistency(arch, rng):
+    """Token-by-token decode must reproduce the teacher-forced forward."""
+    cfg = CONFIGS[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    S = 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.embeds_input and cfg.family == "encdec":
+        batch["embeds"] = jax.random.normal(
+            rng, (2, 8, cfg.d_model), jnp.float32) * 0.3
+    if cfg.embeds_input and cfg.family != "encdec":
+        pytest.skip("vlm trains on embeds; decode covered via dense family")
+    logits_full, _ = model.forward(params, batch)
+
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        cache, _ = encdec.encdec_init_cache(cfg, 2, S + 2, enc_len=8)
+        cache = encdec.encdec_prefill_cross(
+            params, cache, batch["embeds"], jnp.full((2,), 8, jnp.int32), cfg)
+        step = lambda c, t: encdec.encdec_decode_step(params, c, t, cfg)
+    else:
+        cache, _ = model.init_cache(2, S + 2)
+        step = lambda c, t: model.decode_step(params, c, t)
+
+    errs = []
+    for t in range(S):
+        lg, cache = step(cache, tokens[:, t])
+        errs.append(float(jnp.max(jnp.abs(lg - logits_full[:, t]))))
+    assert max(errs) < 5e-3, (arch, errs)
+
+
+def test_prefill_then_decode_dense(rng):
+    cfg = CONFIGS["qwen2.5-14b"].reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    S = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, S), 0,
+                                cfg.vocab_size)
+    logits_full, _ = model.forward(params, {"tokens": tokens})
+    half = 7
+    lg, cache = model.prefill(params, {"tokens": tokens[:, :half]}, S + 2)
+    np.testing.assert_allclose(lg, logits_full[:, half - 1], atol=5e-4,
+                               rtol=1e-3)
+    for t in range(half, S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t])
+        np.testing.assert_allclose(lg, logits_full[:, t], atol=5e-3, rtol=1e-2)
+
+
+def test_hybrid_prefill_ring_cache_past_window(rng):
+    """Prefill longer than the local window, then decode across the ring."""
+    cfg = CONFIGS["recurrentgemma-9b"].reduced()   # window 16
+    model = build_model(cfg)
+    params = model.init(rng)
+    S = 26
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, S), 0,
+                                cfg.vocab_size)
+    logits_full, _ = model.forward(params, {"tokens": tokens})
+    half = 22
+    lg, cache = model.prefill(params, {"tokens": tokens[:, :half]}, 64)
+    np.testing.assert_allclose(lg, logits_full[:, half - 1], atol=5e-3,
+                               rtol=1e-2)
+    for t in range(half, S):
+        lg, cache = model.decode_step(params, cache, tokens[:, t])
+        np.testing.assert_allclose(lg, logits_full[:, t], atol=5e-3, rtol=1e-2)
+
+
+def test_head_padding_is_exact(rng):
+    """Same seed, padded vs unpadded: identical param values on real heads,
+    identical logits (pad heads are zero + masked)."""
+    base = CONFIGS["llama3.2-3b"].reduced()        # 4 heads, pad multiple 1
+    padded = dataclasses.replace(base, head_pad_multiple=8)
+    m0, m1 = build_model(base), build_model(padded)
+    p0, p1 = m0.init(rng), m1.init(rng)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 12), 0,
+                                base.vocab_size)
+    l1, _ = m1.forward(p1, {"tokens": tokens})
+    # pad-head weights are zero (heads axis is dim 1 of the stacked wq)
+    wq = p1["layers"]["attn"]["wq"].value       # (L, d, padded_heads, hd)
+    assert wq.shape[2] == 8
+    assert float(jnp.abs(wq[:, :, 4:, :]).max()) == 0.0
+    # decode matches forward under padding
+    cache, _ = m1.init_cache(2, 14)
+    for t in range(12):
+        lg, cache = m1.decode_step(p1, cache, tokens[:, t])
+        np.testing.assert_allclose(lg, l1[:, t], atol=5e-3, rtol=1e-2)
+
+
+def test_long_context_applicability_matrix():
+    """long_500k runs only for sub-quadratic archs; decode shapes exist for
+    all (decoder-bearing) archs."""
+    long_ok = {a for a in ARCHS
+               if applicable(CONFIGS[a], SHAPES["long_500k"])[0]}
+    assert long_ok == {"mamba2-130m", "recurrentgemma-9b"}
+    for a in ARCHS:
+        ok, _ = applicable(CONFIGS[a], SHAPES["decode_32k"])
+        assert ok
+    # 32 runnable cells of the nominal 40 (8 long_500k skips)
+    total = sum(applicable(CONFIGS[a], SHAPES[s])[0]
+                for a in ARCHS for s in SHAPES)
+    assert total == 32
+
+
+def test_moe_reference_routing_topk(rng):
+    from repro.models.moe import moe_reference, moe_init
+    cfg = CONFIGS["phi3.5-moe-42b-a6.6b"].reduced()
+    p = moe_init(rng, cfg)
+    vals = {k: v.value for k, v in p.items()}
+    x = jax.random.normal(rng, (32, cfg.d_model)) * 0.5
+    y, aux = moe_reference(vals, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0.5    # load-balance loss near 1 for uniform-ish routing

@@ -1,0 +1,129 @@
+"""Sharding rules, divisibility guard, ZeRO-1 spec, hlocost analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    LOGICAL_RULES, ShardingCtx, logical_sharding, logical_spec,
+    param_sharding_tree, with_logical_constraint, zero1_spec)
+from repro.launch.hlocost import analyze
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_logical_spec_basic(mesh11):
+    with ShardingCtx(mesh11):
+        assert logical_spec("batch", "seq", "embed") == \
+            P(("data",), None, None)
+        assert logical_spec("fsdp", "ffn") == P("data", "model")
+
+
+def test_divisibility_guard_drops_uneven(mesh11):
+    # with a (1,1) mesh every size divides; emulate with rules math instead
+    with ShardingCtx(mesh11):
+        # shape divides trivially -> axes kept
+        assert logical_spec("heads", shape=(8,)) == P("model")
+
+
+def test_pod_axis_dropped_single_pod(mesh11):
+    with ShardingCtx(mesh11):
+        # "batch" maps to ("pod","data"); pod is absent -> dropped
+        sp = logical_spec("batch")
+        assert sp == P(("data",))
+
+
+def test_constraint_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = with_logical_constraint(x, "batch", "embed")
+    np.testing.assert_array_equal(x, y)
+
+
+def test_constraint_rank_mismatch_raises(mesh11):
+    with ShardingCtx(mesh11):
+        with pytest.raises(ValueError):
+            with_logical_constraint(jnp.ones((2, 2)), "batch")
+
+
+def test_unknown_logical_axis_raises(mesh11):
+    with ShardingCtx(mesh11):
+        with pytest.raises(KeyError):
+            logical_spec("no_such_axis")
+
+
+def test_zero1_spec(mesh11):
+    # unsharded dim that divides -> gains the data axis
+    sp = zero1_spec(P(None, "model"), (8, 4), mesh11, axis="data")
+    assert sp == P("data", "model")
+    # already using data -> unchanged
+    sp = zero1_spec(P("data", None), (8, 4), mesh11, axis="data")
+    assert sp == P("data", None)
+
+
+def test_rules_have_no_duplicate_mesh_axis_per_param():
+    """Every param's logical axes must resolve to distinct mesh axes."""
+    from repro.configs import CONFIGS
+    from repro.models import build_model
+    from repro.models.common import split_params
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for name in ("qwen2.5-14b", "qwen3-moe-235b-a22b", "mamba2-130m",
+                 "recurrentgemma-9b", "seamless-m4t-large-v2"):
+        cfg = CONFIGS[name].reduced()
+        model = build_model(cfg)
+        values, axes = model.param_specs()
+        with ShardingCtx(mesh):
+            flat = jax.tree_util.tree_flatten(
+                axes, is_leaf=lambda v: isinstance(v, tuple) and all(
+                    a is None or isinstance(a, str) for a in v))[0]
+            for ax in flat:
+                spec = logical_spec(*ax)
+                seen = []
+                for e in spec:
+                    if e is None:
+                        continue
+                    es = e if isinstance(e, tuple) else (e,)
+                    for a in es:
+                        assert a not in seen, (name, ax, spec)
+                        seen.append(a)
+
+
+# ---------------------------------------------------------------------------
+# hlocost: trip-count-aware analysis
+# ---------------------------------------------------------------------------
+
+def test_hlocost_counts_scan_trip_counts():
+    def body(x, w):
+        return jnp.tanh(x @ w), ()
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    a_s = analyze(jax.jit(scanned).lower(x, ws).compile().as_text())
+    a_u = analyze(jax.jit(unrolled).lower(x, ws).compile().as_text())
+    expect = 8 * 2 * 64 * 128 * 128
+    assert abs(a_s["flops"] - expect) / expect < 0.02
+    assert abs(a_u["flops"] - expect) / expect < 0.02
+    # bytes within 2x of each other (same program, different structure)
+    assert 0.5 < a_s["bytes"] / a_u["bytes"] < 2.0
+
+
+def test_hlocost_dot_contracting_dims():
+    def f(a, b):
+        return jnp.einsum("ij,kj->ik", a, b)      # contract j=256
+
+    a = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    r = analyze(jax.jit(f).lower(a, b).compile().as_text())
+    expect = 2 * 32 * 64 * 256
+    assert abs(r["flops"] - expect) / expect < 0.02

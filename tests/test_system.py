@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the GPU First system: the examples run,
+the data pipeline feeds the device loop by RPC, and the whole-program
+execution model holds together."""
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_example(name, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_example_gpu_first_port():
+    out = _run_example("gpu_first_port.py")
+    assert "verdict from GPU First measurement" in out
+    assert "RPC wrote 2048 results" in out
+
+
+def test_example_serve_demo():
+    out = _run_example("serve_demo.py")
+    assert "verified vs reference decode" in out
+
+
+def test_example_train_100m_with_restart():
+    out = _run_example("train_100m.py")
+    assert "loss descended across a simulated failure/restart" in out
+
+
+def test_host_rpc_data_pipeline_feeds_device_loop():
+    """The paper's fscanf-by-RPC, for tokens: a host iterator feeds batches
+    into a jitted loop through an ordered callback with prefetch."""
+    from repro.core.device_main import device_run
+    from repro.data.pipeline import make_host_pipeline
+
+    def gen():
+        i = 0
+        while True:
+            yield {"x": np.full((4,), float(i), np.float32)}
+            i += 1
+
+    fetch = make_host_pipeline(
+        gen(), {"x": jax.ShapeDtypeStruct((4,), jnp.float32)}, prefetch=2)
+
+    def step(i, acc):
+        batch = fetch(i)
+        return acc + batch["x"].sum()
+
+    final = device_run(step, jnp.float32(0.0), 5, donate=False)
+    # batches 0..4, each sums to 4*i
+    assert float(final) == sum(4.0 * i for i in range(5))
+    fetch.stop()
+
+
+def test_synthetic_stream_deterministic():
+    from repro.data.pipeline import SyntheticLM
+    src = SyntheticLM(vocab_size=128, seq_len=16, batch=2)
+    from repro.core.libc import rand_init
+    s = rand_init(0)
+    _, b1 = src.batch_at(s, jnp.int32(3))
+    _, b2 = src.batch_at(s, jnp.int32(3))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    _, b3 = src.batch_at(s, jnp.int32(4))
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    assert int(b1["tokens"].max()) < 128
