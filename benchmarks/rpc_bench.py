@@ -7,6 +7,12 @@ inside a jitted loop, vs (a) the same loop without the RPC (device-only cost),
 (b) the host function body alone (host-side work), and (c) the device-libc
 LogRing alternative that BUFFERS device-side and flushes once per loop — the
 GPU First antidote to per-call RPC cost.
+
+The batched-transport section measures the same contrast through the generic
+``RpcQueue``: N_QUEUED identical RPCs issued per-call (one ordered
+io_callback each) vs enqueued on device and drained by ONE ordered flush.
+The reported ``amortization`` is per-call cost / batched cost — the factor
+the batched transport amortizes the host round-trip by.
 """
 from __future__ import annotations
 
@@ -18,9 +24,11 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core.libc import LogRing, drain_log_lines
-from repro.core.rpc import Ref, host_rpc, reset_rpc_stats
+from repro.core.rpc import (REGISTRY, Ref, RpcQueue, host_rpc,
+                            reset_rpc_stats, rpc_call)
 
 N_CALLS = 200
+N_QUEUED = 64
 
 
 def run() -> None:
@@ -77,6 +85,58 @@ def run() -> None:
     emit("fig7/buffered_logring", (t_buf - t_dev) / N_CALLS * 1e6,
          f"rpc_vs_buffered={per_call / max((t_buf - t_dev) / N_CALLS, 1e-12):.1f}x")
     drain_log_lines()
+
+    run_batched()
+
+
+def run_batched() -> None:
+    """Per-call io_callback vs the batched RpcQueue flush, N_QUEUED RPCs."""
+    tally = []
+
+    def record(i, x):
+        tally.append((int(i), float(x)))
+        return np.int32(0)
+
+    REGISTRY.register("bench.record", record)
+
+    from jax import lax
+
+    def percall_loop(s):
+        def body(i, s):
+            r, _ = rpc_call("bench.record", i, s, result_shape=jax.
+                            ShapeDtypeStruct((), jnp.int32))
+            return s + 1.0
+        return lax.fori_loop(0, N_QUEUED, body, s)
+
+    def batched_loop(s):
+        q = RpcQueue.create(N_QUEUED, width=2)
+
+        def body(i, carry):
+            s, q = carry
+            return s + 1.0, q.enqueue("bench.record", i, s)
+
+        s, q = lax.fori_loop(0, N_QUEUED, body, (s, q))
+        q.flush()
+        return s
+
+    def device_only(s):
+        return lax.fori_loop(0, N_QUEUED, lambda i, s: s + 1.0, s)
+
+    s0 = jnp.float32(0.0)
+    t_percall = time_fn(jax.jit(percall_loop), s0, warmup=1, iters=5)
+    t_batched = time_fn(jax.jit(batched_loop), s0, warmup=1, iters=5)
+    t_dev = time_fn(jax.jit(device_only), s0, warmup=1, iters=5)
+
+    per_call = max(t_percall - t_dev, 1e-12) / N_QUEUED
+    batched = max(t_batched - t_dev, 1e-12) / N_QUEUED
+    amort = per_call / batched
+    emit("fig7/percall_io_callback_64", per_call * 1e6)
+    emit("fig7/batched_flush_64", batched * 1e6,
+         f"amortization={amort:.1f}x")
+    if amort < 5.0:
+        print(f"WARNING: batched amortization {amort:.1f}x < 5x target",
+              flush=True)
+    tally.clear()
 
 
 if __name__ == "__main__":

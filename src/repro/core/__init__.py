@@ -14,8 +14,8 @@ from repro.core.expand import (
     team_id, thread_id, ws_range)
 from repro.core.libc import LogRing, atoi, rand_u32, rand_uniform, realloc, strtod
 from repro.core.rpc import (
-    READ, READWRITE, WRITE, ArenaRef, Ref, host_rpc, rpc_call, rpc_stats,
-    reset_rpc_stats)
+    READ, READWRITE, WRITE, ArenaRef, Ref, RpcQueue, host_rpc, pad_stats,
+    pad_table, queue_drops, rpc_call, rpc_stats, reset_rpc_stats)
 
 __all__ = [
     "BalancedAllocator", "BalancedState", "GenericAllocator", "GenericState",
@@ -23,6 +23,7 @@ __all__ = [
     "barrier", "expand", "num_teams", "num_threads", "parallel_for",
     "serial_for", "team_id", "thread_id", "ws_range",
     "LogRing", "atoi", "rand_u32", "rand_uniform", "realloc", "strtod",
-    "READ", "READWRITE", "WRITE", "ArenaRef", "Ref", "host_rpc", "rpc_call",
-    "rpc_stats", "reset_rpc_stats",
+    "READ", "READWRITE", "WRITE", "ArenaRef", "Ref", "RpcQueue", "host_rpc",
+    "pad_stats", "pad_table", "queue_drops", "rpc_call", "rpc_stats",
+    "reset_rpc_stats",
 ]

@@ -5,9 +5,23 @@ launch + sync per step (the analogue of the paper's "legacy" CPU-driven app).
 GPU First inverts this: the *entire* program runs on the device, escaping to
 the host only through RPCs.  Here that is a single jitted program containing
 the full multi-step loop (``lax.while_loop`` over steps, donated carry), with
-periodic host escapes (checkpoint, metrics, data refill) expressed as RPCs
-via ``io_callback`` under ``lax.cond`` — the loader below compiles it,
-transfers control, and only sees the device again when the program returns.
+periodic host escapes (checkpoint, metrics, data refill) expressed as RPCs —
+the loader below compiles it, transfers control, and only sees the device
+again when the program returns.
+
+Host escapes ride the v2 RPC transport (``repro.core.rpc``):
+
+* **Immediate hooks** (default) dispatch through :func:`rpc_call` — the
+  landing-pad table caches ONE host wrapper per hook signature, so re-traces
+  reuse the same callable, and per-hook call/byte stats accumulate under the
+  hook's RPC name.  Each firing is one ordered host round-trip.
+* **Batched hooks** (``HostHook(batched=True)``) never touch the host during
+  the loop: firings are enqueued into an on-device :class:`~repro.core.rpc.
+  RpcQueue` (a pure array update), and ONE ordered flush at the end of the
+  program replays them on the host in firing order.  Batched hooks are
+  fire-and-forget and their payload must flatten to scalars (queue records
+  are fixed-width); use them for metrics/logging, not for host interactions
+  the next step depends on.
 
 The host round-trip cost this architecture removes is measured by
 ``benchmarks/rpc_bench.py`` (the paper's Fig. 7).
@@ -16,13 +30,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.experimental import io_callback
+
+from repro.core.rpc import REGISTRY, RpcQueue, rpc_call
+
+_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+_NOOP = "hook.noop"
+
+REGISTRY.register(_NOOP, lambda step: np.int32(0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,61 +52,114 @@ class HostHook:
     every:    fire on steps where step % every == 0 (and step > 0)
     extract:  (step, state) -> pytree of arrays shipped to the host
     host_fn:  host callback receiving (step, *leaves); return value ignored
+    name:     RPC name for the pad table / stats.  Defaults to a per-instance
+              derived name; long-lived drivers that construct hooks
+              repeatedly should pass a stable name so registry entries are
+              rebound instead of accumulating.
+    batched:  queue firings on device; ONE flush at end of run replays them
+              (extract leaves must be scalars; host_fn then receives plain
+              python ints/floats)
     """
     every: int
     extract: Callable[[jax.Array, Any], Any]
     host_fn: Callable
+    name: Optional[str] = None
+    batched: bool = False
 
 
-def _noop_like(*args):
-    return np.int32(0)
+def _hook_name(hook: HostHook) -> str:
+    fn_name = getattr(hook.host_fn, "__name__", "fn")
+    return hook.name or f"hook.{fn_name}.{id(hook):x}"
 
 
-def _fire(hook: HostHook, step, state):
+def _register_hook(hook: HostHook) -> str:
+    """Bind the hook's host_fn into the RPC registry (dispatch-time
+    resolution: re-running device_run with a same-named hook rebinds)."""
+    hname = _hook_name(hook)
+
+    def adapter(step, *leaves):
+        hook.host_fn(int(step), *leaves)
+        return np.int32(0)
+
+    adapter.__name__ = hname
+    REGISTRY.register(hname, adapter)
+    return hname
+
+
+def _fire(hook: HostHook, hname: str, step, state):
+    """Immediate hook: one ordered RPC through the cached landing pad."""
     payload = hook.extract(step, state)
     leaves = jax.tree.leaves(payload)
 
-    def host(step_, *ls):
-        hook.host_fn(int(step_), *ls)
-        return np.int32(0)
-
     def yes(_):
-        return io_callback(host, jax.ShapeDtypeStruct((), jnp.int32),
-                           step, *leaves, ordered=True)
+        r, _ = rpc_call(hname, step, *leaves, result_shape=_I32)
+        return r
 
     def no(_):
-        return io_callback(_noop_like, jax.ShapeDtypeStruct((), jnp.int32),
-                           step, ordered=True)
+        r, _ = rpc_call(_NOOP, step, result_shape=_I32)
+        return r
 
     should = (step % hook.every == 0) & (step > 0)
     return lax.cond(should, yes, no, 0)
 
 
+def _fire_batched(hook: HostHook, hname: str, step, state,
+                  q: RpcQueue) -> RpcQueue:
+    """Batched hook: pure conditional enqueue (O(record), not O(queue))."""
+    payload = hook.extract(step, state)
+    leaves = jax.tree.leaves(payload)
+    should = (step % hook.every == 0) & (step > 0)
+    return q.enqueue(hname, step, *leaves, where=should)
+
+
 def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                n_steps: int, *, hooks: Sequence[HostHook] = (),
-               donate: bool = True, jit_kwargs: Optional[dict] = None) -> Any:
+               donate: bool = True, jit_kwargs: Optional[dict] = None,
+               queue_capacity: int = 1024, queue_width: int = 8) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
 
     The whole loop is one compiled program; ``hooks`` are the only host
-    contact.  Returns the final state.
+    contact.  Batched hooks share one on-device :class:`RpcQueue`
+    (``queue_capacity`` records of ``queue_width`` scalars) flushed once
+    after the loop.  Returns the final state.
     """
     jit_kwargs = dict(jit_kwargs or {})
     if donate:
         jit_kwargs.setdefault("donate_argnums", (0,))
 
+    named = [(h, _register_hook(h)) for h in hooks]
+    any_batched = any(h.batched for h in hooks)
+
     @functools.partial(jax.jit, **jit_kwargs)
     def program(state):
-        def body(carry):
-            step, state = carry
-            state = step_fn(step, state)
-            for h in hooks:
-                _fire(h, step + 1, state)
-            return (step + 1, state)
-
         def cond(carry):
             return carry[0] < n_steps
 
-        _, final = lax.while_loop(cond, body, (jnp.zeros((), jnp.int32), state))
+        if any_batched:
+            def body(carry):
+                step, state, q = carry
+                state = step_fn(step, state)
+                for h, hname in named:
+                    if h.batched:
+                        q = _fire_batched(h, hname, step + 1, state, q)
+                    else:
+                        _fire(h, hname, step + 1, state)
+                return (step + 1, state, q)
+
+            q0 = RpcQueue.create(queue_capacity, queue_width)
+            _, final, q = lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), state, q0))
+            q.flush()
+        else:
+            def body(carry):
+                step, state = carry
+                state = step_fn(step, state)
+                for h, hname in named:
+                    _fire(h, hname, step + 1, state)
+                return (step + 1, state)
+
+            _, final = lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), state))
         return final
 
     return program(state)

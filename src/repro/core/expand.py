@@ -34,6 +34,7 @@ from typing import Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.jax_compat import axis_size, shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -66,14 +67,14 @@ def team_id():
         return jnp.zeros((), jnp.int32)
     tid = jnp.zeros((), jnp.int32)
     for ax in _ENV.axes:
-        tid = tid * lax.axis_size(ax) + lax.axis_index(ax)
+        tid = tid * axis_size(ax) + lax.axis_index(ax)
     return tid
 
 
 def num_teams() -> int:
     n = 1
     for ax in _ENV.axes:
-        n *= lax.axis_size(ax)
+        n *= axis_size(ax)
     return n
 
 
@@ -123,7 +124,7 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
         def body(*shard_args):
             with _team_env(axes, lanes):
                 return fn(*shard_args)
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=check_vma)(*args)
 
     return wrapped
@@ -151,7 +152,7 @@ def parallel_for(body: Callable, n: int, *arrays,
             return jax.vmap(lambda i: body(i, *arrays))(idx)
 
     spec = P(axes)
-    out = jax.shard_map(shard_body, mesh=mesh, in_specs=(),
+    out = shard_map(shard_body, mesh=mesh, in_specs=(),
                         out_specs=spec, check_vma=False)()
     return out
 

@@ -1,0 +1,38 @@
+"""Aliases for jax APIs that moved between releases.
+
+The repo targets the pinned jax in ``requirements.txt`` but keeps running on
+neighbouring releases; anything that was renamed or promoted out of
+``jax.experimental`` gets one alias here instead of per-call-site fallbacks.
+"""
+import jax
+
+if hasattr(jax, "shard_map"):                     # jax >= 0.5
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        """jax.shard_map signature on the pre-promotion implementation
+        (``check_vma`` was called ``check_rep``)."""
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+
+if hasattr(jax.lax, "axis_size"):                 # jax >= 0.6
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Static size of a mapped axis (``lax.axis_size`` before it
+        existed): the 0.4.x axis env hands the int back directly."""
+        return jax.core.axis_frame(axis_name)
+
+
+def __getattr__(name):
+    # lazy: only kernel modules should pay the Pallas TPU import
+    if name == "CompilerParams":
+        from jax.experimental.pallas import tpu as pltpu
+
+        # jax < 0.5 names this TPUCompilerParams; newer releases renamed it
+        return getattr(pltpu, "CompilerParams", None) or \
+            pltpu.TPUCompilerParams
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,7 +16,11 @@ device-resident training/serving loop would otherwise escape to the host for:
                      pure array update inside jit; ``flush()`` is ONE ordered
                      RPC that drains the buffer to the host — the paper's
                      buffered ``fprintf`` (and the antidote to its Fig. 7
-                     975 us per-call RPC cost).
+                     975 us per-call RPC cost).  Since transport v2 it is the
+                     width-2 special case of the generic batched transport
+                     (``repro.core.rpc.RpcQueue``): every record is an RPC to
+                     the ``"logring.sink"`` host callee, and ``flush()`` IS
+                     the queue's generic batched flush.
 * ``realloc``      — allocator-integrated grow/copy on arena arrays.
 """
 from __future__ import annotations
@@ -26,12 +30,11 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
-from jax.experimental import io_callback
 
 from repro.core.allocator import (
     BalancedAllocator, BalancedState, GenericAllocator, GenericState)
+from repro.core.rpc import REGISTRY, RpcQueue
 
 
 # ---------------------------------------------------------------------------
@@ -144,55 +147,78 @@ def strtod(buf: jax.Array) -> jax.Array:
 # LogRing — buffered device-side logging, flushed by one RPC
 # ---------------------------------------------------------------------------
 
+_LOG_SINK = "logring.sink"
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LogRing:
-    tags: jax.Array      # (N,) int32
-    values: jax.Array    # (N,) float32
-    head: jax.Array      # () int32 — total records ever written
+    """Buffered device-side logging: the batched-transport special case.
+
+    A thin wrapper over :class:`repro.core.rpc.RpcQueue` with width-2
+    records ``(tag:int32, value:float32)`` addressed to the ring's sink
+    callee — ``log()`` is ``enqueue``, ``flush()`` is the generic batched
+    flush (one ordered callback replaying records in order).
+
+    Records are addressed to ``name`` (static, baked in at ``log()`` time);
+    the registry binds the DEFAULT sink for that name.  A custom ``sink``
+    passed to ``flush`` is captured into that flush's compiled program (the
+    transport's per-flush handler override), so each program keeps its own
+    sink across re-executions and rings never cross-wire.
+    """
+    q: RpcQueue
+    name: str = "logring.sink"
 
     def tree_flatten(self):
-        return ((self.tags, self.values, self.head), None)
+        return ((self.q,), self.name)
 
     @classmethod
-    def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves)
+    def tree_unflatten(cls, name, leaves):
+        return cls(leaves[0], name)
+
+    # introspection views over the underlying queue lanes
+    @property
+    def tags(self) -> jax.Array:
+        return self.q.ivals[:, 0]
+
+    @property
+    def values(self) -> jax.Array:
+        return self.q.fvals[:, 1]
+
+    @property
+    def head(self) -> jax.Array:
+        return self.q.head
 
     @staticmethod
-    def create(capacity: int = 1024) -> "LogRing":
-        return LogRing(jnp.zeros((capacity,), jnp.int32),
-                       jnp.zeros((capacity,), jnp.float32),
-                       jnp.zeros((), jnp.int32))
+    def create(capacity: int = 1024, name: str = _LOG_SINK) -> "LogRing":
+        if name not in REGISTRY.hosts:
+            REGISTRY.register(name, _default_sink)
+        return LogRing(RpcQueue.create(capacity, width=2), name)
 
     def log(self, tag, value) -> "LogRing":
         """Pure device-side append (overwrites oldest when full)."""
-        i = self.head % self.tags.shape[0]
-        return LogRing(self.tags.at[i].set(jnp.asarray(tag, jnp.int32)),
-                       self.values.at[i].set(jnp.asarray(value, jnp.float32)),
-                       self.head + 1)
+        return LogRing(self.q.enqueue(self.name,
+                                      jnp.asarray(tag, jnp.int32),
+                                      jnp.asarray(value, jnp.float32)),
+                       self.name)
 
     def flush(self, sink: Optional[Callable] = None) -> "LogRing":
-        """ONE ordered RPC drains the ring to the host."""
-        sink = sink or _default_sink
+        """ONE ordered RPC drains the ring to the host (in enqueue order).
 
-        def host(tags, values, head):
-            n = int(head)
-            cap = tags.shape[0]
-            lo = max(0, n - cap)
-            for j in range(lo, n):
-                sink(int(tags[j % cap]), float(values[j % cap]))
-            return np.int32(n)
-
-        io_callback(host, jax.ShapeDtypeStruct((), jnp.int32),
-                    self.tags, self.values, self.head, ordered=True)
-        return LogRing(self.tags, self.values, jnp.zeros((), jnp.int32))
+        ``sink`` is captured by THIS flush (per compiled program); without
+        it, records go to the registry's default binding for ``name``."""
+        handlers = {self.name: sink} if sink is not None else None
+        return LogRing(self.q.flush(handlers), self.name)
 
 
 _LOG_LINES = []
 
 
 def _default_sink(tag: int, value: float):
-    _LOG_LINES.append((tag, value))
+    _LOG_LINES.append((int(tag), float(value)))
+
+
+REGISTRY.register(_LOG_SINK, _default_sink)
 
 
 def drain_log_lines():

@@ -8,11 +8,53 @@ call-site argument-type tuple, and the device thread blocks until the host
 acknowledges.
 
 TPU/JAX translation: the transport is a host callback (``io_callback`` for
-ordered, effectful calls; ``pure_callback`` for pure ones) instead of polled
-managed memory — the protocol (synchronous, stateless client/server, opaque
-marshalled buffers) is the paper's.  "Compile time" is trace time: the first
-trace of a call site with a new flattened signature *generates* its landing
-pad, exactly like the LTO pass monomorphizing a variadic callee.
+ordered, effectful calls; ``jax.pure_callback`` for pure ones) instead of
+polled managed memory — the protocol (synchronous, stateless client/server,
+opaque marshalled buffers) is the paper's.  "Compile time" is trace time: the
+first trace of a call site with a new flattened signature *generates* its
+landing pad, exactly like the LTO pass monomorphizing a variadic callee.
+
+Transport v2 semantics
+======================
+
+**Order-preserving marshalling.**  Arguments are flattened in *call-site
+order*: each argument contributes its operands in place, so the host callee
+receives ``fn(args...)`` exactly as written at the call site for any mix of
+value / ``Ref`` / ``ArenaRef`` arguments.  (v1 grouped all value args before
+all ref args, silently permuting any call with a value argument after a
+``Ref``.)
+
+**Landing-pad-keyed dispatch.**  ``REGISTRY.pads`` maps ``(callee, flattened
+signature)`` to a pad id; each pad owns ONE cached host wrapper, created at
+first trace and reused by every subsequent trace of any call site with that
+signature, so ``io_callback`` always sees a stable callable (stable across
+re-traces → the jit cache and the callback registry key on the same object).
+The wrapper resolves ``REGISTRY.hosts[name]`` at *dispatch* time, so
+re-registering a host function under the same name takes effect for
+already-traced (and already-compiled) stubs.  Per-pad call/byte counters live
+in ``REGISTRY.pad_stats``; per-callee aggregates in ``REGISTRY.stats``.
+
+**Ordered vs pure dispatch.**  ``ordered=True`` (default) issues the RPC via
+``io_callback(ordered=True)``: program order among all ordered RPCs is
+preserved, and the call is never elided — use for anything effectful
+(I/O, logging, checkpointing).  ``ordered=False`` still guarantees execution
+but not cross-call ordering.  ``pure=True`` uses ``jax.pure_callback``: the
+compiler may elide, cache, or reorder the call, so it is only sound for pure
+host functions whose result is actually consumed; write-back refs are
+rejected (there is no ordering to make a host-side mutation meaningful).
+
+**Batched transport.**  :class:`RpcQueue` is an on-device ring of fixed-width
+RPC records (callee id + scalar payload packed into int32/float32 lanes with
+an interleave mask, so mixed int/float argument order survives the trip).
+``enqueue`` is a pure array update inside jit — no host contact; ``flush``
+drains the whole queue to the host in ONE ordered ``io_callback``, replaying
+records in enqueue order (generalizing the buffered-``fprintf`` trick that
+``core/libc.py``'s ``LogRing`` applies to log records, and the antidote to
+the paper's Fig. 7 ~975 µs per-call RPC cost).  Batched RPCs are
+fire-and-forget: the device has already executed past the enqueue, so record
+callees cannot return values to the device.  If more than ``capacity``
+records are enqueued between flushes, the oldest are overwritten (counted in
+``queue_drops()``).
 
 Argument categories (paper Fig. 3):
   * value args      — leaves passed by value; never written back.
@@ -25,12 +67,14 @@ Argument categories (paper Fig. 3):
                       into the device heap; the underlying object is located
                       at **runtime** via the allocator's tracking table
                       (the paper's ``_FindObj``), then shipped base+size.
+                      On the host it expands *in place* to the five
+                      positional arguments ``(ptr, base, size, found, arena)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +89,9 @@ from repro.core import allocator as alloc_mod
 # ---------------------------------------------------------------------------
 
 READ, WRITE, READWRITE = "read", "write", "readwrite"
+
+# marshalling kinds (also the first element of each signature entry)
+VAL, REF, ARENA = "val", "ref", "arena"
 
 
 @dataclasses.dataclass
@@ -72,50 +119,127 @@ class ArenaRef:
 # Registry: host functions + per-signature landing pads + stats
 # ---------------------------------------------------------------------------
 
+def _zero_stats() -> Dict[str, float]:
+    return {"calls": 0, "bytes_in": 0, "bytes_out": 0}
+
+
 class _Registry:
+    """Host-function table, landing-pad table, batch-callee table, stats.
+
+    ``pads`` maps ``(callee,) + signature`` to a pad id; ``pad_wrappers``
+    holds the ONE cached host wrapper per pad (the stable callable handed to
+    ``io_callback``); ``pad_info``/``pad_stats`` expose per-pad metadata and
+    call/byte counters.  ``batch_ids`` assigns small integer ids to host
+    functions addressable from :class:`RpcQueue` records.
+    """
+
     def __init__(self):
         self.lock = threading.Lock()
         self.hosts: Dict[str, Callable] = {}
-        self.pads: Dict[Tuple, int] = {}       # signature -> enum id
+        self.pads: Dict[Tuple, int] = {}           # (name,)+sig -> pad id
+        self.pad_wrappers: Dict[int, Callable] = {}
+        self.pad_info: Dict[int, Tuple] = {}       # pad id -> (name,)+sig
+        self.pad_stats: Dict[int, Dict[str, float]] = {}
         self.stats: Dict[str, Dict[str, float]] = {}
+        self.batch_ids: Dict[str, int] = {}        # name -> queue callee id
+        self.batch_names: List[str] = []           # queue callee id -> name
+        self.queue_drops = 0
 
     def register(self, name: str, fn: Callable):
+        """(Re-)bind ``name`` to ``fn``.  Pads, pad wrappers and stats for
+        ``name`` survive re-registration: already-traced stubs dispatch to the
+        NEW function (wrappers resolve the callee at dispatch time)."""
         with self.lock:
             self.hosts[name] = fn
-            self.stats.setdefault(
-                name, {"calls": 0, "bytes_in": 0, "bytes_out": 0, "pads": 0})
+            self.stats.setdefault(name, dict(_zero_stats(), pads=0))
 
-    def landing_pad(self, name: str, sig: Tuple) -> int:
-        """One pad per (callee, flattened arg-type tuple): the variadic
-        monomorphization of the paper."""
+    def landing_pad(self, name: str, sig: Tuple) -> Tuple[int, Callable]:
+        """One pad — and one cached host wrapper — per (callee, flattened
+        arg-type tuple): the variadic monomorphization of the paper.
+        Returns ``(pad_id, wrapper)``; the wrapper object is identical for
+        every trace with this signature."""
         with self.lock:
             key = (name,) + sig
-            if key not in self.pads:
-                self.pads[key] = len(self.pads)
+            pid = self.pads.get(key)
+            if pid is None:
+                pid = len(self.pads)
+                self.pads[key] = pid
+                self.pad_info[pid] = key
+                self.pad_stats[pid] = _zero_stats()
+                self.pad_wrappers[pid] = _make_pad_wrapper(name, pid, sig)
                 self.stats[name]["pads"] += 1
-            return self.pads[key]
+            return pid, self.pad_wrappers[pid]
 
-    def bump(self, name, bytes_in, bytes_out):
+    def batch_callee_id(self, name: str) -> int:
+        """Small integer id for addressing ``name`` from RpcQueue records."""
+        with self.lock:
+            if name not in self.hosts:
+                raise KeyError(f"no host function registered for RPC {name!r}")
+            cid = self.batch_ids.get(name)
+            if cid is None:
+                cid = len(self.batch_names)
+                self.batch_ids[name] = cid
+                self.batch_names.append(name)
+            return cid
+
+    def bump(self, name: str, pad_id: Optional[int], bytes_in: int,
+             bytes_out: int, calls: int = 1):
         with self.lock:
             s = self.stats[name]
-            s["calls"] += 1
+            s["calls"] += calls
             s["bytes_in"] += bytes_in
             s["bytes_out"] += bytes_out
+            if pad_id is not None:
+                p = self.pad_stats[pad_id]
+                p["calls"] += calls
+                p["bytes_in"] += bytes_in
+                p["bytes_out"] += bytes_out
+
+    def bump_drops(self, n: int):
+        with self.lock:
+            self.queue_drops += n
 
 
 REGISTRY = _Registry()
 
 
 def rpc_stats(name: Optional[str] = None):
-    if name is not None:
-        return dict(REGISTRY.stats.get(name, {}))
-    return {k: dict(v) for k, v in REGISTRY.stats.items()}
+    """Per-callee aggregate stats (calls, bytes_in, bytes_out, pads)."""
+    with REGISTRY.lock:
+        if name is not None:
+            return dict(REGISTRY.stats.get(name, {}))
+        return {k: dict(v) for k, v in REGISTRY.stats.items()}
+
+
+def pad_stats(pad_id: Optional[int] = None):
+    """Per-landing-pad stats; ``pad_table()`` maps pad ids to signatures."""
+    with REGISTRY.lock:
+        if pad_id is not None:
+            return dict(REGISTRY.pad_stats.get(pad_id, {}))
+        return {k: dict(v) for k, v in REGISTRY.pad_stats.items()}
+
+
+def pad_table():
+    """Snapshot of the landing-pad table: pad id -> (callee, *signature)."""
+    with REGISTRY.lock:
+        return dict(REGISTRY.pad_info)
+
+
+def queue_drops() -> int:
+    """Total RpcQueue records overwritten before a flush could drain them."""
+    with REGISTRY.lock:
+        return REGISTRY.queue_drops
 
 
 def reset_rpc_stats():
-    for s in REGISTRY.stats.values():
-        for k in s:
-            s[k] = 0
+    with REGISTRY.lock:
+        for s in REGISTRY.stats.values():
+            for k in s:
+                s[k] = 0
+        for p in REGISTRY.pad_stats.values():
+            for k in p:
+                p[k] = 0
+        REGISTRY.queue_drops = 0
 
 
 # ---------------------------------------------------------------------------
@@ -126,25 +250,53 @@ def _np_bytes(tree) -> int:
     return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
 
 
-def _make_host_wrapper(name: str, n_val: int, ref_accesses: Tuple[str, ...]):
+def _make_pad_wrapper(name: str, pad_id: int, sig: Tuple):
     """Generates the host landing pad: unpack RPCInfo -> call -> pack result +
-    write-back refs (paper Fig. 3b)."""
-    fn = REGISTRY.hosts[name]
+    write-back refs (paper Fig. 3b).
+
+    Created ONCE per pad and cached in ``REGISTRY.pad_wrappers`` so every
+    trace with this signature hands ``io_callback`` the same callable.  The
+    flat operands arrive in call-site order; ``sig`` says how many operands
+    each original argument consumed, so the callee sees its arguments in the
+    original positions.  The callee itself is resolved from
+    ``REGISTRY.hosts`` at dispatch time (re-registration-safe).
+    """
 
     def wrapper(*flat):
-        vals = flat[:n_val]
-        refs = list(flat[n_val:])
-        out_refs = [np.asarray(r).copy() for r in refs]
-        result = fn(*vals, *out_refs)
-        ret = [np.asarray(result)]
-        for acc, orig, new in zip(ref_accesses, refs, out_refs):
+        fn = REGISTRY.hosts[name]
+        pos = 0
+        call_args = []
+        ref_outs = []                    # (access, original, host copy)
+        for entry in sig:
+            kind = entry[0]
+            if kind == VAL:
+                call_args.append(np.asarray(flat[pos]))
+                pos += 1
+            elif kind == REF:
+                orig = flat[pos]
+                pos += 1
+                copy = np.asarray(orig).copy()
+                call_args.append(copy)
+                ref_outs.append((entry[3], orig, copy))
+            else:                        # ARENA: ptr, base, size, found, arena
+                ptr, base, size, found = (np.asarray(x)
+                                          for x in flat[pos:pos + 4])
+                arena = flat[pos + 4]
+                pos += 5
+                copy = np.asarray(arena).copy()
+                call_args.extend([ptr, base, size, found, copy])
+                ref_outs.append((entry[3], arena, copy))
+        result = fn(*call_args)
+        ret = [jax.tree.map(np.asarray, result)]
+        for acc, orig, copy in ref_outs:
             if acc in (WRITE, READWRITE):
-                ret.append(new)
+                ret.append(copy)
             else:
                 ret.append(np.asarray(orig))   # read-only: no copy-back
-        REGISTRY.bump(name, _np_bytes(flat), _np_bytes(ret))
+        REGISTRY.bump(name, pad_id, _np_bytes(flat), _np_bytes(ret))
         return tuple(ret)
 
+    wrapper.__name__ = f"rpc_pad_{pad_id}_{name}"
     return wrapper
 
 
@@ -152,46 +304,78 @@ def _make_host_wrapper(name: str, n_val: int, ref_accesses: Tuple[str, ...]):
 # Device-side stub
 # ---------------------------------------------------------------------------
 
-def rpc_call(name: str, *args, result_shape, ordered: bool = True):
+def _marshal(args) -> Tuple[Tuple, List, List]:
+    """Flatten call-site arguments in ORIGINAL order.
+
+    Returns ``(sig, operands, ref_shapes)`` where ``sig`` is the per-argument
+    signature tuple (the landing-pad key and the wrapper's unpack recipe),
+    ``operands`` is the flat operand list for the callback, and
+    ``ref_shapes`` the ShapeDtypeStructs of write-back slots in arg order.
+    """
+    sig, operands, ref_shapes = [], [], []
+    for a in args:
+        if isinstance(a, Ref):
+            sig.append((REF, tuple(np.shape(a.array)),
+                        str(jnp.result_type(a.array)), a.access))
+            operands.append(a.array)
+            ref_shapes.append(jax.ShapeDtypeStruct(
+                np.shape(a.array), jnp.result_type(a.array)))
+        elif isinstance(a, ArenaRef):
+            # runtime object lookup via the allocator tracking table: ship the
+            # underlying object as (ptr, base, size, found, arena) — a single
+            # level of indirection (§4.1)
+            found, base, size = _find_obj(a.state, a.ptr)
+            sig.append((ARENA, tuple(np.shape(a.arena)),
+                        str(jnp.result_type(a.arena)), a.access))
+            operands.extend([jnp.asarray(a.ptr, jnp.int32),
+                             jnp.asarray(base, jnp.int32),
+                             jnp.asarray(size, jnp.int32),
+                             jnp.asarray(found, jnp.int32),
+                             a.arena])
+            ref_shapes.append(jax.ShapeDtypeStruct(
+                np.shape(a.arena), jnp.result_type(a.arena)))
+        else:
+            v = jnp.asarray(a)
+            sig.append((VAL, tuple(np.shape(v)), str(jnp.result_type(v))))
+            operands.append(v)
+    return tuple(sig), operands, ref_shapes
+
+
+def rpc_call(name: str, *args, result_shape, ordered: bool = True,
+             pure: bool = False):
     """Issue a blocking host RPC from device code (traceable).
 
     ``args`` may mix plain arrays/scalars (value args), :class:`Ref`, and
-    :class:`ArenaRef`.  Returns ``(result, updated_ref_arrays)`` — updated
-    arrays appear for every Ref/ArenaRef in order (read-only refs are
-    returned unchanged so the call-site structure is static).
+    :class:`ArenaRef` in any order; the host function receives them in the
+    SAME order.  Returns ``(result, updated_ref_arrays)`` — updated arrays
+    appear for every Ref/ArenaRef in order (read-only refs are returned
+    unchanged so the call-site structure is static).
+
+    ``pure=True`` dispatches through ``jax.pure_callback`` (elidable,
+    cacheable, unordered) — only for pure host functions; write-back refs are
+    rejected.  Otherwise ``io_callback`` is used, with ``ordered`` as given.
     """
     if name not in REGISTRY.hosts:
         raise KeyError(f"no host function registered for RPC {name!r}")
 
-    vals, refs, accesses = [], [], []
-    arena_info = []                       # (index into refs, ArenaRef)
-    for a in args:
-        if isinstance(a, Ref):
-            refs.append(a.array)
-            accesses.append(a.access)
-        elif isinstance(a, ArenaRef):
-            # runtime object lookup via the allocator tracking table
-            found, base, size = _find_obj(a.state, a.ptr)
-            # ship the (maximal) underlying object as a fixed-size window;
-            # host sees (object, offset-of-ptr, valid-size)
-            obj = a.arena                  # single-level indirection (§4.1)
-            vals.extend([jnp.asarray(a.ptr, jnp.int32), base, size,
-                         found.astype(jnp.int32)])
-            refs.append(obj)
-            accesses.append(a.access)
-        else:
-            vals.append(jnp.asarray(a))
-    del arena_info
+    sig, operands, ref_shapes = _marshal(args)
+    if pure:
+        writeback = [e for e in sig if e[0] in (REF, ARENA)
+                     and e[3] in (WRITE, READWRITE)]
+        if writeback:
+            raise ValueError(
+                f"pure RPC {name!r} cannot take write/readwrite refs: "
+                "pure_callback may be elided or reordered, so host-side "
+                "mutation has no defined meaning")
 
-    sig = tuple((tuple(np.shape(v)), str(jnp.result_type(v))) for v in vals) \
-        + tuple((tuple(np.shape(r)), str(jnp.result_type(r)), acc)
-                for r, acc in zip(refs, accesses))
-    REGISTRY.landing_pad(name, sig)
+    _, wrapper = REGISTRY.landing_pad(name, sig)
 
-    wrapper = _make_host_wrapper(name, len(vals), tuple(accesses))
-    result_shapes = (jax.tree.map(lambda s: s, result_shape),) + tuple(
-        jax.ShapeDtypeStruct(np.shape(r), jnp.result_type(r)) for r in refs)
-    out = io_callback(wrapper, result_shapes, *vals, *refs, ordered=ordered)
+    result_shapes = (jax.tree.map(lambda s: s, result_shape),) \
+        + tuple(ref_shapes)
+    if pure:
+        out = jax.pure_callback(wrapper, result_shapes, *operands)
+    else:
+        out = io_callback(wrapper, result_shapes, *operands, ordered=ordered)
     result, updated = out[0], list(out[1:])
     return result, updated
 
@@ -203,10 +387,179 @@ def _find_obj(state, ptr):
 
 
 # ---------------------------------------------------------------------------
+# Batched transport: on-device RPC queue, drained by ONE ordered callback
+# ---------------------------------------------------------------------------
+
+def _drain_queue(callee, nargs, imask, ivals, fvals, head, overrides=None):
+    """Host side of :meth:`RpcQueue.flush`: replay queued records in enqueue
+    order, dispatching each to its registered callee (resolved at drain
+    time), unless ``overrides`` maps the callee's name to a handler captured
+    by this particular flush.
+
+    A module-level function, so every default flush of every queue hands
+    ``io_callback`` the same stable callable."""
+    # the callback may receive jax Arrays; materialize to numpy ONCE so the
+    # per-record scalar indexing below doesn't pay a device sync each time
+    callee, nargs, imask, ivals, fvals = (
+        np.asarray(x) for x in (callee, nargs, imask, ivals, fvals))
+    n = int(head)
+    cap = callee.shape[0]
+    lo = max(0, n - cap)
+    if lo:
+        REGISTRY.bump_drops(lo)
+    per_name_calls: Dict[str, int] = {}
+    per_name_bytes: Dict[str, int] = {}
+    with REGISTRY.lock:                    # one snapshot, not per record
+        names = list(REGISTRY.batch_names)
+        hosts = dict(REGISTRY.hosts)
+    for j in range(lo, n):
+        k = j % cap
+        cid = int(callee[k])
+        name = names[cid]
+        fn = (overrides or {}).get(name) or hosts[name]
+        na = int(nargs[k])
+        mask = int(imask[k])
+        args = [int(ivals[k, t]) if (mask >> t) & 1 else float(fvals[k, t])
+                for t in range(na)]
+        fn(*args)
+        per_name_calls[name] = per_name_calls.get(name, 0) + 1
+        per_name_bytes[name] = per_name_bytes.get(name, 0) + 12 + 4 * na
+    for name, calls in per_name_calls.items():
+        REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
+    return np.int32(n)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RpcQueue:
+    """On-device ring of pending RPC records (the batched transport).
+
+    Each record is ``(callee id, up to W scalar args)``; integer args live in
+    int32 lanes, floats in float32 lanes, and ``imask`` bit ``j`` records
+    which lane argument ``j`` used — so mixed int/float argument ORDER is
+    reconstructed exactly on the host.  ``enqueue`` is a pure array update
+    (zero host contact inside jit); ``flush`` drains every queued record to
+    the host in ONE ordered ``io_callback``, preserving enqueue order.
+    Records are fire-and-forget: no values return to the device.  When more
+    than ``capacity`` records accumulate, the oldest are overwritten (the
+    drop is counted in :func:`queue_drops`).
+    """
+    callee: jax.Array    # (N,) int32 — batch callee id per record
+    nargs: jax.Array     # (N,) int32 — args used in this record
+    imask: jax.Array     # (N,) int32 — bit j set => arg j is in the int lane
+    ivals: jax.Array     # (N, W) int32
+    fvals: jax.Array     # (N, W) float32
+    head: jax.Array      # () int32 — total records ever enqueued
+
+    def tree_flatten(self):
+        return ((self.callee, self.nargs, self.imask, self.ivals, self.fvals,
+                 self.head), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def capacity(self) -> int:
+        return self.callee.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.ivals.shape[1]
+
+    @staticmethod
+    def create(capacity: int = 1024, width: int = 4) -> "RpcQueue":
+        if not 0 < width <= 31:
+            raise ValueError(
+                f"width must be in [1, 31] to fit the int32 interleave "
+                f"mask; got {width}")
+        return RpcQueue(
+            jnp.zeros((capacity,), jnp.int32),
+            jnp.zeros((capacity,), jnp.int32),
+            jnp.zeros((capacity,), jnp.int32),
+            jnp.zeros((capacity, width), jnp.int32),
+            jnp.zeros((capacity, width), jnp.float32),
+            jnp.zeros((), jnp.int32))
+
+    def enqueue(self, name: str, *scalars, where=None) -> "RpcQueue":
+        """Queue one RPC to host function ``name`` (pure device-side append).
+
+        ``scalars`` are scalar ints/floats/bools (traced or concrete); which
+        lane each lands in is decided by its dtype at trace time.
+
+        ``where`` (optional traced bool) makes the append conditional with
+        O(record) cost: the target ROW is selected against its old contents
+        and the head only advances when true — no whole-queue select."""
+        cid = REGISTRY.batch_callee_id(name)
+        cap, w = self.capacity, self.width
+        if len(scalars) > w:
+            raise ValueError(
+                f"RPC record for {name!r} has {len(scalars)} args; queue "
+                f"width is {w}")
+        i = self.head % cap
+        iv = jnp.zeros((w,), jnp.int32)
+        fv = jnp.zeros((w,), jnp.float32)
+        mask = 0
+        for j, s in enumerate(scalars):
+            s = jnp.asarray(s)
+            if np.shape(s) != ():
+                raise ValueError(
+                    f"RPC record args must be scalars; arg {j} for {name!r} "
+                    f"has shape {np.shape(s)}")
+            if jnp.issubdtype(s.dtype, jnp.integer) or s.dtype == jnp.bool_:
+                iv = iv.at[j].set(s.astype(jnp.int32))
+                mask |= 1 << j
+            else:
+                fv = fv.at[j].set(s.astype(jnp.float32))
+        cid_v = jnp.int32(cid)
+        na_v = jnp.int32(len(scalars))
+        mask_v = jnp.int32(mask)
+        step = 1
+        if where is not None:
+            keep = jnp.asarray(where)
+            cid_v = jnp.where(keep, cid_v, self.callee[i])
+            na_v = jnp.where(keep, na_v, self.nargs[i])
+            mask_v = jnp.where(keep, mask_v, self.imask[i])
+            iv = jnp.where(keep, iv, self.ivals[i])
+            fv = jnp.where(keep, fv, self.fvals[i])
+            step = keep.astype(jnp.int32)
+        return RpcQueue(
+            self.callee.at[i].set(cid_v),
+            self.nargs.at[i].set(na_v),
+            self.imask.at[i].set(mask_v),
+            self.ivals.at[i].set(iv),
+            self.fvals.at[i].set(fv),
+            self.head + step)
+
+    def flush(self, handlers: Optional[Dict[str, Callable]] = None
+              ) -> "RpcQueue":
+        """Drain the queue to the host in ONE ordered RPC; returns the
+        emptied queue.  Safe inside jit (ordered effect, never elided).
+
+        ``handlers`` maps callee names to per-flush handlers, CAPTURED into
+        this flush's compiled program (like v1's sink closures) — records
+        for those names bypass the registry, so two compiled programs can
+        drain same-named records to different handlers.  Without it, the
+        drain dispatches through the registry via one stable callable."""
+        if handlers:
+            bound = dict(handlers)
+
+            def drain(*flat):
+                return _drain_queue(*flat, overrides=bound)
+        else:
+            drain = _drain_queue
+        io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
+                    self.callee, self.nargs, self.imask, self.ivals,
+                    self.fvals, self.head, ordered=True)
+        return dataclasses.replace(self, head=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # Decorator: register + generate a typed device stub
 # ---------------------------------------------------------------------------
 
-def host_rpc(name: Optional[str] = None, *, result_shape, ordered: bool = True):
+def host_rpc(name: Optional[str] = None, *, result_shape,
+             ordered: bool = True, pure: bool = False):
     """Register ``fn`` as host-only and return its device-callable stub.
 
     >>> @host_rpc(result_shape=jax.ShapeDtypeStruct((), jnp.int32))
@@ -214,6 +567,9 @@ def host_rpc(name: Optional[str] = None, *, result_shape, ordered: bool = True):
     ...     return np.int32(lookup(epoch))
     ...
     >>> seed, _ = fetch_seed.rpc(epoch)  # callable from jitted device code
+
+    ``pure=True`` routes the stub through the elidable ``pure_callback``
+    fast path — only for host functions with no side effects.
     """
     def deco(fn):
         rpc_name = name or fn.__name__
@@ -221,7 +577,7 @@ def host_rpc(name: Optional[str] = None, *, result_shape, ordered: bool = True):
 
         def stub(*args):
             return rpc_call(rpc_name, *args, result_shape=result_shape,
-                            ordered=ordered)
+                            ordered=ordered, pure=pure)
 
         fn.rpc = stub
         fn.rpc_name = rpc_name

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.jax_compat import axis_size
+
 
 def hierarchical_psum(x, *, intra_axis: str = "data", inter_axis: Optional[str] = "pod"):
     """Pod-hierarchical all-reduce inside ``shard_map``.
@@ -26,7 +28,7 @@ def hierarchical_psum(x, *, intra_axis: str = "data", inter_axis: Optional[str] 
     axis_env_names = _axis_names()
     if inter_axis is None or inter_axis not in axis_env_names:
         return lax.psum(x, intra_axis)
-    n = lax.axis_size(intra_axis)
+    n = axis_size(intra_axis)
     if x.ndim == 0 or x.shape[0] % n != 0:
         return lax.psum(x, (intra_axis, inter_axis))
     shard = lax.psum_scatter(x, intra_axis, scatter_dimension=0, tiled=True)

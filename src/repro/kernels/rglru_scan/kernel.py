@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.jax_compat import CompilerParams as _CompilerParams
+
 
 def _scan_block(a: jnp.ndarray, b: jnp.ndarray, blk: int):
     """Inclusive scan over axis 0 of (blk, W) via Hillis–Steele doubling."""
@@ -81,7 +83,7 @@ def linear_scan_pallas(
             jax.ShapeDtypeStruct((B, W), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.jax_compat import CompilerParams as _CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
                 y_ref, fs_ref,
@@ -119,7 +121,7 @@ def ssd_scan_pallas(
             jax.ShapeDtypeStruct((bsz, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a2, B, C, d2)

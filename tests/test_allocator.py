@@ -1,9 +1,22 @@
-"""Allocator unit + hypothesis property tests (paper §3.4 invariants)."""
+"""Allocator unit + property tests (paper §3.4 invariants).
+
+The property tests prefer ``hypothesis``; when it is not installed they fall
+back to the same checks over seeded pseudo-random operation sequences, so the
+suite collects and runs from a clean environment (test deps are pinned in
+``requirements.txt`` / ``pyproject.toml``).
+"""
+import random
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.allocator import BalancedAllocator as BA
 from repro.core.allocator import GenericAllocator as GA
@@ -99,12 +112,20 @@ def test_balanced_grid_parallel():
 # Property tests: no two live allocations overlap; find_obj is exact
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(
-    st.tuples(st.sampled_from(["malloc", "free"]),
-              st.integers(1, 40), st.integers(0, 7)),
-    min_size=1, max_size=30))
-def test_generic_no_overlap_property(ops):
+def _random_generic_ops(seed: int):
+    rng = random.Random(seed)
+    return [(rng.choice(["malloc", "free"]), rng.randint(1, 40),
+             rng.randint(0, 7)) for _ in range(rng.randint(1, 30))]
+
+
+def _random_balanced_ops(seed: int):
+    rng = random.Random(seed)
+    return [(rng.choice(["malloc", "free"]), rng.randint(1, 30),
+             rng.randint(0, 3), rng.randint(0, 1), rng.randint(0, 7))
+            for _ in range(rng.randint(1, 25))]
+
+
+def _check_generic_no_overlap(ops):
     s = GA.init(512, cap=64)
     live = {}
     for kind, size, idx in ops:
@@ -130,13 +151,7 @@ def test_generic_no_overlap_property(ops):
         assert bool(found) and int(base) == p and int(fsize) >= sz
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.lists(
-    st.tuples(st.sampled_from(["malloc", "free"]),
-              st.integers(1, 30), st.integers(0, 3), st.integers(0, 1),
-              st.integers(0, 7)),
-    min_size=1, max_size=25))
-def test_balanced_no_overlap_property(ops):
+def _check_balanced_no_overlap(ops):
     s = BA.init(1024, 4, 2, cap=32, first_chunk_ratio=2.0)
     live = {}
     for kind, size, tid, team, idx in ops:
@@ -162,3 +177,30 @@ def test_balanced_no_overlap_property(ops):
     for p, sz in live.items():
         c = int(np.searchsorted(starts, p, side="right")) - 1
         assert p + sz <= int(starts[c]) + int(sizes_[c])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["malloc", "free"]),
+                  st.integers(1, 40), st.integers(0, 7)),
+        min_size=1, max_size=30))
+    def test_generic_no_overlap_property(ops):
+        _check_generic_no_overlap(ops)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["malloc", "free"]),
+                  st.integers(1, 30), st.integers(0, 3), st.integers(0, 1),
+                  st.integers(0, 7)),
+        min_size=1, max_size=25))
+    def test_balanced_no_overlap_property(ops):
+        _check_balanced_no_overlap(ops)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_generic_no_overlap_property(seed):
+        _check_generic_no_overlap(_random_generic_ops(seed))
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_balanced_no_overlap_property(seed):
+        _check_balanced_no_overlap(_random_balanced_ops(seed))

@@ -135,6 +135,7 @@ def test_hierarchical_psum_multipod():
     out = run_child(r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.core.jax_compat import shard_map
 from repro.distributed.collectives import hierarchical_psum
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -142,13 +143,13 @@ mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 def f(x):
     return hierarchical_psum(x, intra_axis="data", inter_axis="pod")
 
-g = jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
-                  out_specs=P(("pod", "data")), check_vma=False)
+g = shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+              out_specs=P(("pod", "data")), check_vma=False)
 x = jnp.arange(8.0)
 out = np.asarray(jax.jit(g)(x))
 # psum over (pod,data) of per-shard values, replicated back per shard:
 # shards hold [0,1],[2,3],[4,5],[6,7] pairs; model axis replicates
-expect = np.asarray(jax.jit(jax.shard_map(
+expect = np.asarray(jax.jit(shard_map(
     lambda x: jax.lax.psum(x, ("pod", "data")), mesh=mesh,
     in_specs=P(("pod", "data")), out_specs=P(("pod", "data")),
     check_vma=False))(x))

@@ -1,0 +1,392 @@
+"""RPC transport v2 (paper §3.2): order-preserving marshalling, cached
+landing pads, dispatch-time callee resolution, the batched RpcQueue, and the
+pure_callback fast path.
+
+``test_arg_order_value_after_ref`` is the regression test for the v1
+marshalling bug: value args were grouped before ref args, so any call site
+with a value argument AFTER a ``Ref`` handed the host function its arguments
+in the wrong positions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocator import GenericAllocator as GA
+from repro.core.device_main import HostHook, device_run
+from repro.core.rpc import (
+    READ, READWRITE, REGISTRY, ArenaRef, Ref, RpcQueue, host_rpc, pad_stats,
+    pad_table, queue_drops, reset_rpc_stats, rpc_call, rpc_stats)
+
+I32 = jax.ShapeDtypeStruct((), jnp.int32)
+F32 = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Order-preserving marshalling
+# ---------------------------------------------------------------------------
+
+def test_arg_order_value_after_ref():
+    """Regression: fn(Ref, value) must reach the host as (array, scalar).
+
+    Under the v1 marshalling the host saw (scalar, array) — the scale landed
+    in the buffer slot and vice versa."""
+    seen = {}
+
+    @host_rpc(result_shape=F32)
+    def scale_buf(buf, scale):
+        seen["buf_is_array"] = isinstance(buf, np.ndarray) and buf.ndim == 1
+        seen["scale"] = float(scale)
+        buf[:] = buf * np.float32(scale)
+        return np.float32(scale)
+
+    @jax.jit
+    def prog(x):
+        r, (buf,) = scale_buf.rpc(Ref(x, access=READWRITE), jnp.float32(3.0))
+        return r, buf
+
+    r, buf = prog(jnp.ones(4, jnp.float32))
+    assert float(r) == 3.0
+    assert seen["buf_is_array"] and seen["scale"] == 3.0
+    np.testing.assert_allclose(buf, 3.0)
+
+
+def test_arg_order_interleaved():
+    """val, Ref, val, Ref arrives exactly as written at the call site."""
+    seen = {}
+
+    @host_rpc(result_shape=I32)
+    def interleaved(a, buf1, b, buf2):
+        seen["order"] = (float(a), buf1.shape, float(b), buf2.shape)
+        buf1[:] = float(a)
+        buf2[:] = float(b)
+        return np.int32(0)
+
+    @jax.jit
+    def prog(x, y):
+        _, (b1, b2) = interleaved.rpc(
+            jnp.float32(1.0), Ref(x), jnp.float32(2.0), Ref(y))
+        return b1, b2
+
+    b1, b2 = prog(jnp.zeros(3, jnp.float32), jnp.zeros(5, jnp.float32))
+    assert seen["order"] == (1.0, (3,), 2.0, (5,))
+    np.testing.assert_allclose(b1, 1.0)
+    np.testing.assert_allclose(b2, 2.0)
+
+
+# ---------------------------------------------------------------------------
+# ArenaRef: runtime object lookup, in-place expansion
+# ---------------------------------------------------------------------------
+
+def test_arena_ref_host_view():
+    """malloc -> ArenaRef RPC: host sees correct (ptr, base, size, found)."""
+    st = GA.init(64, cap=8)
+    st, p1 = GA.malloc(st, 16)
+    st, p2 = GA.malloc(st, 8)
+    seen = {}
+
+    @host_rpc(result_shape=I32)
+    def inspect(ptr, base, size, found, arena):
+        seen.update(ptr=int(ptr), base=int(base), size=int(size),
+                    found=int(found))
+        arena[int(base):int(base) + int(size)] = 9.0
+        return np.int32(0)
+
+    @jax.jit
+    def prog(state, arena, ptr):
+        _, (arena,) = rpc_call(
+            "inspect", ArenaRef(arena, ptr, state, access=READWRITE),
+            result_shape=I32)
+        return arena
+
+    # ptr into the middle of the second object: base/size of the OBJECT ship
+    arena = prog(st, jnp.zeros(64, jnp.float32), p2 + 3)
+    assert seen == {"ptr": int(p2) + 3, "base": int(p2), "size": 8, "found": 1}
+    np.testing.assert_allclose(arena[int(p2):int(p2) + 8], 9.0)
+    np.testing.assert_allclose(arena[:int(p2)], 0.0)
+
+
+def test_arena_ref_not_found_ships_zero():
+    """A pointer outside any live object ships found == 0."""
+    st = GA.init(64, cap=8)
+    st, p = GA.malloc(st, 8)
+    st = GA.free(st, p)
+    seen = {}
+
+    @host_rpc(result_shape=I32)
+    def probe(ptr, base, size, found, arena):
+        seen["found"] = int(found)
+        return np.int32(0)
+
+    @jax.jit
+    def prog(state, arena, ptr):
+        r, _ = rpc_call("probe", ArenaRef(arena, ptr, state), result_shape=I32)
+        return r
+
+    prog(st, jnp.zeros(64, jnp.float32), jnp.int32(40))
+    jax.effects_barrier()
+    assert seen["found"] == 0
+
+
+def test_arena_ref_between_values_keeps_order():
+    """value, ArenaRef, value: the ArenaRef expands IN PLACE to
+    (ptr, base, size, found, arena) at its call-site position."""
+    st = GA.init(32, cap=4)
+    st, p = GA.malloc(st, 4)
+    seen = {}
+
+    @host_rpc(result_shape=I32)
+    def mixed(a, ptr, base, size, found, arena, b):
+        seen.update(a=float(a), found=int(found), size=int(size), b=float(b))
+        return np.int32(0)
+
+    @jax.jit
+    def prog(state, arena, ptr):
+        r, _ = rpc_call("mixed", jnp.float32(1.5),
+                        ArenaRef(arena, ptr, state, access=READ),
+                        jnp.float32(2.5), result_shape=I32)
+        return r
+
+    prog(st, jnp.zeros(32, jnp.float32), p)
+    jax.effects_barrier()
+    assert seen == {"a": 1.5, "found": 1, "size": 4, "b": 2.5}
+
+
+# ---------------------------------------------------------------------------
+# Landing pads: cached wrappers, dispatch-time resolution, per-pad stats
+# ---------------------------------------------------------------------------
+
+def test_reregister_host_fn_rebinds_compiled_stub():
+    """Re-registering a host function under the same name takes effect for
+    already-traced AND already-compiled stubs (v1 captured the callee at
+    wrapper-creation time, making re-registration a silent no-op)."""
+    REGISTRY.register("rereg.target", lambda x: np.int32(1))
+
+    @jax.jit
+    def prog(x):
+        r, _ = rpc_call("rereg.target", x, result_shape=I32)
+        return r
+
+    assert int(prog(jnp.int32(0))) == 1
+    REGISTRY.register("rereg.target", lambda x: np.int32(2))
+    assert int(prog(jnp.int32(0))) == 2        # same executable, new callee
+
+
+def test_pad_cached_wrapper_and_stats():
+    reset_rpc_stats()
+
+    @host_rpc(result_shape=I32)
+    def padded(a, buf):
+        return np.int32(int(a))
+
+    def prog(x):
+        r, _ = padded.rpc(jnp.int32(7), Ref(x, access=READ))
+        return r
+
+    # two separate traces of the same signature -> ONE pad, one wrapper
+    assert int(jax.jit(prog)(jnp.zeros(4, jnp.float32))) == 7
+    assert int(jax.jit(prog)(jnp.zeros(4, jnp.float32))) == 7
+    assert rpc_stats("padded")["pads"] == 1
+    assert rpc_stats("padded")["calls"] == 2
+
+    pads = {pid: key for pid, key in pad_table().items()
+            if key[0] == "padded"}
+    assert len(pads) == 1
+    (pid, key), = pads.items()
+    assert key[1][0] == "val" and key[2][0] == "ref"
+    assert pad_stats(pid)["calls"] == 2
+    assert pad_stats(pid)["bytes_in"] > 0
+
+    # a second signature monomorphizes a second pad
+    @jax.jit
+    def prog2(x):
+        r, _ = padded.rpc(jnp.int32(1), Ref(x, access=READ))
+        return r
+
+    prog2(jnp.zeros(8, jnp.float32))
+    assert rpc_stats("padded")["pads"] == 2
+
+
+# ---------------------------------------------------------------------------
+# pure_callback fast path
+# ---------------------------------------------------------------------------
+
+def test_pure_fast_path():
+    @host_rpc(result_shape=I32, pure=True)
+    def double(x):
+        return np.int32(int(x) * 2)
+
+    @jax.jit
+    def prog(v):
+        r, _ = double.rpc(v)
+        return r + 1
+
+    assert int(prog(jnp.int32(21))) == 43
+
+
+def test_pure_rejects_writeback_refs():
+    @host_rpc(result_shape=I32, pure=True)
+    def impure(buf):
+        return np.int32(0)
+
+    with pytest.raises(ValueError, match="write/readwrite"):
+        jax.jit(lambda x: impure.rpc(Ref(x, access=READWRITE))[0])(
+            jnp.zeros(2, jnp.float32))
+
+    # READ refs are fine on the pure path
+    r, _ = jax.jit(lambda x: impure.rpc(Ref(x, access=READ)))(
+        jnp.zeros(2, jnp.float32))
+    assert int(r) == 0
+
+
+# ---------------------------------------------------------------------------
+# Batched transport: RpcQueue
+# ---------------------------------------------------------------------------
+
+def test_queue_flush_preserves_order_and_types():
+    reset_rpc_stats()
+    seen = []
+    REGISTRY.register("q.alpha", lambda i, x: seen.append(("a", i, x)))
+    REGISTRY.register("q.beta", lambda flag, y: seen.append(("b", flag, y)))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(capacity=8, width=2)
+        q = q.enqueue("q.alpha", jnp.int32(1), jnp.float32(0.5))
+        q = q.enqueue("q.beta", jnp.bool_(True), jnp.float32(-2.0))
+        q = q.enqueue("q.alpha", jnp.int32(2), jnp.float32(1.5))
+        q = q.flush()
+        return q.head
+
+    head = prog()
+    jax.effects_barrier()
+    assert int(head) == 0
+    # enqueue order replayed exactly; int lanes come back as python ints,
+    # float lanes as floats
+    assert seen == [("a", 1, 0.5), ("b", 1, -2.0), ("a", 2, 1.5)]
+    assert all(isinstance(rec[1], int) and isinstance(rec[2], float)
+               for rec in seen)
+    assert rpc_stats("q.alpha")["calls"] == 2
+    assert rpc_stats("q.beta")["calls"] == 1
+
+
+def test_queue_overflow_drops_oldest():
+    reset_rpc_stats()
+    seen = []
+    REGISTRY.register("q.over", lambda i: seen.append(i))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(capacity=4, width=1)
+        for i in range(6):
+            q = q.enqueue("q.over", jnp.int32(i))
+        q.flush()
+        return jnp.int32(0)
+
+    prog()
+    jax.effects_barrier()
+    assert seen == [2, 3, 4, 5]          # oldest two overwritten
+    assert queue_drops() == 2
+
+
+def test_queue_rejects_nonscalar_and_overwidth():
+    REGISTRY.register("q.bad", lambda *a: None)
+    q = RpcQueue.create(capacity=2, width=1)
+    with pytest.raises(ValueError, match="width"):
+        q.enqueue("q.bad", jnp.int32(0), jnp.int32(1))
+    with pytest.raises(ValueError, match="scalar"):
+        q.enqueue("q.bad", jnp.zeros(3, jnp.float32))
+    with pytest.raises(KeyError):
+        q.enqueue("q.unregistered", jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# Batched HostHooks through device_run
+# ---------------------------------------------------------------------------
+
+def test_batched_hook_fires_on_schedule():
+    seen = []
+    hook = HostHook(every=3, extract=lambda i, s: {"v": s},
+                    host_fn=lambda i, v: seen.append((i, v)),
+                    name="hook.batched_test", batched=True)
+    final = device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 10,
+                       hooks=[hook], donate=False)
+    jax.effects_barrier()
+    assert float(final) == 10.0
+    # identical schedule and payloads to the immediate hook, but delivered by
+    # ONE flush after the loop, in firing order
+    assert seen == [(3, 3.0), (6, 6.0), (9, 9.0)]
+
+
+def test_queue_conditional_enqueue():
+    """enqueue(where=...) commits the record iff the mask is true, without
+    touching the rest of the queue."""
+    seen = []
+    REGISTRY.register("q.cond", lambda i: seen.append(i))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(4, width=1)
+        for i in range(4):
+            q = q.enqueue("q.cond", jnp.int32(i), where=jnp.bool_(i % 2 == 1))
+        q.flush()
+        return q.head
+
+    head = prog()
+    jax.effects_barrier()
+    assert int(head) == 2
+    assert seen == [1, 3]
+
+
+def test_flush_handlers_captured_per_program():
+    """A sink passed to flush is baked into THAT compiled program: two
+    programs flushing same-named rings keep their own sinks across
+    alternating re-executions (the v1 closure semantics)."""
+    from repro.core.libc import LogRing
+    a, b = [], []
+
+    @jax.jit
+    def fa(r):
+        return r.log(1, 1.0).flush(sink=lambda t, v: a.append((t, v)))
+
+    @jax.jit
+    def fb(r):
+        return r.log(2, 2.0).flush(sink=lambda t, v: b.append((t, v)))
+
+    r = LogRing.create(4)
+    fa(r)
+    fb(r)
+    fa(r)            # re-execution of the cached program: must still use sink a
+    jax.effects_barrier()
+    assert a == [(1, 1.0), (1, 1.0)]
+    assert b == [(2, 2.0)]
+
+
+def test_named_log_rings_isolate_sinks():
+    """Rings created with distinct names deliver to distinct sinks even
+    when flushed with different sinks in the same process."""
+    from repro.core.libc import LogRing
+    a_lines, b_lines = [], []
+    ra = LogRing.create(4, name="sink.a").log(1, 1.0)
+    rb = LogRing.create(4, name="sink.b").log(2, 2.0)
+    ra.flush(sink=lambda t, v: a_lines.append((t, v)))
+    rb.flush(sink=lambda t, v: b_lines.append((t, v)))
+    jax.effects_barrier()
+    assert a_lines == [(1, 1.0)]
+    assert b_lines == [(2, 2.0)]
+
+
+def test_mixed_immediate_and_batched_hooks():
+    now, later = [], []
+    hooks = [
+        HostHook(every=2, extract=lambda i, s: s,
+                 host_fn=lambda i, v: now.append(i), name="hook.now"),
+        HostHook(every=5, extract=lambda i, s: s,
+                 host_fn=lambda i, v: later.append(i), name="hook.later",
+                 batched=True),
+    ]
+    device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 10, hooks=hooks,
+               donate=False)
+    jax.effects_barrier()
+    assert now == [2, 4, 6, 8, 10]
+    assert later == [5, 10]
