@@ -1,51 +1,191 @@
-"""Paper Fig. 6: balanced allocator vs generic allocator.
+"""Paper Fig. 6: allocator throughput — v1 (serial/scan) vs v2 (vectorized).
 
 All threads of all teams allocate a region at a parallel-region entry, use it
-briefly, and free it at the exit — the SPEC-OMP-style stress pattern.  The
-generic allocator serializes on one shared structure; the balanced allocator's
-chunks process their request streams independently (vmapped), the paper's
-per-chunk-lock concurrency.
+briefly, and free it at the exit — the SPEC-OMP-style stress pattern.  Three
+contestants per grid:
+
+  generic       one shared structure, ``lax.scan`` over requests — the
+                paper's single-lock serial baseline;
+  balanced v1   chunked, but each chunk folds its request stream through
+                ``lax.scan`` and frees reclaim with a ``while_loop`` (the
+                PR-1 state of the art, kept as ``malloc_grid_scan``);
+  balanced v2   chunked AND vectorized: each chunk's stream is ONE
+                prefix-sum bulk step; frees are one suffix-scan reclaim.
+
+Plus the v2 size-class heap's flat bulk path for reference.
+
+The second half measures ``find_obj`` — the paper's ``_FindObj``, which the
+RPC layer runs on EVERY pointer argument it marshals — through the actual
+``ArenaRef`` marshalling path, contrasting the v1 O(cap) linear scan with
+the v2 O(log cap) sorted-offset index at cap ∈ {256, 4096}.
+
+Results are emitted as CSV rows AND returned as a perf-trajectory artifact
+dict; ``benchmarks/run.py`` (or running this module directly) writes it to
+``BENCH_allocator.json`` so future PRs can diff allocator performance.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_artifact
+from repro.core import rpc as rpc_mod
 from repro.core.allocator import BalancedAllocator as BA
 from repro.core.allocator import GenericAllocator as GA
+from repro.core.allocator import SizeClassAllocator as SC
+from repro.core.allocator import find_obj_linear
 
 GRIDS = [(1, 1), (8, 4), (16, 8), (32, 16)]
+FIND_OBJ_CAPS = [256, 4096]
+FIND_OBJ_PROBES = 256
 
 
-def run() -> None:
+def _grid_section(artifact: dict) -> None:
     for threads, teams in GRIDS:
         n = threads * teams
         N_SLOTS, M_SLOTS = min(threads, 8), min(teams, 4)
+        cap = max(n // 4, 8) * 4
         sizes_grid = jnp.full((threads, teams), 8, jnp.int32)
         sizes_flat = jnp.full((n,), 8, jnp.int32)
 
         @jax.jit
-        def balanced_roundtrip(sizes):
-            st = BA.init(n * 64, N_SLOTS, M_SLOTS, cap=max(n // 4, 8) * 4)
+        def balanced_v2(sizes):
+            st = BA.init(n * 64, N_SLOTS, M_SLOTS, cap=cap)
             st, ptrs = BA.malloc_grid(st, threads, teams, sizes)
             st = BA.free_grid(st, threads, teams, ptrs)
             return st.watermark
 
         @jax.jit
-        def generic_roundtrip(sizes):
-            st = GA.init(n * 64, cap=4 * n)
-            st, ptrs = GA.malloc_many(st, sizes)
-            st = GA.free_many(st, ptrs)
+        def balanced_v1(sizes):
+            st = BA.init(n * 64, N_SLOTS, M_SLOTS, cap=cap)
+            st, ptrs = BA.malloc_grid_scan(st, threads, teams, sizes)
+            st = BA.free_grid_scan(st, threads, teams, ptrs)
             return st.watermark
 
-        tb = time_fn(balanced_roundtrip, sizes_grid)
-        tg = time_fn(generic_roundtrip, sizes_flat)
-        emit(f"fig6/alloc_{threads}x{teams}/balanced", tb / n * 1e6,
-             f"total_us={tb*1e6:.1f}")
-        emit(f"fig6/alloc_{threads}x{teams}/generic", tg / n * 1e6,
-             f"balanced_speedup={tg/tb:.2f}x")
+        @jax.jit
+        def generic_serial(sizes):
+            st = GA.init(n * 64, cap=4 * n)
+            st, ptrs = GA.malloc_many_serial(st, sizes)
+            st = GA.free_many_serial(st, ptrs)
+            return st.watermark
+
+        @jax.jit
+        def sizeclass_bulk(sizes):
+            st = SC.init(n * 64, cap=4 * n)
+            st, ptrs = SC.malloc_many(st, sizes)
+            st = SC.free_many(st, ptrs)
+            return st.watermark
+
+        t2 = time_fn(balanced_v2, sizes_grid)
+        t1 = time_fn(balanced_v1, sizes_grid)
+        tg = time_fn(generic_serial, sizes_flat)
+        tsc = time_fn(sizeclass_bulk, sizes_flat)
+        key = f"{threads}x{teams}"
+        emit(f"fig6/alloc_{key}/generic", tg / n * 1e6,
+             f"total_us={tg*1e6:.1f}")
+        emit(f"fig6/alloc_{key}/balanced_v1", t1 / n * 1e6,
+             f"speedup_vs_generic={tg/t1:.2f}x")
+        emit(f"fig6/alloc_{key}/balanced_v2", t2 / n * 1e6,
+             f"speedup_vs_v1={t1/t2:.2f}x")
+        emit(f"fig6/alloc_{key}/sizeclass_bulk", tsc / n * 1e6,
+             f"speedup_vs_generic={tg/tsc:.2f}x")
+        artifact["grids"][key] = {
+            "generic_us_per_alloc": tg / n * 1e6,
+            "balanced_v1_us_per_alloc": t1 / n * 1e6,
+            "balanced_v2_us_per_alloc": t2 / n * 1e6,
+            "sizeclass_bulk_us_per_alloc": tsc / n * 1e6,
+            "v2_speedup_vs_v1": t1 / t2,
+            "v2_speedup_vs_generic": tg / t2,
+        }
+
+
+def _marshal_probe():
+    """A fresh jitted ArenaRef-marshalling probe.
+
+    Each call returns a NEW function object with its own jit cache, so the
+    ``find_obj`` implementation active at first trace (see
+    ``rpc.set_find_obj_impl``) is baked into that probe's compiled program —
+    letting one process measure both the v1 and v2 lookup through the real
+    marshalling path."""
+
+    @jax.jit
+    def probe(state, arena, ptrs):
+        def one(p):
+            _, operands, _ = rpc_mod._marshal(
+                [rpc_mod.ArenaRef(arena, p, state, access=rpc_mod.READ)])
+            # operands = [ptr, base, size, found, arena]
+            return operands[1], operands[2], operands[3]
+
+        return jax.vmap(one)(ptrs)
+
+    return probe
+
+
+def _find_obj_section(artifact: dict) -> None:
+    if "bench.noop" not in rpc_mod.REGISTRY.hosts:
+        rpc_mod.REGISTRY.register(
+            "bench.noop", lambda *a: np.int32(0))
+
+    for cap in FIND_OBJ_CAPS:
+        heap = 8 * cap
+        st = GA.init(heap, cap=cap)
+        # fill the tracking table so the lookup cost is realistic
+        st, ptrs = GA.malloc_many(st, jnp.full((cap - 1,), 8, jnp.int32))
+        arena = jnp.zeros((heap,), jnp.float32)
+        rng = np.random.default_rng(0)
+        live = np.asarray(ptrs)
+        probes = jnp.asarray(
+            rng.choice(live, FIND_OBJ_PROBES) + rng.integers(
+                0, 8, FIND_OBJ_PROBES), jnp.int32)
+
+        try:
+            rpc_mod.set_find_obj_impl(find_obj_linear)
+            probe_lin = _marshal_probe()
+            t_lin = time_fn(probe_lin, st, arena, probes)
+        finally:
+            rpc_mod.set_find_obj_impl(None)
+        probe_v2 = _marshal_probe()
+        t_v2 = time_fn(probe_v2, st, arena, probes)
+
+        # sanity: both paths marshal identical (base, size, found)
+        for a, b in zip(probe_lin(st, arena, probes),
+                        probe_v2(st, arena, probes)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        @jax.jit
+        def rpc_roundtrip(state, arena, ptr):
+            r, _ = rpc_mod.rpc_call(
+                "bench.noop",
+                rpc_mod.ArenaRef(arena, ptr, state, access=rpc_mod.READ),
+                result_shape=jax.ShapeDtypeStruct((), jnp.int32))
+            return r
+
+        t_rpc = time_fn(rpc_roundtrip, st, arena, probes[0])
+
+        lin_us = t_lin / FIND_OBJ_PROBES * 1e6
+        v2_us = t_v2 / FIND_OBJ_PROBES * 1e6
+        emit(f"fig6/find_obj_cap{cap}/linear_v1", lin_us,
+             f"probes={FIND_OBJ_PROBES}")
+        emit(f"fig6/find_obj_cap{cap}/sorted_v2", v2_us,
+             f"speedup_vs_linear={t_lin/t_v2:.2f}x")
+        emit(f"fig6/find_obj_cap{cap}/rpc_roundtrip", t_rpc * 1e6,
+             "one ArenaRef io_callback round")
+        artifact["find_obj"][f"cap{cap}"] = {
+            "linear_us_per_lookup": lin_us,
+            "sorted_us_per_lookup": v2_us,
+            "v2_speedup_vs_linear": t_lin / t_v2,
+            "rpc_roundtrip_us": t_rpc * 1e6,
+        }
+
+
+def run() -> dict:
+    artifact = {"name": "allocator", "schema": 1, "grids": {},
+                "find_obj": {}}
+    _grid_section(artifact)
+    _find_obj_section(artifact)
+    return artifact
 
 
 if __name__ == "__main__":
-    run()
+    write_artifact("BENCH_allocator.json", run())

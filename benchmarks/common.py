@@ -12,12 +12,28 @@ the *ratios* are the reproduction target.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict
 
 import jax
 
 ROWS = []
+
+
+def write_artifact(filename: str, payload: Dict) -> str:
+    """Write a perf-trajectory artifact (JSON) for CI to upload.
+
+    Target directory comes from ``$BENCH_ARTIFACT_DIR`` (default: cwd), so
+    CI can collect artifacts without knowing which suites produce them.
+    """
+    path = os.path.join(os.environ.get("BENCH_ARTIFACT_DIR", "."), filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# artifact: {path}", flush=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

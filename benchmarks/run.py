@@ -1,6 +1,11 @@
 """Benchmark entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  A suite whose ``run()``
+returns a dict with a ``name`` key additionally emits a perf-trajectory
+artifact ``BENCH_<name>.json`` (to ``$BENCH_ARTIFACT_DIR`` or cwd) that CI
+uploads, so future PRs can diff performance — ``fig6_allocator`` emits
+``BENCH_allocator.json`` (per-grid µs/alloc for generic vs balanced v1 vs
+v2, and the find_obj v1-vs-v2 contrast).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
 """
@@ -13,6 +18,7 @@ import traceback
 from benchmarks import (allocator_bench, amgmk_pagerank_bench, hypterm_bench,
                         interleaved_bench, roofline, rpc_bench, rsbench_bench,
                         spec_bench, xsbench_bench)
+from benchmarks.common import write_artifact
 
 SUITES = {
     "fig6_allocator": allocator_bench.run,
@@ -41,7 +47,9 @@ def main(argv=None) -> int:
             continue
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            result = fn()
+            if isinstance(result, dict) and result.get("name"):
+                write_artifact(f"BENCH_{result['name']}.json", result)
         except Exception:
             failures += 1
             traceback.print_exc()

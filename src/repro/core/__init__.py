@@ -7,7 +7,9 @@
   libc        — partial device libc (C3: §3.4)
 """
 from repro.core.allocator import (
-    BalancedAllocator, BalancedState, GenericAllocator, GenericState)
+    BalancedAllocator, BalancedState, GenericAllocator, GenericState,
+    SizeClassAllocator, SizeClassState, allocator_for, find_obj,
+    find_obj_linear)
 from repro.core.device_main import HostHook, device_run, host_driven_run
 from repro.core.expand import (
     barrier, expand, num_teams, num_threads, parallel_for, serial_for,
@@ -19,6 +21,8 @@ from repro.core.rpc import (
 
 __all__ = [
     "BalancedAllocator", "BalancedState", "GenericAllocator", "GenericState",
+    "SizeClassAllocator", "SizeClassState", "allocator_for", "find_obj",
+    "find_obj_linear",
     "HostHook", "device_run", "host_driven_run",
     "barrier", "expand", "num_teams", "num_threads", "parallel_for",
     "serial_for", "team_id", "thread_id", "ws_range",

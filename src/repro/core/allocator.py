@@ -1,4 +1,4 @@
-"""Heap allocators and allocation tracking (paper §3.4), JAX-traceable.
+"""Heap allocators and allocation tracking (paper §3.4), JAX-traceable — v2.
 
 XLA owns all device memory, so — exactly like the paper's allocators, which
 only manage a preallocated heap slab — these allocators manage *offsets into a
@@ -7,29 +7,85 @@ is pure ``jnp``/``lax``, so allocation runs **inside** jitted device code (the
 whole point of GPU First: the program, including its heap, lives on the
 accelerator).
 
-Two allocators, as in the paper:
+The paper's §3.4 / Fig. 6 argument is that a device-resident heap is only
+viable when allocation does not serialize the machine.  v1 still had the
+serial shape in traced form: batched requests folded through ``lax.scan``,
+free reclaimed the watermark with a data-dependent ``lax.while_loop``, and
+``find_obj`` — run by the RPC layer on *every* pointer argument it marshals —
+was an O(cap) masked scan.  v2 rebuilds every hot path around vectorized
+primitives:
 
-* :class:`GenericAllocator` — one global allocation list + free-list reuse
-  (first fit).  Every request walks shared state: the JAX analogue of the
-  paper's single-lock design, and exactly as serial.
+* **Prefix-sum bulk allocation** — a batch of k requests against one region
+  becomes ``cumsum(sizes)`` + one watermark bump.  Request i's offset is the
+  exclusive prefix sum of the successful requests before it; the success mask
+  itself is the unique fixed point of a vectorized refinement map
+  (:func:`_serial_fit_mask`), so bulk results are *bit-identical to the serial
+  scan* (a request that fails does not advance the watermark for its
+  successors) while the scan itself is gone.  Bulk paths are watermark-only by
+  design: they never reuse freed holes (use the single-request entry points
+  for that).
+
+* **Vectorized watermark reclaim** — freeing pops every dead entry off the
+  top of a region's entry stack in one suffix scan (:func:`_suffix_reclaim`)
+  instead of a data-dependent ``while_loop``.
+
+* **Sorted-offset index** — entries are created at monotonically increasing
+  offsets and dead entry slots hold an ``INT32_MAX`` sentinel, so the offset
+  table is always globally sorted and ``find_obj`` / ``free`` resolve a
+  pointer with ``searchsorted`` in O(log cap) comparisons — the RPC
+  ``ArenaRef`` marshalling path (the paper's ``_FindObj``) rides this.
+
+* **Size-class segregated free lists** — :class:`SizeClassAllocator` bins
+  freed blocks into power-of-two classes whose membership is a bitmask
+  occupancy word array, so single-request reuse is an O(#classes) bit trick
+  (class summary -> first eligible class -> lowest set bit via ``lax.clz``)
+  instead of an O(cap) first-fit scan.
+
+Three allocators:
+
+* :class:`GenericAllocator` — one global allocation list + first-fit hole
+  reuse.  The JAX analogue of the paper's single-lock design; its
+  ``*_serial`` bulk entry points keep the v1 ``lax.scan`` shape as the Fig. 6
+  serial contrast, while ``malloc_many``/``free_many`` are the vectorized
+  bulk paths.
+
+* :class:`SizeClassAllocator` — the v2 segregated heap: generic single-list
+  layout + size-class bitmask free lists for O(#classes) reuse.  Freed blocks
+  go to their capacity's class bin rather than being reclaimed; ``free`` of a
+  block recorded with capacity in ``[2^c, 2^(c+1))`` lands in class ``c``, and
+  a request of ``size`` searches classes ``>= ceil_log2(size)`` (classic
+  segregated fit: every hit is guaranteed to be large enough; a block may be
+  skipped by requests within 2x of its capacity — bounded internal
+  fragmentation instead of a scan).
 
 * :class:`BalancedAllocator` — the heap is split into N (thread slots) x
   M (team slots) chunks; chunk 0 is larger by a configurable ratio (the
   initial thread allocates big serial-phase objects).  Entries form a
   watermark stack per chunk (paper Fig. 5): frees mark entries unused without
-  moving memory; the top of the stack is reclaimed eagerly, trading
-  fragmentation for O(1) alloc/free in balanced lifetime patterns.  Chunks are
-  independent, so batched requests process **in parallel across chunks**
-  (``vmap``) — the per-chunk-lock concurrency story, TPU-style.
+  moving memory; the top of the stack is reclaimed eagerly.  Chunks are
+  independent, so grid-batched requests process **in parallel across chunks**
+  (``vmap`` of the prefix-sum bulk kernel) — the per-chunk-lock concurrency
+  story, TPU-style.  ``malloc_grid_scan``/``free_grid_scan`` keep the v1
+  per-chunk ``lax.scan`` as the measured before/after contrast
+  (``benchmarks/allocator_bench.py`` records it in ``BENCH_allocator.json``).
+
+Failure discipline (v2): ``malloc`` of ``size <= 0`` fails (returns
+:data:`FAIL`) without touching state, and ``free``/``find_obj`` of
+:data:`FAIL` or any out-of-arena pointer are guaranteed no-ops
+(``found=False``) — a FAIL pointer can never clamp into chunk 0 and corrupt a
+live entry.
 
 Allocation tracking doubles as the RPC layer's runtime object lookup
-(``find_obj`` == the paper's ``_FindObj``), used to ship *underlying objects*
-of pointer arguments to the host (§3.2).
+(:func:`find_obj` == the paper's ``_FindObj``), used to ship *underlying
+objects* of pointer arguments to the host (§3.2).  ``find_obj`` reports the
+*requested* size of a block (what the caller asked for), not the capacity of
+the hole that satisfied it; capacities are tracked separately for reuse.
+:func:`find_obj_linear` preserves the v1 O(cap) masked scan as a reference
+for benchmarks and property cross-checks.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Tuple
 
 import jax
@@ -37,7 +93,148 @@ import jax.numpy as jnp
 from jax import lax
 
 I32 = jnp.int32
+U32 = jnp.uint32
 FAIL = jnp.int32(-1)
+#: Sentinel offset for entry slots that hold no entry (never created, or
+#: popped by watermark reclaim).  Keeping dead slots at INT32_MAX preserves
+#: the global sortedness of the offset table, which is what makes
+#: ``searchsorted`` lookups valid.
+DEAD = jnp.int32(jnp.iinfo(jnp.int32).max)
+#: Power-of-two size classes cover every positive int32 size.
+NCLASSES = 32
+
+
+# ---------------------------------------------------------------------------
+# Vectorized primitives shared by all allocators
+# ---------------------------------------------------------------------------
+
+def _ceil_log2(x: jax.Array) -> jax.Array:
+    """Smallest c with 2**c >= x (x >= 1)."""
+    return (jnp.int32(32) - lax.clz(jnp.maximum(x, 1) - 1)).astype(I32)
+
+
+def _floor_log2(x: jax.Array) -> jax.Array:
+    """Largest c with 2**c <= x (x >= 1)."""
+    return (jnp.int32(31) - lax.clz(jnp.maximum(x, 1))).astype(I32)
+
+
+def _serial_fit_mask(sizes: jax.Array, wm, limit, count, cap: int
+                     ) -> jax.Array:
+    """Exact success mask of serially processing ``sizes`` against a region.
+
+    Serial semantics: request i succeeds iff ``wm + sum(successful j<i) +
+    sizes[i] <= limit`` and ``count + #successful j<i < cap`` and
+    ``sizes[i] > 0``.  That mask is the unique fixed point of the refinement
+    map below (by induction on i: a fixed point's decision for request i is
+    determined by its — identical — decisions for j < i), and iterating the
+    map fixes at least one more prefix position per pass, so the loop
+    converges in <= k passes (typically 2: one compute, one verify) of O(k)
+    vectorized work — no ``lax.scan`` over requests.
+    """
+    sizes = jnp.asarray(sizes, I32)
+    positive = sizes > 0
+
+    def refine(m):
+        taken = jnp.where(m, sizes, 0)
+        prev_bytes = jnp.cumsum(taken) - taken          # exclusive prefix
+        mi = m.astype(I32)
+        prev_n = jnp.cumsum(mi) - mi
+        return positive & (wm + prev_bytes + sizes <= limit) \
+            & (count + prev_n < cap)
+
+    def body(carry):
+        m, _ = carry
+        m2 = refine(m)
+        return m2, jnp.all(m2 == m)
+
+    m, _ = lax.while_loop(lambda c: ~c[1], body,
+                          (refine(positive), jnp.bool_(False)))
+    return m
+
+
+def _bulk_watermark_alloc(offsets, sizes, caps, in_use, count, wm, limit,
+                          req):
+    """Allocate a vector of requests from a region's watermark in one shot.
+
+    Returns ``(offsets, sizes, caps, in_use, count, wm, rel_ptrs)`` where
+    ``rel_ptrs[i]`` is request i's region-relative offset or :data:`FAIL`.
+    Offsets are the exclusive prefix sum of the successful requests, so the
+    result is identical to a serial scan of single mallocs (watermark path).
+    Failed / skipped (``size <= 0``) requests are dropped via out-of-bounds
+    scatter indices — no per-request control flow.
+    """
+    cap_entries = offsets.shape[0]
+    req = jnp.asarray(req, I32)
+    m = _serial_fit_mask(req, wm, limit, count, cap_entries)
+    mi = m.astype(I32)
+    taken = jnp.where(m, req, 0)
+    rel = wm + jnp.cumsum(taken) - taken               # exclusive prefix + wm
+    slot = count + jnp.cumsum(mi) - mi                 # entry index per req
+    idx = jnp.where(m, slot, cap_entries)              # OOB => dropped
+    offsets = offsets.at[idx].set(rel, mode="drop")
+    sizes = sizes.at[idx].set(req, mode="drop")
+    caps = caps.at[idx].set(req, mode="drop")
+    in_use = in_use.at[idx].set(1, mode="drop")
+    return (offsets, sizes, caps, in_use, count + jnp.sum(mi),
+            wm + jnp.sum(taken), jnp.where(m, rel, FAIL))
+
+
+def _suffix_reclaim(offsets, in_use, count, wm):
+    """Pop every dead entry off the top of a region's entry stack at once.
+
+    The v1 data-dependent ``lax.while_loop`` becomes one vectorized suffix
+    scan: the new stack top is one past the last live entry, the watermark
+    drops to the first popped entry's offset, and popped slots are
+    sentinelled to :data:`DEAD` (keeping the offset table sorted).
+    Returns ``(offsets, count, wm)``.
+    """
+    n = offsets.shape[0]
+    live = (in_use == 1) & (jnp.arange(n) < count)
+    has_live = jnp.any(live)
+    last_live = n - 1 - jnp.argmax(live[::-1]).astype(I32)
+    new_count = jnp.where(has_live, last_live + 1, 0)
+    popped = new_count < count
+    new_wm = jnp.where(popped, offsets[jnp.clip(new_count, 0, n - 1)], wm)
+    offsets = jnp.where(jnp.arange(n) >= new_count, DEAD, offsets)
+    return offsets, new_count, new_wm
+
+
+def _sorted_lookup(offsets, sizes, in_use, count, ptr):
+    """O(log cap) containing-object lookup over a sorted offset table.
+
+    Requires the sentinel discipline: ``offsets`` ascending with dead slots
+    at :data:`DEAD`.  Returns ``(found, base, size)``; ``base``/``size`` are
+    meaningful only when ``found``.
+    """
+    n = offsets.shape[0]
+    j = jnp.searchsorted(offsets, ptr, side="right").astype(I32) - 1
+    idx = jnp.clip(j, 0, n - 1)
+    found = (j >= 0) & (j < count) & (in_use[idx] == 1) \
+        & (ptr < offsets[idx] + sizes[idx])
+    return found, offsets[idx], sizes[idx]
+
+
+def _sorted_exact(offsets, in_use, count, ptr):
+    """O(log cap) exact-base lookup: ``(hit, idx)`` of the live entry whose
+    offset equals ``ptr``."""
+    n = offsets.shape[0]
+    j = jnp.searchsorted(offsets, ptr, side="left").astype(I32)
+    idx = jnp.clip(j, 0, n - 1)
+    hit = (j < count) & (offsets[idx] == ptr) & (in_use[idx] == 1)
+    return hit, idx
+
+
+def _bulk_freed_mask(offsets, in_use, count, limit, ptrs):
+    """Per-entry freed mask for a batch of pointers: k sorted exact lookups
+    (O(k log cap)) scattered back to entry space — not a (cap x k)
+    comparison matrix.  Invalid / unmatched pointers contribute nothing."""
+    n = offsets.shape[0]
+    valid = (ptrs >= 0) & (ptrs < limit)
+    hit, idx = jax.vmap(
+        lambda p: _sorted_exact(offsets, in_use, count, p))(ptrs)
+    hit = hit & valid
+    return jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(hit, idx, n)].set(True, mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -47,15 +244,16 @@ FAIL = jnp.int32(-1)
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GenericState:
-    offsets: jax.Array      # (CAP,) i32
-    sizes: jax.Array        # (CAP,) i32
+    offsets: jax.Array      # (CAP,) i32 — sorted; DEAD beyond count
+    sizes: jax.Array        # (CAP,) i32 — REQUESTED size (find_obj reports it)
+    caps: jax.Array         # (CAP,) i32 — block capacity (reuse fit checks)
     in_use: jax.Array       # (CAP,) i32 (0/1)
     count: jax.Array        # () i32  — entries ever created (stack top)
     watermark: jax.Array    # () i32
     heap_size: int
 
     def tree_flatten(self):
-        return ((self.offsets, self.sizes, self.in_use, self.count,
+        return ((self.offsets, self.sizes, self.caps, self.in_use, self.count,
                  self.watermark), self.heap_size)
 
     @classmethod
@@ -64,29 +262,37 @@ class GenericState:
 
 
 class GenericAllocator:
-    """Single free-list allocator; shared state => serialized semantics."""
+    """Single free-list allocator; shared state => serialized semantics.
+
+    Kept deliberately close to the paper's generic design (first-fit over one
+    global list) as the Fig. 6 serial contrast; the v2 upgrades it shares are
+    the sorted-offset ``find_obj``/``free`` and the prefix-sum bulk paths.
+    """
 
     @staticmethod
     def init(heap_size: int, cap: int = 4096) -> GenericState:
         z = jnp.zeros((cap,), I32)
-        return GenericState(z, z, z, jnp.zeros((), I32), jnp.zeros((), I32),
-                            heap_size)
+        return GenericState(jnp.full((cap,), DEAD), z, z, z,
+                            jnp.zeros((), I32), jnp.zeros((), I32), heap_size)
 
     @staticmethod
     def malloc(st: GenericState, size) -> Tuple[GenericState, jax.Array]:
         size = jnp.asarray(size, I32)
         cap = st.offsets.shape[0]
-        # 1) first-fit over freed entries
-        reusable = (st.in_use == 0) & (st.sizes >= size) & \
-            (jnp.arange(cap) < st.count)
+        # 1) first-fit over freed entries (capacity, not stale size, decides)
+        reusable = (st.in_use == 0) & (st.caps >= size) & \
+            (jnp.arange(cap) < st.count) & (size > 0)
         any_reuse = jnp.any(reusable)
         reuse_idx = jnp.argmax(reusable)
         # 2) bump the watermark
-        can_bump = (st.watermark + size <= st.heap_size) & (st.count < cap)
+        can_bump = (size > 0) & (st.watermark + size <= st.heap_size) & \
+            (st.count < cap)
 
         def do_reuse(st):
-            in_use = st.in_use.at[reuse_idx].set(1)
-            return dataclasses.replace(st, in_use=in_use), st.offsets[reuse_idx]
+            return dataclasses.replace(
+                st,
+                sizes=st.sizes.at[reuse_idx].set(size),
+                in_use=st.in_use.at[reuse_idx].set(1)), st.offsets[reuse_idx]
 
         def do_bump(st):
             def bump(st):
@@ -95,6 +301,7 @@ class GenericAllocator:
                     st,
                     offsets=st.offsets.at[i].set(st.watermark),
                     sizes=st.sizes.at[i].set(size),
+                    caps=st.caps.at[i].set(size),
                     in_use=st.in_use.at[i].set(1),
                     count=st.count + 1,
                     watermark=st.watermark + size), st.watermark
@@ -106,34 +313,202 @@ class GenericAllocator:
     @staticmethod
     def free(st: GenericState, ptr) -> GenericState:
         ptr = jnp.asarray(ptr, I32)
-        cap = st.offsets.shape[0]
-        hit = (st.offsets == ptr) & (st.in_use == 1) & \
-            (jnp.arange(cap) < st.count)
-        idx = jnp.argmax(hit)
-        in_use = jnp.where(jnp.any(hit), st.in_use.at[idx].set(0), st.in_use)
+        valid = (ptr >= 0) & (ptr < st.heap_size)
+        hit, idx = _sorted_exact(st.offsets, st.in_use, st.count, ptr)
+        hit = hit & valid
+        in_use = jnp.where(hit, st.in_use.at[idx].set(0), st.in_use)
         return dataclasses.replace(st, in_use=in_use)
 
     @staticmethod
-    def find_obj(st: GenericState, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    def find_obj(st: GenericState, ptr
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """The paper's ``_FindObj``: (found, base, size) of the underlying
-        object containing ``ptr``."""
+        object containing ``ptr`` — O(log cap) via the sorted offset table."""
         ptr = jnp.asarray(ptr, I32)
-        cap = st.offsets.shape[0]
-        live = (st.in_use == 1) & (jnp.arange(cap) < st.count)
-        inside = live & (st.offsets <= ptr) & (ptr < st.offsets + st.sizes)
-        idx = jnp.argmax(inside)
-        found = jnp.any(inside)
-        return found, st.offsets[idx], st.sizes[idx]
+        valid = (ptr >= 0) & (ptr < st.heap_size)
+        found, base, size = _sorted_lookup(st.offsets, st.sizes, st.in_use,
+                                           st.count, ptr)
+        return found & valid, base, size
 
     @staticmethod
-    def malloc_many(st: GenericState, sizes) -> Tuple[GenericState, jax.Array]:
-        """Batched allocation — necessarily serial (one shared structure)."""
-        return lax.scan(lambda s, sz: GenericAllocator.malloc(s, sz), st, sizes)
+    def malloc_many(st: GenericState, sizes
+                    ) -> Tuple[GenericState, jax.Array]:
+        """Prefix-sum bulk allocation: one cumsum + one watermark bump.
+
+        Identical to the serial scan on the watermark path (failures do not
+        advance the watermark for their successors); never reuses holes —
+        use :meth:`malloc` for first-fit reuse."""
+        offsets, szs, caps, in_use, count, wm, ptrs = _bulk_watermark_alloc(
+            st.offsets, st.sizes, st.caps, st.in_use, st.count, st.watermark,
+            st.heap_size, sizes)
+        return dataclasses.replace(
+            st, offsets=offsets, sizes=szs, caps=caps, in_use=in_use,
+            count=count, watermark=wm), ptrs
 
     @staticmethod
     def free_many(st: GenericState, ptrs) -> GenericState:
-        st, _ = lax.scan(lambda s, p: (GenericAllocator.free(s, p), 0), st, ptrs)
+        """Vectorized bulk free: k searchsorted lookups (O(k log cap))."""
+        freed = _bulk_freed_mask(st.offsets, st.in_use, st.count,
+                                 st.heap_size, jnp.asarray(ptrs, I32))
+        return dataclasses.replace(
+            st, in_use=jnp.where(freed, 0, st.in_use))
+
+    # -- v1 reference paths (the Fig. 6 serial contrast) ----------------------
+    @staticmethod
+    def malloc_many_serial(st: GenericState, sizes
+                           ) -> Tuple[GenericState, jax.Array]:
+        """The v1 ``lax.scan`` bulk path, kept as the measured baseline."""
+        return lax.scan(lambda s, sz: GenericAllocator.malloc(s, sz), st,
+                        jnp.asarray(sizes, I32))
+
+    @staticmethod
+    def free_many_serial(st: GenericState, ptrs) -> GenericState:
+        st, _ = lax.scan(lambda s, p: (GenericAllocator.free(s, p), 0), st,
+                         jnp.asarray(ptrs, I32))
         return st
+
+
+# ---------------------------------------------------------------------------
+# Size-class allocator (v2): segregated power-of-two free lists
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SizeClassState:
+    offsets: jax.Array      # (CAP,) i32 — sorted; DEAD beyond count
+    sizes: jax.Array        # (CAP,) i32 — requested size
+    caps: jax.Array         # (CAP,) i32 — block capacity
+    in_use: jax.Array       # (CAP,) i32
+    free_bits: jax.Array    # (NCLASSES, ceil(CAP/32)) u32 — bit e of class c
+    #                         set <=> entry e is free and in class c
+    count: jax.Array        # () i32
+    watermark: jax.Array    # () i32
+    heap_size: int
+
+    def tree_flatten(self):
+        return ((self.offsets, self.sizes, self.caps, self.in_use,
+                 self.free_bits, self.count, self.watermark), self.heap_size)
+
+    @classmethod
+    def tree_unflatten(cls, heap_size, leaves):
+        return cls(*leaves, heap_size)
+
+
+class SizeClassAllocator:
+    """v2 heap: single allocation list + size-class bitmask free lists.
+
+    A freed block of capacity in ``[2^c, 2^(c+1))`` sets its entry's bit in
+    class c's occupancy words.  ``malloc`` turns reuse into an O(#classes)
+    bit trick: reduce each class's words to an any-free summary, pick the
+    first class >= ``ceil_log2(size)`` (every block there is guaranteed to
+    fit), then the first set bit (``x & -x`` + ``lax.clz``) names the entry.
+    No watermark reclaim: freed blocks are recycled through their bins, which
+    keeps ``free`` O(log cap) and makes steady-state churn allocation-free.
+    """
+
+    @staticmethod
+    def init(heap_size: int, cap: int = 4096) -> SizeClassState:
+        z = jnp.zeros((cap,), I32)
+        nwords = (cap + 31) // 32
+        return SizeClassState(
+            jnp.full((cap,), DEAD), z, z, z,
+            jnp.zeros((NCLASSES, nwords), U32),
+            jnp.zeros((), I32), jnp.zeros((), I32), heap_size)
+
+    @staticmethod
+    def malloc(st: SizeClassState, size) -> Tuple[SizeClassState, jax.Array]:
+        size = jnp.asarray(size, I32)
+        cap = st.offsets.shape[0]
+        valid = size > 0
+        req_cls = _ceil_log2(size)
+        class_nonempty = jnp.any(st.free_bits != 0, axis=1)
+        eligible = class_nonempty & (jnp.arange(NCLASSES) >= req_cls)
+        has_reuse = valid & jnp.any(eligible)
+        c = jnp.argmax(eligible).astype(I32)
+        words = st.free_bits[c]
+        w = jnp.argmax(words != 0).astype(I32)
+        word = words[w]
+        low = word & ((~word) + U32(1))               # lowest set bit
+        b = jnp.int32(31) - lax.clz(low).astype(I32)  # its position
+        e = jnp.clip(w * 32 + b, 0, cap - 1)          # (unused unless reuse)
+        can_bump = valid & (st.watermark + size <= st.heap_size) & \
+            (st.count < cap)
+
+        def reuse(st):
+            return dataclasses.replace(
+                st,
+                sizes=st.sizes.at[e].set(size),
+                in_use=st.in_use.at[e].set(1),
+                free_bits=st.free_bits.at[c, w].set(word ^ low)), \
+                st.offsets[e]
+
+        def bump_path(st):
+            def bump(st):
+                i = st.count
+                return dataclasses.replace(
+                    st,
+                    offsets=st.offsets.at[i].set(st.watermark),
+                    sizes=st.sizes.at[i].set(size),
+                    caps=st.caps.at[i].set(size),
+                    in_use=st.in_use.at[i].set(1),
+                    count=st.count + 1,
+                    watermark=st.watermark + size), st.watermark
+
+            return lax.cond(can_bump, bump, lambda s: (s, FAIL), st)
+
+        return lax.cond(has_reuse, reuse, bump_path, st)
+
+    @staticmethod
+    def free(st: SizeClassState, ptr) -> SizeClassState:
+        ptr = jnp.asarray(ptr, I32)
+        valid = (ptr >= 0) & (ptr < st.heap_size)
+        hit, idx = _sorted_exact(st.offsets, st.in_use, st.count, ptr)
+        hit = hit & valid
+        c = _floor_log2(st.caps[idx])
+        w, b = idx // 32, idx % 32
+        new_word = st.free_bits[c, w] | (U32(1) << b.astype(U32))
+        return dataclasses.replace(
+            st,
+            in_use=jnp.where(hit, st.in_use.at[idx].set(0), st.in_use),
+            free_bits=jnp.where(hit, st.free_bits.at[c, w].set(new_word),
+                                st.free_bits))
+
+    @staticmethod
+    def find_obj(st: SizeClassState, ptr
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        ptr = jnp.asarray(ptr, I32)
+        valid = (ptr >= 0) & (ptr < st.heap_size)
+        found, base, size = _sorted_lookup(st.offsets, st.sizes, st.in_use,
+                                           st.count, ptr)
+        return found & valid, base, size
+
+    @staticmethod
+    def malloc_many(st: SizeClassState, sizes
+                    ) -> Tuple[SizeClassState, jax.Array]:
+        """Prefix-sum bulk allocation (watermark-only; bins are not consulted
+        — bulk requests are fresh space, singles recycle)."""
+        offsets, szs, caps, in_use, count, wm, ptrs = _bulk_watermark_alloc(
+            st.offsets, st.sizes, st.caps, st.in_use, st.count, st.watermark,
+            st.heap_size, sizes)
+        return dataclasses.replace(
+            st, offsets=offsets, sizes=szs, caps=caps, in_use=in_use,
+            count=count, watermark=wm), ptrs
+
+    @staticmethod
+    def free_many(st: SizeClassState, ptrs) -> SizeClassState:
+        """Vectorized bulk free + one scatter-OR bin insert for all blocks."""
+        cap = st.offsets.shape[0]
+        freed = _bulk_freed_mask(st.offsets, st.in_use, st.count,
+                                 st.heap_size, jnp.asarray(ptrs, I32))
+        e = jnp.arange(cap)
+        c_e = _floor_log2(st.caps)
+        # each entry owns a distinct bit of its (class, word) cell, and a
+        # freed entry's bit is clear (it was in use), so scatter-add == OR
+        contrib = jnp.where(freed, U32(1) << (e % 32).astype(U32), U32(0))
+        return dataclasses.replace(
+            st,
+            in_use=jnp.where(freed, 0, st.in_use),
+            free_bits=st.free_bits.at[c_e, e // 32].add(contrib))
 
 
 # ---------------------------------------------------------------------------
@@ -145,8 +520,10 @@ class GenericAllocator:
 class BalancedState:
     chunk_start: jax.Array   # (NC,) i32 — absolute base of each chunk
     chunk_size: jax.Array    # (NC,) i32
-    offsets: jax.Array       # (NC, CAP) i32 — entry offsets (chunk-relative)
-    sizes: jax.Array         # (NC, CAP) i32
+    offsets: jax.Array       # (NC, CAP) i32 — chunk-relative; sorted per
+    #                          chunk with DEAD beyond each chunk's count
+    sizes: jax.Array         # (NC, CAP) i32 — requested sizes
+    caps: jax.Array          # (NC, CAP) i32 — block capacities
     in_use: jax.Array        # (NC, CAP) i32
     count: jax.Array         # (NC,) i32 — stack top per chunk
     watermark: jax.Array     # (NC,) i32 — chunk-relative
@@ -155,7 +532,7 @@ class BalancedState:
 
     def tree_flatten(self):
         return ((self.chunk_start, self.chunk_size, self.offsets, self.sizes,
-                 self.in_use, self.count, self.watermark),
+                 self.caps, self.in_use, self.count, self.watermark),
                 (self.n_slots, self.m_slots))
 
     @classmethod
@@ -178,14 +555,18 @@ class BalancedAllocator:
         z2 = jnp.zeros((nc, cap), I32)
         return BalancedState(
             jnp.asarray(starts, I32), jnp.asarray(sizes, I32),
-            z2, z2, z2, jnp.zeros((nc,), I32), jnp.zeros((nc,), I32),
-            n_slots, m_slots)
+            jnp.full((nc, cap), DEAD), z2, z2, z2,
+            jnp.zeros((nc,), I32), jnp.zeros((nc,), I32), n_slots, m_slots)
 
     # -- chunk selection (paper: thread id % N, team id % M) -------------------
     @staticmethod
     def chunk_of(st: BalancedState, tid, team) -> jax.Array:
         return (jnp.asarray(tid, I32) % st.n_slots) * st.m_slots + \
             (jnp.asarray(team, I32) % st.m_slots)
+
+    @staticmethod
+    def _heap_end(st: BalancedState) -> jax.Array:
+        return st.chunk_start[-1] + st.chunk_size[-1]
 
     # -- single-chunk primitives (operate on chunk-local rows) ------------------
     @staticmethod
@@ -204,6 +585,7 @@ class BalancedAllocator:
             out = dict(row)
             out["offsets"] = row["offsets"].at[i].set(row["wm"])
             out["sizes"] = row["sizes"].at[i].set(size)
+            out["caps"] = row["caps"].at[i].set(size)
             out["in_use"] = row["in_use"].at[i].set(1)
             out["count"] = row["count"] + 1
             out["wm"] = row["wm"] + size
@@ -211,12 +593,13 @@ class BalancedAllocator:
 
         def hole(row):
             live_range = jnp.arange(cap) < row["count"]
-            ok = (row["in_use"] == 0) & (row["sizes"] >= size) & live_range
+            ok = (row["in_use"] == 0) & (row["caps"] >= size) & live_range
             has = jnp.any(ok) & (size > 0)
             j = jnp.argmax(ok)
 
             def take(row):
                 out = dict(row)
+                out["sizes"] = row["sizes"].at[j].set(size)
                 out["in_use"] = row["in_use"].at[j].set(1)
                 return out, row["offsets"][j]
 
@@ -225,7 +608,31 @@ class BalancedAllocator:
         return lax.cond(fits_top, top, hole, row)
 
     @staticmethod
-    def _chunk_free(row, rel_ptr):
+    def _chunk_malloc_bulk(row, reqs):
+        """Prefix-sum bulk allocation against one chunk (watermark-only)."""
+        offsets, sizes, caps, in_use, count, wm, rel = _bulk_watermark_alloc(
+            row["offsets"], row["sizes"], row["caps"], row["in_use"],
+            row["count"], row["wm"], row["csize"], reqs)
+        out = dict(row, offsets=offsets, sizes=sizes, caps=caps,
+                   in_use=in_use, count=count, wm=wm)
+        return out, rel
+
+    @staticmethod
+    def _chunk_free_bulk(row, rel_ptrs):
+        """Vectorized multi-free (k searchsorted lookups) + one suffix-scan
+        watermark reclaim.  Negative (FAIL) and unmatched pointers are
+        no-ops."""
+        freed = _bulk_freed_mask(row["offsets"], row["in_use"], row["count"],
+                                 row["csize"], rel_ptrs)
+        in_use = jnp.where(freed, 0, row["in_use"])
+        offsets, count, wm = _suffix_reclaim(row["offsets"], in_use,
+                                             row["count"], row["wm"])
+        return dict(row, offsets=offsets, in_use=in_use, count=count, wm=wm)
+
+    @staticmethod
+    def _chunk_free_serial(row, rel_ptr):
+        """v1 free: single match + ``while_loop`` reclaim (the measured
+        baseline for ``free_grid_scan``)."""
         cap = row["offsets"].shape[0]
         live_range = jnp.arange(cap) < row["count"]
         hit = (row["offsets"] == rel_ptr) & (row["in_use"] == 1) & live_range
@@ -244,6 +651,7 @@ class BalancedAllocator:
             i = r["count"] - 1
             r = dict(r)
             r["wm"] = r["offsets"][i]
+            r["offsets"] = r["offsets"].at[i].set(DEAD)
             r["count"] = i
             return r
 
@@ -254,8 +662,16 @@ class BalancedAllocator:
     def _row(st: BalancedState, c):
         return {
             "offsets": st.offsets[c], "sizes": st.sizes[c],
-            "in_use": st.in_use[c], "count": st.count[c],
+            "caps": st.caps[c], "in_use": st.in_use[c], "count": st.count[c],
             "wm": st.watermark[c], "csize": st.chunk_size[c],
+        }
+
+    @staticmethod
+    def _rows(st: BalancedState):
+        return {
+            "offsets": st.offsets, "sizes": st.sizes, "caps": st.caps,
+            "in_use": st.in_use, "count": st.count, "wm": st.watermark,
+            "csize": st.chunk_size,
         }
 
     @staticmethod
@@ -264,9 +680,17 @@ class BalancedAllocator:
             st,
             offsets=st.offsets.at[c].set(row["offsets"]),
             sizes=st.sizes.at[c].set(row["sizes"]),
+            caps=st.caps.at[c].set(row["caps"]),
             in_use=st.in_use.at[c].set(row["in_use"]),
             count=st.count.at[c].set(row["count"]),
             watermark=st.watermark.at[c].set(row["wm"]))
+
+    @staticmethod
+    def _put_rows(st: BalancedState, rows) -> BalancedState:
+        return dataclasses.replace(
+            st, offsets=rows["offsets"], sizes=rows["sizes"],
+            caps=rows["caps"], in_use=rows["in_use"], count=rows["count"],
+            watermark=rows["wm"])
 
     @staticmethod
     def malloc(st: BalancedState, tid, team, size
@@ -279,84 +703,182 @@ class BalancedAllocator:
 
     @staticmethod
     def free(st: BalancedState, ptr) -> BalancedState:
+        """Free one pointer; FAIL / out-of-arena pointers are guaranteed
+        no-ops (they can never clamp into chunk 0 and touch live entries)."""
         ptr = jnp.asarray(ptr, I32)
+        valid = (ptr >= 0) & (ptr < BalancedAllocator._heap_end(st))
         c = jnp.clip(jnp.searchsorted(st.chunk_start, ptr, side="right") - 1,
                      0, st.chunk_start.shape[0] - 1)
-        row = BalancedAllocator._chunk_free(
-            BalancedAllocator._row(st, c), ptr - st.chunk_start[c])
-        return BalancedAllocator._put_row(st, c, row)
+        rel = jnp.where(valid, ptr - st.chunk_start[c], FAIL)
+        row = BalancedAllocator._chunk_free_bulk(
+            BalancedAllocator._row(st, c), rel[None])
+        freed = BalancedAllocator._put_row(st, c, row)
+        return jax.tree.map(lambda a, b: jnp.where(valid, a, b), freed, st)
 
     @staticmethod
     def find_obj(st: BalancedState, ptr
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """O(log) object lookup: chunk by ``searchsorted`` over chunk bases,
+        entry by ``searchsorted`` over the chunk's sorted offsets.  FAIL /
+        out-of-arena pointers report ``found=False``."""
         ptr = jnp.asarray(ptr, I32)
+        valid = (ptr >= 0) & (ptr < BalancedAllocator._heap_end(st))
         c = jnp.clip(jnp.searchsorted(st.chunk_start, ptr, side="right") - 1,
                      0, st.chunk_start.shape[0] - 1)
         rel = ptr - st.chunk_start[c]
-        cap = st.offsets.shape[1]
-        live = (st.in_use[c] == 1) & (jnp.arange(cap) < st.count[c])
-        inside = live & (st.offsets[c] <= rel) & \
-            (rel < st.offsets[c] + st.sizes[c])
-        idx = jnp.argmax(inside)
-        return jnp.any(inside), st.chunk_start[c] + st.offsets[c][idx], \
-            st.sizes[c][idx]
+        found, base, size = _sorted_lookup(st.offsets[c], st.sizes[c],
+                                           st.in_use[c], st.count[c], rel)
+        return found & valid, st.chunk_start[c] + base, size
+
+    @staticmethod
+    def reset_chunk(st: BalancedState, c) -> BalancedState:
+        """O(1)-shaped whole-chunk reclaim: drop every entry of chunk ``c``
+        (the serving layer's request-completion path)."""
+        return dataclasses.replace(
+            st,
+            offsets=st.offsets.at[c].set(DEAD),
+            in_use=st.in_use.at[c].set(0),
+            count=st.count.at[c].set(0),
+            watermark=st.watermark.at[c].set(0))
+
+    @staticmethod
+    def reset_chunks(st: BalancedState, mask) -> BalancedState:
+        """Bulk :meth:`reset_chunk` of every chunk where ``mask`` is true —
+        one vectorized select, no per-chunk loop."""
+        mask = jnp.asarray(mask)
+        return dataclasses.replace(
+            st,
+            offsets=jnp.where(mask[:, None], DEAD, st.offsets),
+            in_use=jnp.where(mask[:, None], 0, st.in_use),
+            count=jnp.where(mask, 0, st.count),
+            watermark=jnp.where(mask, 0, st.watermark))
 
     # -- grid-batched ops: the paper's "all threads allocate at a parallel-region
     # boundary" pattern.  Requests with a regular (tid, team) grid map onto
     # chunks bijectively, so chunks process their request streams in parallel
-    # (vmap) — the per-chunk-lock concurrency of the paper, minus the locks.
+    # (vmap) — and within each chunk the stream itself is one prefix-sum bulk
+    # step, not a scan: O(k) vectorized work for k requests.
     @staticmethod
     def malloc_grid(st: BalancedState, n_threads: int, n_teams: int, sizes
                     ) -> Tuple[BalancedState, jax.Array]:
-        """sizes: (n_threads, n_teams) i32 -> ptrs of the same shape."""
+        """sizes: (n_threads, n_teams) i32 -> ptrs of the same shape.
+
+        Bulk watermark path: identical to :meth:`malloc_grid_scan` on fresh
+        space, but never reuses holes (use :meth:`malloc` for that)."""
         N, M = st.n_slots, st.m_slots
         assert n_threads % N == 0 and n_teams % M == 0, \
             "grid must tile the chunk slots"
         sizes = jnp.asarray(sizes, I32)
         grouped = _group_grid(sizes, N, M)            # (NC, per_chunk)
-
-        def per_chunk(row, reqs):
-            def step(row, sz):
-                row, rel = BalancedAllocator._chunk_malloc(row, sz)
-                return row, rel
-            row, rels = lax.scan(step, row, reqs)
-            return row, rels
-
-        rows = {
-            "offsets": st.offsets, "sizes": st.sizes, "in_use": st.in_use,
-            "count": st.count, "wm": st.watermark, "csize": st.chunk_size,
-        }
-        rows, rels = jax.vmap(per_chunk)(rows, grouped)
-        new_st = dataclasses.replace(
-            st, offsets=rows["offsets"], sizes=rows["sizes"],
-            in_use=rows["in_use"], count=rows["count"], watermark=rows["wm"])
-        ptrs = jnp.where(rels == FAIL, FAIL,
-                         st.chunk_start[:, None] + rels)
-        return new_st, _ungroup_grid(ptrs, n_threads, n_teams, N, M)
+        rows, rels = jax.vmap(BalancedAllocator._chunk_malloc_bulk)(
+            BalancedAllocator._rows(st), grouped)
+        ptrs = jnp.where(rels == FAIL, FAIL, st.chunk_start[:, None] + rels)
+        return BalancedAllocator._put_rows(st, rows), \
+            _ungroup_grid(ptrs, n_threads, n_teams, N, M)
 
     @staticmethod
     def free_grid(st: BalancedState, n_threads: int, n_teams: int, ptrs
                   ) -> BalancedState:
+        """Bulk free: per-chunk vectorized multi-free + suffix reclaim;
+        FAIL pointers in the grid are no-ops."""
         N, M = st.n_slots, st.m_slots
         ptrs = jnp.asarray(ptrs, I32)
         grouped = _group_grid(ptrs, N, M)
-        rel = grouped - st.chunk_start[:, None]
+        rel = jnp.where(grouped < 0, FAIL, grouped - st.chunk_start[:, None])
+        rows = jax.vmap(BalancedAllocator._chunk_free_bulk)(
+            BalancedAllocator._rows(st), rel)
+        return BalancedAllocator._put_rows(st, rows)
+
+    # -- v1 reference paths (per-chunk lax.scan; the measured baseline) --------
+    @staticmethod
+    def malloc_grid_scan(st: BalancedState, n_threads: int, n_teams: int,
+                         sizes) -> Tuple[BalancedState, jax.Array]:
+        N, M = st.n_slots, st.m_slots
+        assert n_threads % N == 0 and n_teams % M == 0, \
+            "grid must tile the chunk slots"
+        sizes = jnp.asarray(sizes, I32)
+        grouped = _group_grid(sizes, N, M)
+
+        def per_chunk(row, reqs):
+            return lax.scan(BalancedAllocator._chunk_malloc, row, reqs)
+
+        rows, rels = jax.vmap(per_chunk)(BalancedAllocator._rows(st), grouped)
+        ptrs = jnp.where(rels == FAIL, FAIL, st.chunk_start[:, None] + rels)
+        return BalancedAllocator._put_rows(st, rows), \
+            _ungroup_grid(ptrs, n_threads, n_teams, N, M)
+
+    @staticmethod
+    def free_grid_scan(st: BalancedState, n_threads: int, n_teams: int, ptrs
+                       ) -> BalancedState:
+        N, M = st.n_slots, st.m_slots
+        ptrs = jnp.asarray(ptrs, I32)
+        grouped = _group_grid(ptrs, N, M)
+        rel = jnp.where(grouped < 0, FAIL, grouped - st.chunk_start[:, None])
 
         def per_chunk(row, reqs):
             def step(row, p):
-                return BalancedAllocator._chunk_free(row, p), 0
+                return BalancedAllocator._chunk_free_serial(row, p), 0
             row, _ = lax.scan(step, row, reqs)
             return row
 
-        rows = {
-            "offsets": st.offsets, "sizes": st.sizes, "in_use": st.in_use,
-            "count": st.count, "wm": st.watermark, "csize": st.chunk_size,
-        }
-        rows = jax.vmap(per_chunk)(rows, rel)
-        return dataclasses.replace(
-            st, offsets=rows["offsets"], sizes=rows["sizes"],
-            in_use=rows["in_use"], count=rows["count"], watermark=rows["wm"])
+        rows = jax.vmap(per_chunk)(BalancedAllocator._rows(st), rel)
+        return BalancedAllocator._put_rows(st, rows)
 
+
+# ---------------------------------------------------------------------------
+# State-directed dispatch (the RPC layer's entry point)
+# ---------------------------------------------------------------------------
+
+_ALLOCATORS = {}
+
+
+def allocator_for(state):
+    """The allocator class that operates on ``state`` (by state type)."""
+    for cls, alloc in _ALLOCATORS.items():
+        if isinstance(state, cls):
+            return alloc
+    raise TypeError(f"no allocator registered for state {type(state)!r}")
+
+
+_ALLOCATORS[GenericState] = GenericAllocator
+_ALLOCATORS[SizeClassState] = SizeClassAllocator
+_ALLOCATORS[BalancedState] = BalancedAllocator
+
+
+def find_obj(state, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The paper's ``_FindObj`` over any allocator state — the O(log cap)
+    sorted-index path the RPC ``ArenaRef`` marshalling rides."""
+    return allocator_for(state).find_obj(state, ptr)
+
+
+def find_obj_linear(state, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """v1 reference lookup: O(cap) masked scan.  Kept for benchmarks
+    (the measured v1-vs-v2 contrast) and property cross-checks."""
+    ptr = jnp.asarray(ptr, I32)
+    if isinstance(state, BalancedState):
+        c = jnp.clip(
+            jnp.searchsorted(state.chunk_start, ptr, side="right") - 1,
+            0, state.chunk_start.shape[0] - 1)
+        rel = ptr - state.chunk_start[c]
+        cap = state.offsets.shape[1]
+        live = (state.in_use[c] == 1) & (jnp.arange(cap) < state.count[c])
+        inside = live & (state.offsets[c] <= rel) & \
+            (rel < state.offsets[c] + state.sizes[c])
+        idx = jnp.argmax(inside)
+        valid = (ptr >= 0) & (ptr < BalancedAllocator._heap_end(state))
+        return jnp.any(inside) & valid, \
+            state.chunk_start[c] + state.offsets[c][idx], state.sizes[c][idx]
+    cap = state.offsets.shape[0]
+    live = (state.in_use == 1) & (jnp.arange(cap) < state.count)
+    inside = live & (state.offsets <= ptr) & \
+        (ptr < state.offsets + state.sizes)
+    idx = jnp.argmax(inside)
+    return jnp.any(inside), state.offsets[idx], state.sizes[idx]
+
+
+# ---------------------------------------------------------------------------
+# Grid <-> chunk request grouping
+# ---------------------------------------------------------------------------
 
 def _group_grid(grid: jax.Array, N: int, M: int) -> jax.Array:
     """(n_threads, n_teams) -> (N*M, per_chunk) grouped by (tid%N, team%M)."""

@@ -33,7 +33,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.allocator import (
-    BalancedAllocator, BalancedState, GenericAllocator, GenericState)
+    BalancedAllocator, BalancedState, GenericAllocator, GenericState,
+    SizeClassAllocator, SizeClassState, allocator_for)
 from repro.core.rpc import REGISTRY, RpcQueue
 
 
@@ -235,12 +236,16 @@ def realloc(state, arena: jax.Array, ptr, new_size, *, balanced: bool = False,
             tid=0, team=0):
     """malloc new, copy min(old,new), free old.  Returns (state, arena, ptr').
 
-    Copy uses a fixed window of ``new_size`` elements (sizes are traced);
-    elements beyond the old size are whatever the new region held (as in C).
+    The allocator is resolved from the STATE type (generic, size-class, or
+    balanced — ``balanced`` is kept for back-compat and ignored), so every
+    heap the RPC layer can track can also be realloc'd.  Copy uses a fixed
+    window of ``new_size`` elements (sizes are traced); elements beyond the
+    old size are whatever the new region held (as in C).
     """
-    A = BalancedAllocator if balanced else GenericAllocator
+    del balanced                        # inferred from the state type
+    A = allocator_for(state)
     found, base, old_size = A.find_obj(state, ptr)
-    if balanced:
+    if isinstance(state, BalancedState):
         state, new_ptr = A.malloc(state, tid, team, new_size)
     else:
         state, new_ptr = A.malloc(state, new_size)

@@ -66,7 +66,10 @@ Argument categories (paper Fig. 3):
   * tracked refs    — ``ArenaRef(arena, ptr, allocator_state)``: a pointer
                       into the device heap; the underlying object is located
                       at **runtime** via the allocator's tracking table
-                      (the paper's ``_FindObj``), then shipped base+size.
+                      (the paper's ``_FindObj`` — since allocator v2 an
+                      O(log cap) ``searchsorted`` over the sorted-offset
+                      index, paid once per marshalled pointer argument),
+                      then shipped base+size.
                       On the host it expands *in place* to the five
                       positional arguments ``(ptr, base, size, found, arena)``.
 """
@@ -380,10 +383,24 @@ def rpc_call(name: str, *args, result_shape, ordered: bool = True,
     return result, updated
 
 
+# The allocator's sorted-offset index makes this O(log cap) per pointer
+# argument (every ArenaRef marshalled pays for exactly one lookup, so this is
+# the RPC hot path).  ``_FIND_OBJ_IMPL`` is swappable so benchmarks can trace
+# the same marshalling path against the v1 linear scan
+# (``allocator.find_obj_linear``) for a measured contrast.
+_FIND_OBJ_IMPL = alloc_mod.find_obj
+
+
+def set_find_obj_impl(fn=None):
+    """Override the object-lookup used when marshalling ``ArenaRef`` args
+    (``None`` restores the default O(log) path).  Benchmark/test hook: the
+    choice is baked in at TRACE time, so trace under the impl you want."""
+    global _FIND_OBJ_IMPL
+    _FIND_OBJ_IMPL = fn if fn is not None else alloc_mod.find_obj
+
+
 def _find_obj(state, ptr):
-    if isinstance(state, alloc_mod.GenericState):
-        return alloc_mod.GenericAllocator.find_obj(state, ptr)
-    return alloc_mod.BalancedAllocator.find_obj(state, ptr)
+    return _FIND_OBJ_IMPL(state, ptr)
 
 
 # ---------------------------------------------------------------------------

@@ -168,6 +168,7 @@ class ServingEngine:
                                      tok, act)
         nxt = jnp.argmax(logits, axis=-1)
 
+        done_slots = []
         for i, s in enumerate(self.slots):
             if s.request_id < 0:
                 continue
@@ -182,8 +183,13 @@ class ServingEngine:
                     (self.eos_id is not None and t == self.eos_id)
                 if done:
                     self.finished[s.request_id] = s.out
-                    self.kv = kvcache.release_slot(self.kv, i)
+                    done_slots.append(i)
                     self.slots[i] = _Slot()
+        if done_slots:
+            # every retired request this tick releases in ONE bulk reset
+            mask = jnp.zeros((len(self.slots),), bool).at[
+                jnp.asarray(done_slots, jnp.int32)].set(True)
+            self.kv = kvcache.release_slots(self.kv, mask)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
         ticks = 0

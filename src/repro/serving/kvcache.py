@@ -8,6 +8,11 @@ that lifetime structure per request.  Mapping:
   allocation        <- one KV page (``page_size`` tokens, all layers)
   watermark reclaim <- request completion frees its whole chunk stack (O(1))
 
+Both sides of the page lifecycle ride the allocator's bulk paths:
+``ensure_pages`` is ONE prefix-sum ``malloc_grid`` (allocator v2 — no
+``lax.scan`` over slots) and ``release_slots`` retires any number of
+finished requests with ONE vectorized chunk reset.
+
 Pages are shared across layers (a page id addresses every layer's page
 arrays), as in vLLM.  Attention over the paged cache uses the
 ``paged_attention`` Pallas kernel on TPU (the page table drives BlockSpec
@@ -122,12 +127,22 @@ def advance(kv: PagedKV, active: jax.Array) -> PagedKV:
 def release_slot(kv: PagedKV, slot: int) -> PagedKV:
     """O(1) request completion: reset the slot's allocator chunk (watermark
     reclaim of the whole stack) and zero its table row."""
-    alloc = dataclasses.replace(
-        kv.alloc,
-        count=kv.alloc.count.at[slot].set(0),
-        watermark=kv.alloc.watermark.at[slot].set(0),
-        in_use=kv.alloc.in_use.at[slot].set(0))
+    alloc = BalancedAllocator.reset_chunk(kv.alloc, slot)
     return dataclasses.replace(
         kv, alloc=alloc,
         page_table=kv.page_table.at[slot].set(0),
         lengths=kv.lengths.at[slot].set(0))
+
+
+def release_slots(kv: PagedKV, mask: jax.Array) -> PagedKV:
+    """Bulk request completion: release every slot where ``mask`` (B,) is
+    true in ONE vectorized allocator reset — the free-side counterpart of
+    :func:`ensure_pages`'s bulk page allocation (no per-slot loop, so a
+    continuous-batching engine retiring many requests per step pays one
+    dispatch)."""
+    mask = jnp.asarray(mask)
+    return dataclasses.replace(
+        kv,
+        alloc=BalancedAllocator.reset_chunks(kv.alloc, mask),
+        page_table=jnp.where(mask[:, None], 0, kv.page_table),
+        lengths=jnp.where(mask, 0, kv.lengths))

@@ -20,6 +20,15 @@ except ModuleNotFoundError:
 
 from repro.core.allocator import BalancedAllocator as BA
 from repro.core.allocator import GenericAllocator as GA
+from repro.core.allocator import SizeClassAllocator as SC
+from repro.core.allocator import FAIL, find_obj_linear
+
+
+def _states_equal(a, b) -> bool:
+    fa, ta = jax.tree_util.tree_flatten(a)
+    fb, tb = jax.tree_util.tree_flatten(b)
+    return ta == tb and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(fa, fb))
 
 
 # ---------------------------------------------------------------------------
@@ -45,6 +54,70 @@ def test_generic_oom():
     s, p1 = GA.malloc(s, 100)
     s, p2 = GA.malloc(s, 1)
     assert int(p1) == 0 and int(p2) == -1
+
+
+def test_generic_reuse_records_requested_size():
+    """Regression: first-fit reuse must report the REQUESTED size via
+    find_obj (v1 left the stale capacity, so RPC shipped the wrong extent)."""
+    s = GA.init(1000, cap=16)
+    s, p = GA.malloc(s, 100)
+    s = GA.free(s, p)
+    s, q = GA.malloc(s, 30)            # reuses the 100-hole
+    assert int(q) == int(p)
+    found, base, size = GA.find_obj(s, q)
+    assert bool(found) and int(base) == int(q) and int(size) == 30
+    # the hole keeps its CAPACITY: free + a larger (but fitting) request
+    # still reuses it
+    s = GA.free(s, q)
+    s, r = GA.malloc(s, 100)
+    assert int(r) == int(p)
+
+
+def test_generic_nonpositive_size_fails():
+    s = GA.init(100, cap=4)
+    before = s
+    s, p = GA.malloc(s, 0)
+    assert int(p) == -1 and _states_equal(s, before)
+    s, p = GA.malloc(s, -3)
+    assert int(p) == -1 and _states_equal(s, before)
+
+
+def test_generic_free_invalid_ptr_noop():
+    s = GA.init(100, cap=4)
+    s, p = GA.malloc(s, 10)
+    before = s
+    for bad in (-1, -7, 100, 5000):    # FAIL and out-of-arena
+        assert _states_equal(GA.free(s, bad), before)
+        found, _, _ = GA.find_obj(s, bad)
+        assert not bool(found)
+
+
+def test_generic_bulk_matches_serial_including_failures():
+    """The prefix-sum bulk path must equal the serial scan bit-for-bit on
+    the watermark path — including a large failing request followed by small
+    requests that still fit (the fixed-point case)."""
+    sizes = jnp.asarray([30, 30, 50, 20, 15, 90, 5], jnp.int32)
+    s_bulk, p_bulk = jax.jit(GA.malloc_many)(GA.init(100, cap=16), sizes)
+    s_ser, p_ser = GA.malloc_many_serial(GA.init(100, cap=16), sizes)
+    assert list(np.asarray(p_bulk)) == list(np.asarray(p_ser))
+    assert _states_equal(s_bulk, s_ser)
+    # zero/negative sizes are skipped in place
+    sizes = jnp.asarray([8, 0, 8, -2, 8], jnp.int32)
+    _, ptrs = GA.malloc_many(GA.init(100, cap=16), sizes)
+    assert list(np.asarray(ptrs)) == [0, -1, 8, -1, 16]
+
+
+def test_generic_free_many_vectorized():
+    s = GA.init(1000, cap=32)
+    s, ptrs = GA.malloc_many(s, jnp.full((6,), 10, jnp.int32))
+    s = jax.jit(GA.free_many)(s, ptrs[::2])
+    for i, p in enumerate(np.asarray(ptrs)):
+        found, _, _ = GA.find_obj(s, int(p))
+        assert bool(found) == (i % 2 == 1)
+    # FAIL entries in the batch are ignored
+    before = s
+    assert _states_equal(GA.free_many(s, jnp.asarray([-1, 999], jnp.int32)),
+                         before)
 
 
 def test_generic_malloc_many_inside_jit():
@@ -108,6 +181,164 @@ def test_balanced_grid_parallel():
     assert int(jnp.max(s.watermark)) == 0            # everything reclaimed
 
 
+def test_balanced_free_invalid_ptr_noop():
+    """Regression: free/find_obj of FAIL (-1) or out-of-arena pointers used
+    to clamp into chunk 0 / the last chunk — they must be guaranteed
+    no-ops."""
+    s = BA.init(8000, 4, 2, cap=8)
+    s, a = BA.malloc(s, 0, 0, 64)
+    s, b = BA.malloc(s, 3, 1, 32)
+    before = s
+    heap_end = int(s.chunk_start[-1]) + int(s.chunk_size[-1])
+    for bad in (-1, -100, heap_end, heap_end + 17):
+        assert _states_equal(jax.jit(BA.free)(s, bad), before)
+        found, _, _ = BA.find_obj(s, bad)
+        assert not bool(found)
+    # the live objects are untouched and still found
+    for ptr, size in ((a, 64), (b, 32)):
+        found, base, fsize = BA.find_obj(s, ptr)
+        assert bool(found) and int(base) == int(ptr) and int(fsize) == size
+
+
+def test_balanced_reuse_records_requested_size():
+    s = BA.init(80, 2, 1, cap=8, first_chunk_ratio=1.0)  # chunks of 40
+    s, a = BA.malloc(s, 0, 0, 30)
+    s, _ = BA.malloc(s, 0, 0, 10)
+    s = BA.free(s, a)
+    s, c = BA.malloc(s, 0, 0, 25)      # reuses the 30-hole
+    assert int(c) == int(a)
+    found, base, size = BA.find_obj(s, c)
+    assert bool(found) and int(base) == int(c) and int(size) == 25
+
+
+def test_balanced_grid_bulk_matches_scan():
+    """The vectorized grid paths must reproduce the v1 per-chunk scan on
+    fresh space — pointers and final state bit-for-bit."""
+    sizes = jnp.arange(1, 33, dtype=jnp.int32).reshape(8, 4)
+    s1, p1 = jax.jit(BA.malloc_grid, static_argnums=(1, 2))(
+        BA.init(100000, 4, 2, cap=16), 8, 4, sizes)
+    s2, p2 = jax.jit(BA.malloc_grid_scan, static_argnums=(1, 2))(
+        BA.init(100000, 4, 2, cap=16), 8, 4, sizes)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert _states_equal(s1, s2)
+    f1 = BA.free_grid(s1, 8, 4, p1)
+    f2 = BA.free_grid_scan(s2, 8, 4, p2)
+    assert _states_equal(f1, f2)
+    assert int(jnp.max(f1.watermark)) == 0
+
+
+def test_balanced_grid_skips_and_failures():
+    # chunk capacity 10 entries; per-chunk stream mixes skip (0), fits, and
+    # an over-sized request that must not block later fits
+    s = BA.init(40, 2, 1, cap=10, first_chunk_ratio=1.0)   # chunks of 20
+    sizes = jnp.asarray([[8], [0], [50], [8],
+                         [8], [0], [50], [8]], jnp.int32)  # tid-major
+    s, ptrs = BA.malloc_grid(s, 8, 1, sizes)
+    got = np.asarray(ptrs).ravel()
+    # tid 0,2,4,6 -> chunk 0; tid 1,3,5,7 -> chunk 1 (tid % 2)
+    assert got[2] == -1 and got[6] == -1          # oversized fail
+    assert got[1] == -1 and got[5] == -1          # size-0 skip
+    assert (got[[0, 4]] >= 0).all() and (got[[3, 7]] >= 0).all()
+    found, _, size = BA.find_obj(s, int(got[4]))
+    assert bool(found) and int(size) == 8
+
+
+def test_balanced_reset_chunks_bulk():
+    s = BA.init(8000, 4, 1, cap=8, first_chunk_ratio=1.0)
+    ptrs = []
+    for tid in range(4):
+        s, p = BA.malloc(s, tid, 0, 16)
+        ptrs.append(int(p))
+    s = BA.reset_chunks(s, jnp.asarray([True, False, True, False]))
+    assert int(s.count[0]) == 0 and int(s.watermark[0]) == 0
+    assert int(s.count[1]) == 1 and int(s.watermark[1]) == 16
+    for tid, p in enumerate(ptrs):
+        found, _, _ = BA.find_obj(s, p)
+        assert bool(found) == (tid % 2 == 1)
+
+
+# ---------------------------------------------------------------------------
+# Size-class allocator (v2)
+# ---------------------------------------------------------------------------
+
+def test_sizeclass_basic_and_bin_reuse():
+    s = SC.init(1000, cap=64)
+    s, p1 = SC.malloc(s, 100)
+    s, p2 = SC.malloc(s, 50)
+    assert int(p1) == 0 and int(p2) == 100
+    found, base, size = SC.find_obj(s, p2 + 49)
+    assert bool(found) and int(base) == 100 and int(size) == 50
+    s = SC.free(s, p1)
+    found, _, _ = SC.find_obj(s, p1)
+    assert not bool(found)
+    # binned reuse: a request within the freed block's class comes from the
+    # bin (same base), not the watermark
+    wm = int(s.watermark)
+    s, p3 = SC.malloc(s, 60)           # ceil class 6 == the 100-block's class
+    assert int(p3) == int(p1) and int(s.watermark) == wm
+    found, base, size = SC.find_obj(s, p3)
+    assert bool(found) and int(size) == 60    # requested, not capacity
+
+
+def test_sizeclass_class_guarantee():
+    """Segregated fit never hands out a too-small block."""
+    s = SC.init(1000, cap=64)
+    s, small = SC.malloc(s, 5)
+    s, _ = SC.malloc(s, 1)             # pin the watermark above `small`
+    s = SC.free(s, small)
+    s, p = SC.malloc(s, 6)             # 6 > 5: must NOT reuse the 5-block
+    assert int(p) != int(small)
+    found, _, size = SC.find_obj(s, p)
+    assert bool(found) and int(size) == 6
+
+
+def test_sizeclass_invalid_ops_noop():
+    s = SC.init(100, cap=16)
+    s, p = SC.malloc(s, 10)
+    before = s
+    for bad in (-1, 100, 7777):
+        assert _states_equal(SC.free(s, bad), before)
+        found, _, _ = SC.find_obj(s, bad)
+        assert not bool(found)
+    s, q = SC.malloc(s, 0)
+    assert int(q) == -1 and _states_equal(s, before)
+
+
+def test_sizeclass_bulk_roundtrip():
+    s = SC.init(4096, cap=256)
+    sizes = jnp.full((100,), 8, jnp.int32)
+    s, ptrs = jax.jit(SC.malloc_many)(s, sizes)
+    arr = np.asarray(ptrs)
+    assert (arr >= 0).all() and len(np.unique(arr)) == arr.size
+    s = jax.jit(SC.free_many)(s, ptrs)
+    # every block is binned: the next 100 singles all reuse, watermark fixed
+    wm = int(s.watermark)
+    for _ in range(4):
+        s, p = SC.malloc(s, 8)
+        assert int(p) >= 0
+    assert int(s.watermark) == wm
+
+
+def test_find_obj_matches_linear_reference():
+    """The O(log) sorted-index lookup agrees with the v1 linear scan
+    everywhere (live, freed, interior, boundary, invalid)."""
+    g = GA.init(500, cap=32)
+    g, ptrs = GA.malloc_many(g, jnp.asarray([7, 13, 1, 40, 9], jnp.int32))
+    g = GA.free(g, int(np.asarray(ptrs)[1]))
+    b = BA.init(1024, 4, 2, cap=16)
+    for tid, team, size in [(0, 0, 9), (0, 0, 4), (3, 1, 30), (2, 0, 5)]:
+        b, _ = BA.malloc(b, tid, team, size)
+    probes = list(range(0, 120, 3)) + [500, 1023, -1]
+    for st in (g, b):
+        A = GA if isinstance(st, type(g)) else BA
+        for ptr in probes:
+            f1, b1, s1 = A.find_obj(st, ptr)
+            f2, b2, s2 = find_obj_linear(st, ptr)
+            assert bool(f1) == bool(f2), (type(st), ptr)
+            if bool(f1):
+                assert int(b1) == int(b2) and int(s1) == int(s2)
+
+
 # ---------------------------------------------------------------------------
 # Property tests: no two live allocations overlap; find_obj is exact
 # ---------------------------------------------------------------------------
@@ -146,9 +377,9 @@ def _check_generic_no_overlap(ops):
     for p, sz in live.items():
         assert p + sz <= 512
         found, base, fsize = GA.find_obj(s, p + sz // 2)
-        # first-fit reuse hands out the ORIGINAL (>=) block size — internal
-        # fragmentation by design (paper §3.4)
-        assert bool(found) and int(base) == p and int(fsize) >= sz
+        # v2 records the REQUESTED size even on first-fit reuse (the hole's
+        # capacity is tracked separately), so find_obj is exact
+        assert bool(found) and int(base) == p and int(fsize) == sz
 
 
 def _check_balanced_no_overlap(ops):
@@ -170,7 +401,7 @@ def _check_balanced_no_overlap(ops):
         assert a1 <= b0, (spans,)
     for p, sz in live.items():
         found, base, fsize = BA.find_obj(s, p)
-        assert bool(found) and int(base) == p and int(fsize) >= sz
+        assert bool(found) and int(base) == p and int(fsize) == sz
     # allocations stay inside their chunk
     starts = np.asarray(s.chunk_start)
     sizes_ = np.asarray(s.chunk_size)

@@ -1,0 +1,258 @@
+"""Allocator v2 property suite (ISSUE 2): machine-checked heap invariants.
+
+Run for ALL THREE allocators (generic, size-class, balanced) over random
+operation sequences:
+
+  * no two live blocks overlap, and every live block is inside its region
+    (heap, or owning chunk for the balanced allocator);
+  * the watermark is monotone within a region: it never lies below the end
+    of any live block, and it only decreases when a free reclaims the top of
+    the region's stack;
+  * ``free(malloc(p))`` round-trips: the pointer is no longer found, and an
+    immediate same-size malloc hands the same region back (bin/hole reuse or
+    watermark reclaim);
+  * ``find_obj`` (the O(log cap) sorted index) agrees with the v1 O(cap)
+    linear scan (:func:`repro.core.allocator.find_obj_linear`) on every
+    probe — live interiors, boundaries, freed blocks, FAIL and out-of-arena
+    pointers;
+  * grid group/ungroup is a bijection.
+
+Prefers ``hypothesis``; falls back to seeded pseudo-random sequences so the
+suite runs from a clean environment (same pattern as ``test_allocator.py``).
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.allocator import (
+    BalancedAllocator as BA, GenericAllocator as GA,
+    SizeClassAllocator as SC, find_obj_linear, _group_grid, _ungroup_grid)
+
+HEAP = 512
+
+
+# ---------------------------------------------------------------------------
+# Op-sequence interpreters: drive an allocator, mirror live set in python
+# ---------------------------------------------------------------------------
+
+def _drive_flat(alloc, ops, *, bulk_every: int = 0):
+    """Run (kind, size, victim) ops against a flat (generic/size-class)
+    allocator; returns (state, live: {ptr: size}).  Every ``bulk_every``-th
+    malloc goes through the bulk path to exercise it in sequence context."""
+    s = alloc.init(HEAP, cap=64)
+    live = {}
+    n_mallocs = 0
+    for kind, size, idx in ops:
+        if kind == "malloc":
+            n_mallocs += 1
+            if bulk_every and n_mallocs % bulk_every == 0:
+                s, ptrs = alloc.malloc_many(
+                    s, jnp.asarray([size], jnp.int32))
+                p = int(np.asarray(ptrs)[0])
+            else:
+                s, p = alloc.malloc(s, size)
+                p = int(p)
+            if p >= 0:
+                assert p not in live
+                live[p] = size
+        elif live:
+            victim = sorted(live)[idx % len(live)]
+            s = alloc.free(s, victim)
+            del live[victim]
+    return s, live
+
+
+def _drive_balanced(ops):
+    s = BA.init(1024, 4, 2, cap=32, first_chunk_ratio=2.0)
+    live = {}
+    for kind, size, tid, team, idx in ops:
+        if kind == "malloc":
+            s, p = BA.malloc(s, tid, team, size)
+            p = int(p)
+            if p >= 0:
+                assert p not in live
+                live[p] = size
+        elif live:
+            victim = sorted(live)[idx % len(live)]
+            s = BA.free(s, victim)
+            del live[victim]
+    return s, live
+
+
+# ---------------------------------------------------------------------------
+# Invariant checkers
+# ---------------------------------------------------------------------------
+
+def _check_no_overlap(live, region_end):
+    spans = sorted((p, p + sz) for p, sz in live.items())
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, spans
+    for p, sz in live.items():
+        assert 0 <= p and p + sz <= region_end
+
+
+def _check_watermark_covers_live(live, wm, lo=0):
+    """Watermark monotonicity: every live block sits below the watermark."""
+    for p, sz in live.items():
+        assert p + sz - lo <= wm, (p, sz, wm)
+
+
+def _check_lookup_matches_linear(alloc, s, live, probes):
+    for ptr in probes:
+        f2, b2, s2 = find_obj_linear(s, ptr)
+        f1, b1, s1 = alloc.find_obj(s, ptr)
+        assert bool(f1) == bool(f2), ptr
+        if bool(f1):
+            assert int(b1) == int(b2) and int(s1) == int(s2)
+            base = int(b1)
+            assert base in live and base <= ptr < base + live[base]
+    # every live block is found exactly, at base and last byte
+    for p, sz in live.items():
+        for probe in (p, p + sz - 1):
+            found, base, fsize = alloc.find_obj(s, probe)
+            assert bool(found) and int(base) == p and int(fsize) == sz
+    # FAIL / out-of-arena probes never resolve
+    for bad in (-1, -17):
+        found, _, _ = alloc.find_obj(s, bad)
+        assert not bool(found)
+
+
+def _check_free_malloc_roundtrip(alloc, s, size):
+    """free(malloc(p)) returns the allocator to a state where the pointer is
+    unknown and the region is immediately recyclable at the same size."""
+    s, p = (alloc.malloc(s, 0, 0, size) if alloc is BA
+            else alloc.malloc(s, size))
+    if int(p) < 0:
+        return
+    s = alloc.free(s, p)
+    found, _, _ = alloc.find_obj(s, p)
+    assert not bool(found)
+    s, q = (alloc.malloc(s, 0, 0, size) if alloc is BA
+            else alloc.malloc(s, size))
+    if alloc is BA:
+        # watermark reclaim may pop THROUGH older holes below p, legally
+        # handing back a lower pointer — but never a higher one
+        assert 0 <= int(q) <= int(p)
+    else:
+        assert int(q) == int(p)      # bin/hole reuse hands the block back
+
+
+# ---------------------------------------------------------------------------
+# Flat allocators: generic + size-class
+# ---------------------------------------------------------------------------
+
+def _flat_property(alloc, ops):
+    s, live = _drive_flat(alloc, ops, bulk_every=3)
+    _check_no_overlap(live, HEAP)
+    _check_watermark_covers_live(live, int(s.watermark))
+    probes = list(range(0, HEAP, 7))
+    _check_lookup_matches_linear(alloc, s, live, probes)
+    _check_free_malloc_roundtrip(alloc, s, 16)
+
+
+def _balanced_property(ops):
+    s, live = _drive_balanced(ops)
+    starts = np.asarray(s.chunk_start)
+    csizes = np.asarray(s.chunk_size)
+    _check_no_overlap(live, 1024)
+    # per-chunk: blocks inside their chunk, watermark covers the live stack
+    for p, sz in live.items():
+        c = int(np.searchsorted(starts, p, side="right")) - 1
+        assert p + sz <= int(starts[c]) + int(csizes[c])
+        _check_watermark_covers_live({p: sz}, int(s.watermark[c]),
+                                     lo=int(starts[c]))
+    probes = list(range(0, 1024, 11))
+    _check_lookup_matches_linear(BA, s, live, probes)
+    _check_free_malloc_roundtrip(BA, s, 8)
+
+
+def _random_flat_ops(seed: int):
+    rng = random.Random(seed)
+    return [(rng.choice(["malloc", "free"]), rng.randint(1, 40),
+             rng.randint(0, 7)) for _ in range(rng.randint(1, 30))]
+
+
+def _random_balanced_ops(seed: int):
+    rng = random.Random(seed)
+    return [(rng.choice(["malloc", "free"]), rng.randint(1, 30),
+             rng.randint(0, 3), rng.randint(0, 1), rng.randint(0, 7))
+            for _ in range(rng.randint(1, 25))]
+
+
+# ---------------------------------------------------------------------------
+# Grid group/ungroup bijection
+# ---------------------------------------------------------------------------
+
+def _check_grid_bijection(N, M, a, b):
+    T, G = N * a, M * b
+    grid = jnp.arange(T * G, dtype=jnp.int32).reshape(T, G)
+    grouped = _group_grid(grid, N, M)
+    assert grouped.shape == (N * M, a * b)
+    # bijection: ungroup inverts group, and group loses nothing
+    assert np.array_equal(np.asarray(_ungroup_grid(grouped, T, G, N, M)),
+                          np.asarray(grid))
+    assert len(np.unique(np.asarray(grouped))) == T * G
+    # chunk assignment follows (tid % N) * M + team % M
+    for tid in (0, T - 1):
+        for team in (0, G - 1):
+            chunk = (tid % N) * M + (team % M)
+            assert int(grid[tid, team]) in np.asarray(grouped[chunk])
+
+
+if HAVE_HYPOTHESIS:
+    _FLAT_OPS = st.lists(
+        st.tuples(st.sampled_from(["malloc", "free"]),
+                  st.integers(1, 40), st.integers(0, 7)),
+        min_size=1, max_size=30)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_FLAT_OPS)
+    def test_generic_invariants_property(ops):
+        _flat_property(GA, ops)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_FLAT_OPS)
+    def test_sizeclass_invariants_property(ops):
+        _flat_property(SC, ops)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(["malloc", "free"]),
+                  st.integers(1, 30), st.integers(0, 3), st.integers(0, 1),
+                  st.integers(0, 7)),
+        min_size=1, max_size=25))
+    def test_balanced_invariants_property(ops):
+        _balanced_property(ops)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 4),
+           st.integers(1, 3))
+    def test_grid_group_ungroup_bijection(N, M, a, b):
+        _check_grid_bijection(N, M, a, b)
+else:
+    @pytest.mark.parametrize("seed", range(10))
+    def test_generic_invariants_property(seed):
+        _flat_property(GA, _random_flat_ops(seed))
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_sizeclass_invariants_property(seed):
+        _flat_property(SC, _random_flat_ops(seed))
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_balanced_invariants_property(seed):
+        _balanced_property(_random_balanced_ops(seed))
+
+    @pytest.mark.parametrize("nmab", [(1, 1, 1, 1), (2, 1, 3, 2),
+                                      (4, 2, 2, 3), (3, 3, 4, 1),
+                                      (2, 3, 1, 2)])
+    def test_grid_group_ungroup_bijection(nmab):
+        _check_grid_bijection(*nmab)
