@@ -19,26 +19,43 @@ RPC layer runs on EVERY pointer argument it marshals — through the actual
 ``ArenaRef`` marshalling path, contrasting the v1 O(cap) linear scan with
 the v2 O(log cap) sorted-offset index at cap ∈ {256, 4096}.
 
+The sharded section (ISSUE 3) measures the **sharded-vs-funneled** runtime
+contrast: D per-device heaps / RPC-queue shards each serving 1/D of the
+workload versus one logical state funnelling everything — first as logical
+shards in-process (the data-structure contrast), then under a REAL
+≥2-device mesh in a subprocess (forced host devices), which also asserts
+the per-device results are bit-identical to the single-heap run on a
+1-device mesh.
+
 Results are emitted as CSV rows AND returned as a perf-trajectory artifact
 dict; ``benchmarks/run.py`` (or running this module directly) writes it to
 ``BENCH_allocator.json`` so future PRs can diff allocator performance.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn, write_artifact
+from benchmarks.common import (emit, sharded_queue_contrast, time_fn,
+                               write_artifact)
 from repro.core import rpc as rpc_mod
 from repro.core.allocator import BalancedAllocator as BA
 from repro.core.allocator import GenericAllocator as GA
 from repro.core.allocator import SizeClassAllocator as SC
-from repro.core.allocator import find_obj_linear
+from repro.core.allocator import ShardedAllocator as SA
+from repro.core.allocator import find_obj_linear, shard_heap
 
 GRIDS = [(1, 1), (8, 4), (16, 8), (32, 16)]
 FIND_OBJ_CAPS = [256, 4096]
 FIND_OBJ_PROBES = 256
+SHARD_DEVICES = 4                 # logical shard count, in-process section
+MESH_DEVICES = 2                  # forced host devices, subprocess section
 
 
 def _grid_section(artifact: dict) -> None:
@@ -179,11 +196,165 @@ def _find_obj_section(artifact: dict) -> None:
         }
 
 
+def _sharded_section(artifact: dict) -> None:
+    """Sharded-vs-funneled heap + queue contrast (logical shards, one
+    physical device: the sharded runtime is a data layout, so the
+    serialization it removes is measurable without a mesh)."""
+    T, G, D = 32, 16, SHARD_DEVICES
+    n = T * G
+    cap = max(n // 4, 8) * 4
+
+    sizes = jnp.full((T, G), 8, jnp.int32)
+
+    @jax.jit
+    def funneled(sizes):
+        st = BA.init(n * 64, 8, 4, cap=cap)
+        st, ptrs = BA.malloc_grid(st, T, G, sizes)
+        st = BA.free_grid(st, T, G, ptrs)
+        return st.watermark
+
+    @jax.jit
+    def sharded(sizes):
+        st = shard_heap(BA.init(n * 64 // D, 8, 4, cap=cap // D), D,
+                        span=n * 64 // D)
+        st, ptrs = SA.malloc_grid(st, T // D, G, sizes.reshape(D, T // D, G))
+        st = SA.free_grid(st, T // D, G, ptrs)
+        return st.shards.watermark
+
+    t_fun = time_fn(funneled, sizes)
+    t_sh = time_fn(sharded, sizes)
+    key = f"{T}x{G}_d{D}"
+    emit(f"sharded/heap_{key}/funneled", t_fun / n * 1e6,
+         f"total_us={t_fun*1e6:.1f}")
+    emit(f"sharded/heap_{key}/sharded", t_sh / n * 1e6,
+         f"speedup_vs_funneled={t_fun/t_sh:.2f}x")
+
+    # queue: D*K records through ONE ring vs K records into each of D shards
+    K = 64
+    t_q = sharded_queue_contrast(D, K)
+    t_qfun, t_qsh = t_q["funneled"], t_q["sharded"]
+    emit(f"sharded/queue_{D}x{K}/funneled", t_qfun / (D * K) * 1e6)
+    emit(f"sharded/queue_{D}x{K}/sharded", t_qsh / (D * K) * 1e6,
+         f"speedup_vs_funneled={t_qfun/t_qsh:.2f}x")
+
+    artifact["sharded"] = {
+        "logical_devices": D,
+        "heap_grid": key,
+        "heap_funneled_us_per_alloc": t_fun / n * 1e6,
+        "heap_sharded_us_per_alloc": t_sh / n * 1e6,
+        "heap_sharded_speedup": t_fun / t_sh,
+        "queue_records": D * K,
+        "queue_funneled_us_per_record": t_qfun / (D * K) * 1e6,
+        "queue_sharded_us_per_record": t_qsh / (D * K) * 1e6,
+        "queue_sharded_speedup": t_qfun / t_qsh,
+    }
+
+
+_MESH_CHILD = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.allocator import BalancedAllocator as BA, shard_heap
+from repro.core.expand import (expand, set_team_heap, set_team_queue,
+                               team_heap, team_id, team_queue)
+from repro.core.libc import LogRing, drain_log_lines
+
+DEV = len(jax.devices())
+T, G = 8, 4
+sizes = (jnp.arange(T * G, dtype=jnp.int32).reshape(T, G) % 7) + 1
+
+def one_mesh(n_dev):
+    mesh = jax.make_mesh((n_dev,), ("dev",))
+
+    def region():
+        st = team_heap()
+        st, ptrs = BA.malloc_grid(st, T, G, sizes)
+        set_team_heap(st)
+        set_team_queue(team_queue().log(
+            team_id(), jnp.sum(jnp.where(ptrs >= 0, ptrs, 0))
+            .astype(jnp.float32)))
+        return ptrs[None]
+
+    f = jax.jit(expand(region, mesh, in_specs=(), out_specs=P("dev"),
+                       heap=True, queue=True))
+
+    def once():
+        heap = shard_heap(BA.init(4096, 4, 2, cap=64), n_dev)
+        ring = LogRing.create_sharded(n_dev, 16)
+        return f(heap, ring)
+
+    heap2, ring2, ptrs = once()                  # compile
+    jax.block_until_ready(ptrs)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        _, _, p = once()
+    jax.block_until_ready(p)
+    dt = (time.perf_counter() - t0) / 10
+    drain_log_lines()
+    ring2.flush()
+    recs = drain_log_lines()
+    return np.asarray(ptrs), recs, dt
+
+ptrs_mesh, recs, dt_mesh = one_mesh(DEV)
+ptrs_one, recs_one, dt_one = one_mesh(1)
+
+# single-heap reference: the SAME per-team request stream on a plain heap
+st = BA.init(4096, 4, 2, cap=64)
+st, ptrs_ref = jax.jit(lambda st, sz: BA.malloc_grid(st, T, G, sz))(st, sizes)
+ptrs_ref = np.asarray(ptrs_ref)
+
+span = 4096
+local_ok = all((ptrs_mesh[d] % span == ptrs_ref).all()
+               for d in range(DEV))              # team-local == single heap
+one_ok = (ptrs_one[0] == ptrs_ref).all()         # 1-device mesh bit-identical
+print(json.dumps({
+    "mesh_devices": DEV,
+    "grid": f"{T}x{G}",
+    "per_device_bit_identical_to_single_heap": bool(local_ok),
+    "one_device_mesh_bit_identical": bool(one_ok),
+    "queue_flush_records": len(recs),
+    "queue_flush_device_major": recs == sorted(recs, key=lambda r: r[0]),
+    "mesh_us_per_region": dt_mesh * 1e6,
+    "one_device_us_per_region": dt_one * 1e6,
+}))
+"""
+
+
+def _mesh_section(artifact: dict) -> None:
+    """malloc_grid + sharded queue flush under a REAL >=2-device mesh
+    (forced host devices, subprocess so the device count is fresh), checking
+    per-device results bit-identical to the single-heap run.  A failing
+    child FAILS the suite — this entry is the PR's acceptance check, so it
+    must never silently degrade to a skip."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={MESH_DEVICES}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _MESH_CHILD],
+                         capture_output=True, text=True, timeout=560,
+                         env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded-mesh benchmark child failed:\n{out.stderr[-2000:]}")
+    info = json.loads(out.stdout.strip().splitlines()[-1])
+    emit("sharded/mesh/us_per_region", info["mesh_us_per_region"],
+         f"devices={info['mesh_devices']} "
+         f"bit_identical={info['per_device_bit_identical_to_single_heap']}")
+    artifact["sharded_mesh"] = info
+    assert info["per_device_bit_identical_to_single_heap"], info
+    assert info["one_device_mesh_bit_identical"], info
+
+
 def run() -> dict:
     artifact = {"name": "allocator", "schema": 1, "grids": {},
                 "find_obj": {}}
     _grid_section(artifact)
     _find_obj_section(artifact)
+    _sharded_section(artifact)
+    _mesh_section(artifact)
     return artifact
 
 

@@ -64,3 +64,46 @@ def emit_region(name: str, serial_s: float, gpu_first_s: float,
          f"speedup_vs_serial={serial_s / gpu_first_s:.2f}x")
     emit(f"{name}/manual", manual_s * 1e6,
          f"gpu_first_vs_manual={gpu_first_s / manual_s:.3f}")
+
+
+def sharded_queue_contrast(n_shards: int, per_shard: int,
+                           callee: str = "bench.queue_rec",
+                           **time_kwargs) -> Dict[str, float]:
+    """Funneled-vs-sharded batched-transport microbench (ISSUE 3), shared
+    by the fig6 and fig7 suites so the two published numbers can never
+    diverge: ``n_shards * per_shard`` records through ONE RpcQueue + flush
+    versus ``per_shard`` records into each of ``n_shards`` queue shards +
+    one gathered (device, slot)-ordered flush.  Returns median seconds
+    ``{"funneled": ..., "sharded": ...}``."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue
+
+    if callee not in REGISTRY.hosts:
+        REGISTRY.register(callee, lambda i, x: None)
+    D, K = n_shards, per_shard
+
+    @jax.jit
+    def funneled():
+        q = RpcQueue.create(D * K, width=2)
+
+        def body(i, q):
+            return q.enqueue(callee, i, jnp.float32(0.5))
+
+        return lax.fori_loop(0, D * K, body, q).flush().head
+
+    @jax.jit
+    def sharded():
+        q = ShardedRpcQueue.create(D, K, width=2)
+
+        def fill(lq, dev):
+            def body(i, lq):
+                return lq.enqueue(callee, dev * K + i, jnp.float32(0.5))
+            return lax.fori_loop(0, K, body, lq)
+
+        q = ShardedRpcQueue(jax.vmap(fill)(q.q, jnp.arange(D)))
+        return q.flush().q.head
+
+    return {"funneled": time_fn(funneled, **time_kwargs),
+            "sharded": time_fn(sharded, **time_kwargs)}

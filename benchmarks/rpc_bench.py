@@ -13,6 +13,12 @@ The batched-transport section measures the same contrast through the generic
 io_callback each) vs enqueued on device and drained by ONE ordered flush.
 The reported ``amortization`` is per-call cost / batched cost — the factor
 the batched transport amortizes the host round-trip by.
+
+The sharded section (ISSUE 3) contrasts the FUNNELED transport (every
+logical device's records through one queue) with the sharded transport
+(one queue shard per device, one gathered flush replaying (device, slot)
+order) — the per-device answer to the same Fig. 7 serialization, one level
+up.
 """
 from __future__ import annotations
 
@@ -22,13 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, sharded_queue_contrast, time_fn
 from repro.core.libc import LogRing, drain_log_lines
 from repro.core.rpc import (REGISTRY, Ref, RpcQueue, host_rpc,
                             reset_rpc_stats, rpc_call)
 
 N_CALLS = 200
 N_QUEUED = 64
+N_SHARDS = 4
 
 
 def run() -> None:
@@ -87,6 +94,7 @@ def run() -> None:
     drain_log_lines()
 
     run_batched()
+    run_sharded()
 
 
 def run_batched() -> None:
@@ -137,6 +145,18 @@ def run_batched() -> None:
         print(f"WARNING: batched amortization {amort:.1f}x < 5x target",
               flush=True)
     tally.clear()
+
+
+def run_sharded() -> None:
+    """Funneled (one queue for all devices' records) vs sharded (one queue
+    shard per device, one gathered (device, slot)-ordered flush)."""
+    D, K = N_SHARDS, N_QUEUED
+    t = sharded_queue_contrast(D, K, warmup=1, iters=5)
+    per_fun = t["funneled"] / (D * K)
+    per_sh = t["sharded"] / (D * K)
+    emit(f"fig7/sharded_queue_{D}x{K}/funneled", per_fun * 1e6)
+    emit(f"fig7/sharded_queue_{D}x{K}/sharded", per_sh * 1e6,
+         f"speedup_vs_funneled={per_fun/max(per_sh, 1e-12):.2f}x")
 
 
 if __name__ == "__main__":

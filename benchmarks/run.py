@@ -5,7 +5,10 @@ returns a dict with a ``name`` key additionally emits a perf-trajectory
 artifact ``BENCH_<name>.json`` (to ``$BENCH_ARTIFACT_DIR`` or cwd) that CI
 uploads, so future PRs can diff performance — ``fig6_allocator`` emits
 ``BENCH_allocator.json`` (per-grid µs/alloc for generic vs balanced v1 vs
-v2, and the find_obj v1-vs-v2 contrast).
+v2, the find_obj v1-vs-v2 contrast, the sharded-vs-funneled heap/queue
+contrast, and the ``sharded_mesh`` entry: malloc_grid + sharded queue
+flush under a real >=2-device mesh with bit-identical-to-single-heap
+verification).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
 """

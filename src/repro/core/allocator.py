@@ -826,6 +826,212 @@ class BalancedAllocator:
 
 
 # ---------------------------------------------------------------------------
+# Sharded heap (paper §3.3 applied to §3.4): one allocator state per device
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedHeap:
+    """Per-device heaps for expanded regions: one inner allocator state per
+    mesh device (team), stacked along a leading device axis.
+
+    ``shards`` is a regular allocator state (:class:`GenericState`,
+    :class:`SizeClassState` or :class:`BalancedState`) whose every array
+    leaf carries a leading ``(D, ...)`` device axis.  Under ``shard_map``
+    with a ``P(mesh_axes)`` spec on that axis each device owns exactly one
+    shard, so ``malloc``/``free``/``malloc_grid`` inside an ``expand``
+    region are pure team-local operations — no cross-device funnel through
+    one logical free list (the single-lock serialization the paper's
+    balanced allocator exists to avoid, lifted one level up).
+
+    **Pointer encoding.**  In-region pointers are *team-local* offsets into
+    this device's shard.  The global address of local offset ``p`` on device
+    ``d`` is ``d * span + p`` (``span`` >= the per-device heap size), so a
+    pointer that escapes the region still names a unique object:
+    :meth:`find_obj` decodes the ``(device, offset)`` pair and resolves it
+    against that device's tracking table — the RPC layer's ``ArenaRef``
+    marshalling works unchanged on pointers produced by expanded code
+    (``repro.core.expand.team_ptr`` performs the local->global encoding).
+    """
+    shards: Any                  # inner state; leaves carry (D, ...) axis
+    n_devices: int
+    span: int                    # per-device pointer span (>= local heap)
+
+    def tree_flatten(self):
+        return ((self.shards,), (self.n_devices, self.span))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], *aux)
+
+    # -- shard access (the expand/team protocol) -----------------------------
+    def local_view(self):
+        """THIS device's shard as a plain allocator state — valid inside a
+        ``shard_map`` region (the leading axis is the size-1 local block)."""
+        assert jax.tree.leaves(self.shards)[0].shape[0] == 1, \
+            "local_view() is only meaningful on a single-device shard " \
+            "(inside shard_map); use local(dev) outside"
+        return jax.tree.map(lambda a: a[0], self.shards)
+
+    def with_local(self, local) -> "ShardedHeap":
+        """Inverse of :meth:`local_view`: re-wrap an updated local state so
+        ``shard_map`` out-specs can stitch the device axis back together."""
+        return dataclasses.replace(
+            self, shards=jax.tree.map(lambda a: a[None], local))
+
+    def local(self, dev):
+        """Device ``dev``'s shard (host-side / whole-array view)."""
+        return jax.tree.map(lambda a: a[dev], self.shards)
+
+    @staticmethod
+    def global_ptr(dev, local_ptr, span) -> jax.Array:
+        """(device, team-local offset) -> global pointer; FAIL stays FAIL."""
+        local_ptr = jnp.asarray(local_ptr, I32)
+        return jnp.where(local_ptr < 0, FAIL,
+                         jnp.asarray(dev, I32) * span + local_ptr)
+
+
+def _inner_heap_span(state) -> int:
+    """Static per-device pointer span of an inner allocator state."""
+    if hasattr(state, "heap_size"):
+        return int(state.heap_size)
+    if isinstance(state, BalancedState):
+        # chunk geometry is laid out at init from python ints; shard time is
+        # usually init time, so the arrays are concrete — under a trace they
+        # are not, and the caller must say the span
+        try:
+            return int(state.chunk_start[-1] + state.chunk_size[-1])
+        except jax.errors.ConcretizationTypeError as e:
+            raise TypeError(
+                "shard_heap of a traced BalancedState cannot infer the "
+                "per-device span; pass span=<per-device heap size>") from e
+    raise TypeError(f"cannot infer heap span of {type(state)!r}; "
+                    "pass span= explicitly")
+
+
+def shard_heap(state, n_devices: int, span: "int | None" = None
+               ) -> ShardedHeap:
+    """Replicate a freshly-initialized allocator state into ``n_devices``
+    independent per-device shards (leading device axis on every leaf).
+
+    ``state`` is the PER-DEVICE state — init it with the per-device heap
+    size.  ``span`` is the global-pointer stride between devices; it
+    defaults to the per-device heap size, giving the dense encoding
+    ``global = dev * heap + local``.
+    """
+    if span is None:
+        span = _inner_heap_span(state)
+    shards = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), state)
+    return ShardedHeap(shards, n_devices, int(span))
+
+
+class ShardedAllocator:
+    """Vectorized operations over a :class:`ShardedHeap`: every op maps the
+    inner allocator across the device axis (``vmap``), so D shards process
+    their request streams fully in parallel — the per-team analogue of the
+    balanced allocator's per-chunk parallelism, one level up.
+
+    Pointers accepted/returned by these entry points are GLOBAL
+    (``dev * span + local``); :meth:`find_obj` is the dispatch target the
+    RPC ``ArenaRef`` marshalling reaches through :func:`find_obj`.
+    """
+
+    @staticmethod
+    def _inner(st: ShardedHeap):
+        return allocator_for(st.shards)
+
+    # -- whole-mesh bulk ops (one row of requests per device) ----------------
+    @staticmethod
+    def malloc(st: ShardedHeap, sizes) -> Tuple[ShardedHeap, jax.Array]:
+        """``sizes``: (D,) — one single-block request per device, satisfied
+        from that device's shard (hole reuse included).  Returns global
+        pointers (FAIL on per-shard failure)."""
+        A = ShardedAllocator._inner(st)
+        shards, local = jax.vmap(A.malloc)(st.shards, jnp.asarray(sizes, I32))
+        dev = jnp.arange(st.n_devices, dtype=I32)
+        return dataclasses.replace(st, shards=shards), \
+            ShardedHeap.global_ptr(dev, local, st.span)
+
+    @staticmethod
+    def malloc_many(st: ShardedHeap, sizes) -> Tuple[ShardedHeap, jax.Array]:
+        """``sizes``: (D, k) — prefix-sum bulk allocation per device shard,
+        all shards in parallel.  Returns (D, k) global pointers."""
+        A = ShardedAllocator._inner(st)
+        shards, local = jax.vmap(A.malloc_many)(
+            st.shards, jnp.asarray(sizes, I32))
+        dev = jnp.arange(st.n_devices, dtype=I32)[:, None]
+        return dataclasses.replace(st, shards=shards), \
+            ShardedHeap.global_ptr(dev, local, st.span)
+
+    @staticmethod
+    def free(st: ShardedHeap, ptrs) -> ShardedHeap:
+        """``ptrs``: (D, k) GLOBAL pointers; row ``d`` is drained against
+        device ``d``'s shard.  Pointers that do not belong to their row's
+        device (or FAIL) are guaranteed no-ops."""
+        A = ShardedAllocator._inner(st)
+        ptrs = jnp.asarray(ptrs, I32)
+        dev = jnp.arange(st.n_devices, dtype=I32)[:, None]
+        mine = (ptrs >= dev * st.span) & (ptrs < (dev + 1) * st.span)
+        local = jnp.where(mine, ptrs - dev * st.span, FAIL)
+        shards = jax.vmap(A.free_many)(st.shards, local)
+        return dataclasses.replace(st, shards=shards)
+
+    @staticmethod
+    def find_obj(st: ShardedHeap, ptr
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """The paper's ``_FindObj`` over the whole mesh: decode the
+        ``(device, offset)`` pair from a global pointer, resolve it against
+        that device's tracking table, and report the GLOBAL base — so
+        ``ArenaRef`` marshalling works on pointers produced inside expanded
+        regions.  FAIL / out-of-mesh pointers report ``found=False``."""
+        ptr = jnp.asarray(ptr, I32)
+        valid = (ptr >= 0) & (ptr < st.n_devices * st.span)
+        dev = jnp.clip(ptr // st.span, 0, st.n_devices - 1)
+        local_ptr = ptr - dev * st.span
+        shard = st.local(dev)
+        A = allocator_for(shard)
+        found, base, size = A.find_obj(shard, local_ptr)
+        return found & valid, dev * st.span + base, size
+
+    # -- balanced-inner grid ops (the expand/parallel-region pattern) --------
+    @staticmethod
+    def malloc_grid(st: ShardedHeap, n_threads: int, n_teams: int, sizes
+                    ) -> Tuple[ShardedHeap, jax.Array]:
+        """``sizes``: (D, n_threads, n_teams) — each device runs its own
+        balanced ``malloc_grid`` on its shard; all devices in parallel.
+        Returns (D, n_threads, n_teams) global pointers."""
+        sizes = jnp.asarray(sizes, I32)
+        shards, local = jax.vmap(
+            lambda sh, sz: BalancedAllocator.malloc_grid(
+                sh, n_threads, n_teams, sz))(st.shards, sizes)
+        dev = jnp.arange(st.n_devices, dtype=I32)[:, None, None]
+        return dataclasses.replace(st, shards=shards), \
+            ShardedHeap.global_ptr(dev, local, st.span)
+
+    @staticmethod
+    def free_grid(st: ShardedHeap, n_threads: int, n_teams: int, ptrs
+                  ) -> ShardedHeap:
+        """``ptrs``: (D, n_threads, n_teams) GLOBAL pointers (row ``d`` from
+        device ``d``'s grid); FAIL / foreign pointers are no-ops."""
+        ptrs = jnp.asarray(ptrs, I32)
+        dev = jnp.arange(st.n_devices, dtype=I32)[:, None, None]
+        mine = (ptrs >= dev * st.span) & (ptrs < (dev + 1) * st.span)
+        local = jnp.where(mine, ptrs - dev * st.span, FAIL)
+        shards = jax.vmap(
+            lambda sh, p: BalancedAllocator.free_grid(
+                sh, n_threads, n_teams, p))(st.shards, local)
+        return dataclasses.replace(st, shards=shards)
+
+    @staticmethod
+    def reset_chunks(st: ShardedHeap, mask) -> ShardedHeap:
+        """``mask``: (D, NC) — bulk whole-chunk reclaim per device shard."""
+        shards = jax.vmap(BalancedAllocator.reset_chunks)(
+            st.shards, jnp.asarray(mask))
+        return dataclasses.replace(st, shards=shards)
+
+
+# ---------------------------------------------------------------------------
 # State-directed dispatch (the RPC layer's entry point)
 # ---------------------------------------------------------------------------
 
@@ -843,6 +1049,7 @@ def allocator_for(state):
 _ALLOCATORS[GenericState] = GenericAllocator
 _ALLOCATORS[SizeClassState] = SizeClassAllocator
 _ALLOCATORS[BalancedState] = BalancedAllocator
+_ALLOCATORS[ShardedHeap] = ShardedAllocator
 
 
 def find_obj(state, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -855,6 +1062,12 @@ def find_obj_linear(state, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """v1 reference lookup: O(cap) masked scan.  Kept for benchmarks
     (the measured v1-vs-v2 contrast) and property cross-checks."""
     ptr = jnp.asarray(ptr, I32)
+    if isinstance(state, ShardedHeap):
+        valid = (ptr >= 0) & (ptr < state.n_devices * state.span)
+        dev = jnp.clip(ptr // state.span, 0, state.n_devices - 1)
+        found, base, size = find_obj_linear(state.local(dev),
+                                            ptr - dev * state.span)
+        return found & valid, dev * state.span + base, size
     if isinstance(state, BalancedState):
         c = jnp.clip(
             jnp.searchsorted(state.chunk_start, ptr, side="right") - 1,

@@ -14,7 +14,11 @@ Host escapes ride the v2 RPC transport (``repro.core.rpc``):
 * **Immediate hooks** (default) dispatch through :func:`rpc_call` — the
   landing-pad table caches ONE host wrapper per hook signature, so re-traces
   reuse the same callable, and per-hook call/byte stats accumulate under the
-  hook's RPC name.  Each firing is one ordered host round-trip.
+  hook's RPC name.  Each *firing* is one ordered host round-trip; steps
+  where the hook does NOT fire are **host-free** (the callback lives only in
+  the taken branch of the firing conditional — there is no per-step noop
+  RPC, so a 1000-step loop with ``every=100`` contacts the host 10 times,
+  not 1000: the Fig. 7-class per-step sync the noop used to reintroduce).
 * **Batched hooks** (``HostHook(batched=True)``) never touch the host during
   the loop: firings are enqueued into an on-device :class:`~repro.core.rpc.
   RpcQueue` (a pure array update), and ONE ordered flush at the end of the
@@ -22,6 +26,19 @@ Host escapes ride the v2 RPC transport (``repro.core.rpc``):
   fire-and-forget and their payload must flatten to scalars (queue records
   are fixed-width); use them for metrics/logging, not for host interactions
   the next step depends on.
+* **Sharded runs** (``device_run(..., mesh=)``) execute the step loop under
+  parallelism expansion (§3.3): the whole loop runs inside ``shard_map``
+  over every mesh axis, ``step_fn`` (and hook ``extract``) may use the
+  expansion primitives (``team_id()`` etc.), and ALL hooks ride a
+  per-device :class:`~repro.core.rpc.ShardedRpcQueue` shard — zero host
+  contact during the loop, one gathered drain at the program boundary
+  replaying records in (device, slot) order.
+
+Hook hygiene: hooks without an explicit ``name`` get a per-instance derived
+name whose registry entries (host binding, landing pads, batch callee id)
+are retired when ``device_run`` returns — repeated runs with ad-hoc hooks
+leave the registry at constant size, and a recycled ``id()`` can never
+silently rebind a dead hook's pad to a new hook.
 
 The host round-trip cost this architecture removes is measured by
 ``benchmarks/rpc_bench.py`` (the paper's Fig. 7).
@@ -36,13 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.rpc import REGISTRY, RpcQueue, rpc_call
+from repro.core.expand import _team_env
+from repro.core.jax_compat import shard_map
+from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue, rpc_call
 
 _I32 = jax.ShapeDtypeStruct((), jnp.int32)
-_NOOP = "hook.noop"
-
-REGISTRY.register(_NOOP, lambda step: np.int32(0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +104,13 @@ def _register_hook(hook: HostHook) -> str:
 
 
 def _fire(hook: HostHook, hname: str, step, state):
-    """Immediate hook: one ordered RPC through the cached landing pad."""
+    """Immediate hook: one ordered RPC through the cached landing pad —
+    issued ONLY on firing steps.
+
+    The callback lives in the taken branch of the conditional; the
+    non-firing branch is a pure no-op, so steps where the hook is silent
+    never leave the device.  (v1 dispatched an ordered ``hook.noop`` RPC in
+    the ``no`` branch — a hidden ~ms host sync on every single step.)"""
     payload = hook.extract(step, state)
     leaves = jax.tree.leaves(payload)
 
@@ -95,12 +118,8 @@ def _fire(hook: HostHook, hname: str, step, state):
         r, _ = rpc_call(hname, step, *leaves, result_shape=_I32)
         return r
 
-    def no(_):
-        r, _ = rpc_call(_NOOP, step, result_shape=_I32)
-        return r
-
     should = (step % hook.every == 0) & (step > 0)
-    return lax.cond(should, yes, no, 0)
+    return lax.cond(should, yes, lambda _: jnp.int32(0), 0)
 
 
 def _fire_batched(hook: HostHook, hname: str, step, state,
@@ -115,54 +134,126 @@ def _fire_batched(hook: HostHook, hname: str, step, state,
 def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                n_steps: int, *, hooks: Sequence[HostHook] = (),
                donate: bool = True, jit_kwargs: Optional[dict] = None,
-               queue_capacity: int = 1024, queue_width: int = 8) -> Any:
+               queue_capacity: int = 1024, queue_width: int = 8,
+               mesh: Optional[Mesh] = None, state_spec=None) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
 
     The whole loop is one compiled program; ``hooks`` are the only host
     contact.  Batched hooks share one on-device :class:`RpcQueue`
     (``queue_capacity`` records of ``queue_width`` scalars) flushed once
     after the loop.  Returns the final state.
+
+    With ``mesh=``, the step loop runs under parallelism expansion
+    (§3.3): one ``shard_map`` over every mesh axis contains the whole
+    ``while_loop``, ``step_fn``/``extract`` may use the expansion
+    primitives (``team_id()``, ...), and EVERY hook — immediate or batched
+    — is delivered through a per-device :class:`ShardedRpcQueue` shard,
+    drained once at the program boundary in (device, slot) order (hook
+    payloads must flatten to scalars, as for batched hooks; ``donate`` is
+    ignored).  ``state_spec`` is the ``PartitionSpec`` of ``state``
+    (default ``P()``: replicated — under that default ``step_fn`` must
+    keep state identical on every device; a step that folds ``team_id()``
+    into the CARRY diverges per device and needs an explicit per-device
+    ``state_spec``, or the replicated out-spec silently keeps one
+    device's copy.  Per-device hook *payloads* are fine either way — they
+    live in the queue shards, not the carry).
     """
-    jit_kwargs = dict(jit_kwargs or {})
-    if donate:
-        jit_kwargs.setdefault("donate_argnums", (0,))
-
     named = [(h, _register_hook(h)) for h in hooks]
-    any_batched = any(h.batched for h in hooks)
+    try:
+        if mesh is not None:
+            return _device_run_mesh(step_fn, state, n_steps, named, mesh,
+                                    state_spec, queue_capacity, queue_width,
+                                    dict(jit_kwargs or {}))
 
-    @functools.partial(jax.jit, **jit_kwargs)
-    def program(state):
-        def cond(carry):
-            return carry[0] < n_steps
+        jit_kwargs = dict(jit_kwargs or {})
+        if donate:
+            jit_kwargs.setdefault("donate_argnums", (0,))
+        any_batched = any(h.batched for h in hooks)
 
-        if any_batched:
-            def body(carry):
-                step, state, q = carry
-                state = step_fn(step, state)
-                for h, hname in named:
-                    if h.batched:
-                        q = _fire_batched(h, hname, step + 1, state, q)
-                    else:
+        @functools.partial(jax.jit, **jit_kwargs)
+        def program(state):
+            def cond(carry):
+                return carry[0] < n_steps
+
+            if any_batched:
+                def body(carry):
+                    step, state, q = carry
+                    state = step_fn(step, state)
+                    for h, hname in named:
+                        if h.batched:
+                            q = _fire_batched(h, hname, step + 1, state, q)
+                        else:
+                            _fire(h, hname, step + 1, state)
+                    return (step + 1, state, q)
+
+                q0 = RpcQueue.create(queue_capacity, queue_width)
+                _, final, q = lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), state, q0))
+                q.flush()
+            else:
+                def body(carry):
+                    step, state = carry
+                    state = step_fn(step, state)
+                    for h, hname in named:
                         _fire(h, hname, step + 1, state)
-                return (step + 1, state, q)
+                    return (step + 1, state)
 
-            q0 = RpcQueue.create(queue_capacity, queue_width)
-            _, final, q = lax.while_loop(
-                cond, body, (jnp.zeros((), jnp.int32), state, q0))
-            q.flush()
-        else:
+                _, final = lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), state))
+            return final
+
+        return program(state)
+    finally:
+        _retire_auto_hooks(named)
+
+
+def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
+                     queue_capacity, queue_width, jit_kwargs):
+    """The sharded step loop: whole ``while_loop`` inside one ``shard_map``,
+    hooks enqueued into this device's queue shard, ONE gathered drain at the
+    program boundary (the flush runs host-side on the materialized shards —
+    XLA cannot lower a gathered callback inside the partitioned program)."""
+    axes = tuple(mesh.axis_names)
+    spec = state_spec if state_spec is not None else P()
+    q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width)
+
+    def region(state, q):
+        lq = q.local_view()
+        with _team_env(axes, 1):
+            def cond(carry):
+                return carry[0] < n_steps
+
             def body(carry):
-                step, state = carry
-                state = step_fn(step, state)
+                step, st, lq = carry
+                st = step_fn(step, st)
                 for h, hname in named:
-                    _fire(h, hname, step + 1, state)
-                return (step + 1, state)
+                    lq = _fire_batched(h, hname, step + 1, st, lq)
+                return (step + 1, st, lq)
 
-            _, final = lax.while_loop(
-                cond, body, (jnp.zeros((), jnp.int32), state))
-        return final
+            _, final, lq = lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), state, lq))
+        return final, q.with_local(lq)
 
-    return program(state)
+    program = jax.jit(shard_map(
+        region, mesh=mesh, in_specs=(spec, P(axes)),
+        out_specs=(spec, P(axes)), check_vma=False), **jit_kwargs)
+    final, q = program(state, q0)
+    q.flush()                      # concrete shards -> host-side drain
+    return final
+
+
+def _retire_auto_hooks(named) -> None:
+    """Drop registry entries of per-instance (auto-named) hooks once their
+    run's callbacks have drained, so repeated ``device_run`` calls with
+    ad-hoc hooks leave the registry at constant size and a recycled
+    ``id()`` can never rebind a dead hook's pad.  Explicitly-named hooks
+    keep their entries (documented rebind-on-rerun semantics)."""
+    auto = [hname for h, hname in named if h.name is None]
+    if not auto:
+        return
+    jax.effects_barrier()          # pending flush/RPC callbacks still
+    for hname in auto:             # resolve the names — wait them out first
+        REGISTRY.unregister(hname)
 
 
 def host_driven_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,

@@ -15,9 +15,22 @@ team", a vectorized lane.  This module provides:
   coordinates (continuous ids across teams, exactly Fig. 4), work-sharing
   distributes over every device, and ``barrier`` synchronizes the mesh;
 
+* **team-local runtime state** — ``expand(..., heap=True, queue=True)``
+  threads a :class:`~repro.core.allocator.ShardedHeap` and/or a
+  :class:`~repro.core.rpc.ShardedRpcQueue` (or the ``LogRing`` riding it)
+  through the region: inside, :func:`team_heap` / :func:`team_queue` hand
+  the region THIS device's shard (mirroring :func:`thread_id`),
+  :func:`set_team_heap` / :func:`set_team_queue` store the functionally
+  updated state, and :func:`team_ptr` encodes a team-local heap offset as a
+  global ``(device, offset)`` pointer that ``find_obj`` — and therefore the
+  RPC ``ArenaRef`` marshalling — resolves after the region returns;
+
 * :func:`parallel_for` / :func:`serial_for` — the measurable contrast the
   paper's Fig. 8–10 are built on: the *expanded* execution of an iteration
   space versus the *single-team* (sequential-outer-loop) execution.
+  ``parallel_for`` supports ragged iteration spaces (``n`` not divisible by
+  the team count) by padding the index range and masking the tail — the
+  body never sees an out-of-range index.
 
 The sequential part of the program stays single-team (one logical thread);
 entering an expanded region corresponds to the paper's kernel split — in JAX
@@ -42,6 +55,9 @@ class _Env(threading.local):
     def __init__(self):
         self.axes: Tuple[str, ...] = ()     # mesh axes visible to the region
         self.lanes: int = 1                  # vectorized lanes per device
+        self.heap = None                     # this device's allocator shard
+        self.queue = None                    # this device's RPC queue shard
+        self.span: Optional[int] = None      # global-pointer stride
 
 
 _ENV = _Env()
@@ -49,12 +65,13 @@ _ENV = _Env()
 
 @contextlib.contextmanager
 def _team_env(axes: Tuple[str, ...], lanes: int):
-    old = (_ENV.axes, _ENV.lanes)
+    old = (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span)
     _ENV.axes, _ENV.lanes = axes, lanes
+    _ENV.heap = _ENV.queue = _ENV.span = None
     try:
         yield
     finally:
-        _ENV.axes, _ENV.lanes = old
+        (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span) = old
 
 
 # ---------------------------------------------------------------------------
@@ -106,26 +123,131 @@ def ws_range(n: int) -> Tuple[jax.Array, int]:
 
 
 # ---------------------------------------------------------------------------
+# Team-local runtime state (sharded heap / sharded RPC queue accessors)
+# ---------------------------------------------------------------------------
+
+def team_heap():
+    """THIS team's allocator shard (a plain per-device allocator state).
+
+    Only available inside a region expanded with ``heap=True``; operate on
+    it with the inner allocator's ops (team-local offsets) and store the
+    updated state with :func:`set_team_heap` — JAX is functional, so the
+    accessor pair is the in-region read/write of the paper's per-team heap.
+    """
+    if _ENV.heap is None:
+        raise RuntimeError(
+            "team_heap() outside a heap-carrying expanded region; wrap the "
+            "region with expand(..., heap=True) and pass a ShardedHeap")
+    return _ENV.heap
+
+
+def set_team_heap(state) -> None:
+    """Store this team's functionally-updated allocator shard."""
+    if _ENV.heap is None:
+        raise RuntimeError("set_team_heap() outside a heap-carrying region")
+    _ENV.heap = state
+
+
+def team_queue():
+    """THIS team's RPC queue shard (a plain ``RpcQueue`` — or the local view
+    of whatever sharded transport was threaded, e.g. a ``LogRing``)."""
+    if _ENV.queue is None:
+        raise RuntimeError(
+            "team_queue() outside a queue-carrying expanded region; wrap "
+            "the region with expand(..., queue=True) and pass a "
+            "ShardedRpcQueue (or sharded LogRing)")
+    return _ENV.queue
+
+
+def set_team_queue(q) -> None:
+    """Store this team's functionally-updated queue shard."""
+    if _ENV.queue is None:
+        raise RuntimeError("set_team_queue() outside a queue-carrying region")
+    _ENV.queue = q
+
+
+def team_ptr(local_ptr):
+    """Encode a team-local heap offset as a GLOBAL pointer
+    (``team_id() * span + offset``) that survives region exit:
+    ``allocator.find_obj`` decodes the (device, offset) pair, so the RPC
+    ``ArenaRef`` marshalling resolves it like any other heap pointer.
+    FAIL stays FAIL."""
+    if _ENV.span is None:
+        raise RuntimeError("team_ptr() outside a heap-carrying region")
+    local_ptr = jnp.asarray(local_ptr, jnp.int32)
+    return jnp.where(local_ptr < 0, jnp.int32(-1),
+                     team_id() * _ENV.span + local_ptr)
+
+
+# ---------------------------------------------------------------------------
 # Expansion
 # ---------------------------------------------------------------------------
 
 def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
-           lanes: int = 1, check_vma: bool = False) -> Callable:
+           lanes: int = 1, check_vma: bool = False,
+           heap: bool = False, queue: bool = False) -> Callable:
     """Rewrite single-team ``fn`` for multi-team execution over ``mesh``.
 
     Inside ``fn`` the single-team primitives report *global* coordinates.
     This is the paper's compiler transformation; here it is a higher-order
     function because JAX programs are traced, not linked.
+
+    ``heap=True`` / ``queue=True`` declare team-local runtime state: the
+    wrapped callable then takes the sharded object(s) as leading
+    argument(s) — ``wrapped(heap, [queue,] *args)`` — and returns them
+    updated ahead of ``fn``'s result: ``(heap', [queue',] out)``.  The
+    sharded objects (``ShardedHeap``, ``ShardedRpcQueue``, or anything with
+    the same ``local_view``/``with_local`` protocol, e.g. a sharded
+    ``LogRing``) are partitioned one shard per device; inside ``fn``,
+    :func:`team_heap` / :func:`team_queue` read this device's shard and
+    :func:`set_team_heap` / :func:`set_team_queue` write it back.
     """
     axes = tuple(mesh.axis_names)
+    n_extra = int(heap) + int(queue)
+
+    if not n_extra:
+        @functools.wraps(fn)
+        def wrapped(*args):
+            def body(*shard_args):
+                with _team_env(axes, lanes):
+                    return fn(*shard_args)
+            return shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)(*args)
+
+        return wrapped
+
+    dev_spec = P(axes)
+    full_in = (dev_spec,) * n_extra + tuple(in_specs)
+    full_out = (dev_spec,) * n_extra + (out_specs,)
 
     @functools.wraps(fn)
-    def wrapped(*args):
+    def wrapped(*call_args):
+        assert len(call_args) >= n_extra, \
+            f"expand(heap={heap}, queue={queue}) expects the sharded " \
+            f"state as the leading {n_extra} argument(s)"
+
         def body(*shard_args):
+            extra, rest = shard_args[:n_extra], shard_args[n_extra:]
             with _team_env(axes, lanes):
-                return fn(*shard_args)
-        return shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)(*args)
+                i = 0
+                if heap:
+                    _ENV.heap = extra[i].local_view()
+                    _ENV.span = getattr(extra[i], "span", None)
+                    i += 1
+                if queue:
+                    _ENV.queue = extra[i].local_view()
+                out = fn(*rest)
+                outs = []
+                i = 0
+                if heap:
+                    outs.append(extra[i].with_local(_ENV.heap))
+                    i += 1
+                if queue:
+                    outs.append(extra[i].with_local(_ENV.queue))
+            return tuple(outs) + (out,)
+
+        return shard_map(body, mesh=mesh, in_specs=full_in,
+                         out_specs=full_out, check_vma=check_vma)(*call_args)
 
     return wrapped
 
@@ -138,23 +260,27 @@ def parallel_for(body: Callable, n: int, *arrays,
     within each block (threads) — ``omp distribute parallel for``.  Without a
     mesh it still vectorizes (one team, many threads).
     """
-    if mesh is None or mesh.size == 1:
+    if mesh is None or mesh.size == 1 or n == 0:
         return jax.vmap(lambda i: body(i, *arrays))(jnp.arange(n))
 
     axes = tuple(mesh.axis_names)
-    per = n // mesh.size
-    assert n % mesh.size == 0
+    # ragged n: pad the index range to a full tile and mask the tail — the
+    # body never sees an out-of-range i (tail lanes recompute i = n-1 and
+    # their results are sliced off below).  NOTE: body must be pure — tail
+    # lanes EXECUTE the i = n-1 computation again, so an effectful body
+    # would observe up to mesh.size-1 duplicate runs on ragged n.
+    per = -(-n // mesh.size)
 
     def shard_body():
         with _team_env(axes, per):
-            start, count = ws_range(n)
-            idx = start + jnp.arange(count)
+            start = team_id() * per
+            idx = jnp.minimum(start + jnp.arange(per), n - 1)
             return jax.vmap(lambda i: body(i, *arrays))(idx)
 
     spec = P(axes)
     out = shard_map(shard_body, mesh=mesh, in_specs=(),
                         out_specs=spec, check_vma=False)()
-    return out
+    return out if per * mesh.size == n else out[:n]
 
 
 def serial_for(body: Callable, n: int, *arrays):

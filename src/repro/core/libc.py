@@ -35,7 +35,7 @@ from jax import lax
 from repro.core.allocator import (
     BalancedAllocator, BalancedState, GenericAllocator, GenericState,
     SizeClassAllocator, SizeClassState, allocator_for)
-from repro.core.rpc import REGISTRY, RpcQueue
+from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue
 
 
 # ---------------------------------------------------------------------------
@@ -166,8 +166,17 @@ class LogRing:
     passed to ``flush`` is captured into that flush's compiled program (the
     transport's per-flush handler override), so each program keeps its own
     sink across re-executions and rings never cross-wire.
+
+    **Sharded rings** (:meth:`create_sharded`) ride the sharded batched
+    transport: ``q`` is a :class:`~repro.core.rpc.ShardedRpcQueue` — one
+    ring shard per mesh device.  A sharded ring implements the
+    ``local_view``/``with_local`` team protocol, so it threads through
+    ``expand(..., queue=True)`` directly: inside the region,
+    ``team_queue()`` hands each device ITS ring (a plain per-device
+    ``LogRing`` — ``log()`` as usual), and ``flush()`` afterwards replays
+    all devices' records in (device, slot) order.
     """
-    q: RpcQueue
+    q: RpcQueue                    # or ShardedRpcQueue (sharded rings)
     name: str = "logring.sink"
 
     def tree_flatten(self):
@@ -177,24 +186,46 @@ class LogRing:
     def tree_unflatten(cls, name, leaves):
         return cls(leaves[0], name)
 
-    # introspection views over the underlying queue lanes
+    # introspection views over the underlying queue lanes (sharded rings
+    # report with a leading device axis)
+    @property
+    def _lanes(self) -> RpcQueue:
+        return self.q.q if isinstance(self.q, ShardedRpcQueue) else self.q
+
     @property
     def tags(self) -> jax.Array:
-        return self.q.ivals[:, 0]
+        return self._lanes.ivals[..., 0]
 
     @property
     def values(self) -> jax.Array:
-        return self.q.fvals[:, 1]
+        return self._lanes.fvals[..., 1]
 
     @property
     def head(self) -> jax.Array:
-        return self.q.head
+        return self._lanes.head
 
     @staticmethod
     def create(capacity: int = 1024, name: str = _LOG_SINK) -> "LogRing":
         if name not in REGISTRY.hosts:
             REGISTRY.register(name, _default_sink)
         return LogRing(RpcQueue.create(capacity, width=2), name)
+
+    @staticmethod
+    def create_sharded(n_devices: int, capacity: int = 1024,
+                      name: str = _LOG_SINK) -> "LogRing":
+        """One ring shard per mesh device, on the sharded batched transport."""
+        if name not in REGISTRY.hosts:
+            REGISTRY.register(name, _default_sink)
+        return LogRing(ShardedRpcQueue.create(n_devices, capacity, width=2),
+                       name)
+
+    # -- team protocol (threads through ``expand(..., queue=True)``) ----------
+    def local_view(self) -> "LogRing":
+        """This device's ring shard (inside a shard_map region)."""
+        return LogRing(self.q.local_view(), self.name)
+
+    def with_local(self, local: "LogRing") -> "LogRing":
+        return LogRing(self.q.with_local(local.q), self.name)
 
     def log(self, tag, value) -> "LogRing":
         """Pure device-side append (overwrites oldest when full)."""

@@ -53,8 +53,25 @@ records in enqueue order (generalizing the buffered-``fprintf`` trick that
 the paper's Fig. 7 ~975 µs per-call RPC cost).  Batched RPCs are
 fire-and-forget: the device has already executed past the enqueue, so record
 callees cannot return values to the device.  If more than ``capacity``
-records are enqueued between flushes, the oldest are overwritten (counted in
-``queue_drops()``).
+records are enqueued between flushes, the oldest are overwritten; every
+flush counts the records it lost, warns, and publishes the counts through
+``flush_stats()`` / ``queue_drops()`` — overflow is loud, and the surviving
+records still replay in exact enqueue order.
+
+**Sharded transport** (paper §3.3 applied to the transport).  Under
+``expand`` every mesh device is a team, and funnelling all teams' records
+through one logical queue would serialize the machine on a single ring.
+:class:`ShardedRpcQueue` keeps ONE independent :class:`RpcQueue` shard per
+device (leading device axis on every lane array, partitioned by
+``shard_map``); inside an expanded region each device enqueues into its own
+shard with zero cross-device traffic, and ``flush`` gathers all shards and
+replays records in ``(flush-order, device, slot)`` order on the host — a
+deterministic total order.  ``core/libc.py``'s ``LogRing`` rides it
+unchanged (a sharded ring is a sharded queue of width-2 records).  Flush of
+a *traced* sharded queue works in single-program (vmapped logical devices)
+form; when the shards live on a real multi-device mesh, flush at the
+program boundary instead (``device_run(mesh=...)`` does) — XLA cannot lower
+a gathered callback inside the same program as the partitioned loop.
 
 Argument categories (paper Fig. 3):
   * value args      — leaves passed by value; never written back.
@@ -77,6 +94,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -145,8 +163,12 @@ class _Registry:
         self.pad_stats: Dict[int, Dict[str, float]] = {}
         self.stats: Dict[str, Dict[str, float]] = {}
         self.batch_ids: Dict[str, int] = {}        # name -> queue callee id
-        self.batch_names: List[str] = []           # queue callee id -> name
+        self.batch_names: List[Optional[str]] = []  # queue callee id -> name
+        self.batch_free: List[int] = []            # reusable callee id slots
         self.queue_drops = 0
+        self.flushes = 0
+        self.last_flush_drops = 0
+        self._next_pad = 0                         # pad ids are never reused
 
     def register(self, name: str, fn: Callable):
         """(Re-)bind ``name`` to ``fn``.  Pads, pad wrappers and stats for
@@ -155,6 +177,25 @@ class _Registry:
         with self.lock:
             self.hosts[name] = fn
             self.stats.setdefault(name, dict(_zero_stats(), pads=0))
+
+    def unregister(self, name: str):
+        """Remove every trace of ``name``: host binding, stats, landing pads
+        and (tombstoned, slot-recycled) batch callee id.  Used by
+        ``device_run`` to retire auto-named per-instance hooks so repeated
+        runs leave the registry the same size — only call once all pending
+        callbacks referencing the name have drained."""
+        with self.lock:
+            self.hosts.pop(name, None)
+            self.stats.pop(name, None)
+            for key in [k for k in self.pads if k[0] == name]:
+                pid = self.pads.pop(key)
+                self.pad_wrappers.pop(pid, None)
+                self.pad_info.pop(pid, None)
+                self.pad_stats.pop(pid, None)
+            cid = self.batch_ids.pop(name, None)
+            if cid is not None:
+                self.batch_names[cid] = None       # tombstone; id unreachable
+                self.batch_free.append(cid)        # ...until re-issued
 
     def landing_pad(self, name: str, sig: Tuple) -> Tuple[int, Callable]:
         """One pad — and one cached host wrapper — per (callee, flattened
@@ -165,7 +206,8 @@ class _Registry:
             key = (name,) + sig
             pid = self.pads.get(key)
             if pid is None:
-                pid = len(self.pads)
+                pid = self._next_pad
+                self._next_pad += 1
                 self.pads[key] = pid
                 self.pad_info[pid] = key
                 self.pad_stats[pid] = _zero_stats()
@@ -174,15 +216,21 @@ class _Registry:
             return pid, self.pad_wrappers[pid]
 
     def batch_callee_id(self, name: str) -> int:
-        """Small integer id for addressing ``name`` from RpcQueue records."""
+        """Small integer id for addressing ``name`` from RpcQueue records.
+        Slots freed by :meth:`unregister` are recycled, so churning
+        per-instance names does not grow the id space."""
         with self.lock:
             if name not in self.hosts:
                 raise KeyError(f"no host function registered for RPC {name!r}")
             cid = self.batch_ids.get(name)
             if cid is None:
-                cid = len(self.batch_names)
+                if self.batch_free:
+                    cid = self.batch_free.pop()
+                    self.batch_names[cid] = name
+                else:
+                    cid = len(self.batch_names)
+                    self.batch_names.append(name)
                 self.batch_ids[name] = cid
-                self.batch_names.append(name)
             return cid
 
     def bump(self, name: str, pad_id: Optional[int], bytes_in: int,
@@ -201,6 +249,11 @@ class _Registry:
     def bump_drops(self, n: int):
         with self.lock:
             self.queue_drops += n
+
+    def bump_flush(self, drops: int):
+        with self.lock:
+            self.flushes += 1
+            self.last_flush_drops = drops
 
 
 REGISTRY = _Registry()
@@ -234,6 +287,15 @@ def queue_drops() -> int:
         return REGISTRY.queue_drops
 
 
+def flush_stats() -> Dict[str, int]:
+    """Queue-flush accounting: total flushes, total dropped records, and the
+    drop count of the most recent flush (0 when nothing was lost)."""
+    with REGISTRY.lock:
+        return {"flushes": REGISTRY.flushes,
+                "drops": REGISTRY.queue_drops,
+                "last_drops": REGISTRY.last_flush_drops}
+
+
 def reset_rpc_stats():
     with REGISTRY.lock:
         for s in REGISTRY.stats.values():
@@ -243,6 +305,8 @@ def reset_rpc_stats():
             for k in p:
                 p[k] = 0
         REGISTRY.queue_drops = 0
+        REGISTRY.flushes = 0
+        REGISTRY.last_flush_drops = 0
 
 
 # ---------------------------------------------------------------------------
@@ -407,6 +471,40 @@ def _find_obj(state, ptr):
 # Batched transport: on-device RPC queue, drained by ONE ordered callback
 # ---------------------------------------------------------------------------
 
+def _replay_shard(callee, nargs, imask, ivals, fvals, n, overrides, names,
+                  hosts, per_name_calls, per_name_bytes) -> int:
+    """Replay one queue shard's records in enqueue order; returns the number
+    of records that were overwritten before this flush could drain them."""
+    cap = callee.shape[0]
+    lo = max(0, n - cap)
+    for j in range(lo, n):
+        k = j % cap
+        cid = int(callee[k])
+        name = names[cid]
+        fn = (overrides or {}).get(name) or hosts[name]
+        na = int(nargs[k])
+        mask = int(imask[k])
+        args = [int(ivals[k, t]) if (mask >> t) & 1 else float(fvals[k, t])
+                for t in range(na)]
+        fn(*args)
+        per_name_calls[name] = per_name_calls.get(name, 0) + 1
+        per_name_bytes[name] = per_name_bytes.get(name, 0) + 12 + 4 * na
+    return lo
+
+
+def _finish_flush(drops: int, per_name_calls, per_name_bytes):
+    if drops:
+        REGISTRY.bump_drops(drops)
+        warnings.warn(
+            f"RpcQueue flush dropped {drops} record(s): more records were "
+            "enqueued than the queue capacity between flushes; the oldest "
+            "were overwritten.  Flush more often or enlarge the queue.",
+            RuntimeWarning, stacklevel=2)
+    REGISTRY.bump_flush(drops)
+    for name, calls in per_name_calls.items():
+        REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
+
+
 def _drain_queue(callee, nargs, imask, ivals, fvals, head, overrides=None):
     """Host side of :meth:`RpcQueue.flush`: replay queued records in enqueue
     order, dispatching each to its registered callee (resolved at drain
@@ -420,30 +518,41 @@ def _drain_queue(callee, nargs, imask, ivals, fvals, head, overrides=None):
     callee, nargs, imask, ivals, fvals = (
         np.asarray(x) for x in (callee, nargs, imask, ivals, fvals))
     n = int(head)
-    cap = callee.shape[0]
-    lo = max(0, n - cap)
-    if lo:
-        REGISTRY.bump_drops(lo)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:                    # one snapshot, not per record
         names = list(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
-    for j in range(lo, n):
-        k = j % cap
-        cid = int(callee[k])
-        name = names[cid]
-        fn = (overrides or {}).get(name) or hosts[name]
-        na = int(nargs[k])
-        mask = int(imask[k])
-        args = [int(ivals[k, t]) if (mask >> t) & 1 else float(fvals[k, t])
-                for t in range(na)]
-        fn(*args)
-        per_name_calls[name] = per_name_calls.get(name, 0) + 1
-        per_name_bytes[name] = per_name_bytes.get(name, 0) + 12 + 4 * na
-    for name, calls in per_name_calls.items():
-        REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
+    drops = _replay_shard(callee, nargs, imask, ivals, fvals, n, overrides,
+                          names, hosts, per_name_calls, per_name_bytes)
+    _finish_flush(drops, per_name_calls, per_name_bytes)
     return np.int32(n)
+
+
+def _drain_queue_sharded(callee, nargs, imask, ivals, fvals, head,
+                         overrides=None):
+    """Host side of :meth:`ShardedRpcQueue.flush`: every array carries a
+    leading device axis; records replay in ``(device, slot)`` order — device
+    0's records first (oldest surviving to newest), then device 1's, and so
+    on — a deterministic total order over the whole mesh's records."""
+    callee, nargs, imask, ivals, fvals = (
+        np.asarray(x) for x in (callee, nargs, imask, ivals, fvals))
+    head = np.asarray(head)
+    per_name_calls: Dict[str, int] = {}
+    per_name_bytes: Dict[str, int] = {}
+    with REGISTRY.lock:
+        names = list(REGISTRY.batch_names)
+        hosts = dict(REGISTRY.hosts)
+    drops = 0
+    total = 0
+    for d in range(callee.shape[0]):
+        n = int(head[d])
+        total += n
+        drops += _replay_shard(callee[d], nargs[d], imask[d], ivals[d],
+                               fvals[d], n, overrides, names, hosts,
+                               per_name_calls, per_name_bytes)
+    _finish_flush(drops, per_name_calls, per_name_bytes)
+    return np.int32(total)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -569,6 +678,107 @@ class RpcQueue:
                     self.callee, self.nargs, self.imask, self.ivals,
                     self.fvals, self.head, ordered=True)
         return dataclasses.replace(self, head=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sharded batched transport: one queue shard per mesh device
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedRpcQueue:
+    """Per-device RPC queues for expanded regions (one shard per team).
+
+    ``q`` is an :class:`RpcQueue` whose every leaf carries a leading device
+    axis ``(D, ...)`` — under ``shard_map`` with a ``P(mesh_axes)`` spec on
+    that axis, each device owns exactly one shard and ``enqueue`` on its
+    :meth:`local_view` is a pure local array update (no cross-device
+    traffic, the funnel the single-queue transport would force).
+
+    ``flush`` gathers all shards and replays every record on the host in
+    ``(flush-order, device, slot)`` order — deterministic across runs.  Two
+    flush paths:
+
+    * **concrete** (outside jit — e.g. ``device_run(mesh=...)`` flushing at
+      the program boundary): the shards are materialized and drained
+      directly; no callback program is built, which sidesteps XLA's refusal
+      to gather mesh-partitioned operands into a maximal-device callback
+      inside the partitioned program;
+    * **traced** (inside jit, logical/vmapped shards on one device): ONE
+      ordered ``io_callback`` over the stacked arrays.
+    """
+    q: RpcQueue                  # leaves: (D, ...) — device-major shards
+
+    def tree_flatten(self):
+        return ((self.q,), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0])
+
+    @property
+    def n_devices(self) -> int:
+        return self.q.callee.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.q.callee.shape[1]
+
+    @property
+    def width(self) -> int:
+        return self.q.ivals.shape[2]
+
+    @staticmethod
+    def create(n_devices: int, capacity: int = 1024, width: int = 4
+               ) -> "ShardedRpcQueue":
+        q = RpcQueue.create(capacity, width)
+        return ShardedRpcQueue(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
+
+    # -- shard access (the expand/team protocol) -----------------------------
+    def local_view(self) -> RpcQueue:
+        """THIS device's shard as a plain :class:`RpcQueue` — valid inside a
+        ``shard_map`` region (leading axis is the size-1 local block)."""
+        assert self.q.callee.shape[0] == 1, \
+            "local_view() is only meaningful on a single-device shard " \
+            "(inside shard_map); use local(dev) outside"
+        return jax.tree.map(lambda a: a[0], self.q)
+
+    def with_local(self, local: RpcQueue) -> "ShardedRpcQueue":
+        """Inverse of :meth:`local_view`: re-wrap an updated local shard so
+        ``shard_map`` out-specs can stitch the device axis back together."""
+        return ShardedRpcQueue(jax.tree.map(lambda a: a[None], local))
+
+    def local(self, dev) -> RpcQueue:
+        """Device ``dev``'s shard (host-side / whole-array view)."""
+        return jax.tree.map(lambda a: a[dev], self.q)
+
+    def flush(self, handlers: Optional[Dict[str, Callable]] = None
+              ) -> "ShardedRpcQueue":
+        """Drain every shard to the host; records replay in
+        ``(device, slot)`` order.  Returns the emptied sharded queue."""
+        leaves = jax.tree.leaves(self.q)
+        if any(isinstance(x, jax.core.Tracer) for x in leaves):
+            if handlers:
+                bound = dict(handlers)
+
+                def drain(*flat):
+                    return _drain_queue_sharded(*flat, overrides=bound)
+            else:
+                drain = _drain_queue_sharded
+            io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
+                        self.q.callee, self.q.nargs, self.q.imask,
+                        self.q.ivals, self.q.fvals, self.q.head, ordered=True)
+        else:
+            # concrete shards (program boundary): drain directly — this also
+            # works when the shards live on a real multi-device mesh
+            _drain_queue_sharded(self.q.callee, self.q.nargs, self.q.imask,
+                                 self.q.ivals, self.q.fvals, self.q.head,
+                                 overrides=dict(handlers) if handlers
+                                 else None)
+        return dataclasses.replace(
+            self, q=dataclasses.replace(
+                self.q, head=jnp.zeros((self.n_devices,), jnp.int32)))
 
 
 # ---------------------------------------------------------------------------

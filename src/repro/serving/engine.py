@@ -112,7 +112,11 @@ class ServingEngine:
 
     def __init__(self, model: Model, params, *, batch_slots: int = 4,
                  max_len: int = 256, page_size: int = 16,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, mesh=None):
+        """``mesh`` (a ``jax.sharding.Mesh`` or an int shard count) shards
+        the KV page heap per device: each device's allocator shard serves
+        its block of batch slots, so page alloc/release never funnel
+        through one allocator state (see ``serving/kvcache.py``)."""
         self.model = model
         self.cfg = model.cfg
         assert self.cfg.family in ("dense", "moe", "vlm"), \
@@ -121,7 +125,7 @@ class ServingEngine:
         self.params = params
         self.B = batch_slots
         self.kv = kvcache.paged_cache_init(
-            self.cfg, batch_slots, max_len, page_size=page_size)
+            self.cfg, batch_slots, max_len, page_size=page_size, mesh=mesh)
         self.eos_id = eos_id
         self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, List[int], int]] = []

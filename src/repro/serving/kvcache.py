@@ -17,17 +17,30 @@ Pages are shared across layers (a page id addresses every layer's page
 arrays), as in vLLM.  Attention over the paged cache uses the
 ``paged_attention`` Pallas kernel on TPU (the page table drives BlockSpec
 index maps) and a gather-based XLA reference elsewhere.
+
+**Sharded page heaps.**  When a mesh is passed (``paged_cache_init(...,
+mesh=)``), the page allocator becomes a per-device
+:class:`~repro.core.allocator.ShardedHeap` of balanced states: the page-id
+space is partitioned into one contiguous span per device, batch slots are
+block-assigned to devices (slot ``b`` lives on device ``b // (B / D)``),
+and both ``ensure_pages`` and ``release_slots`` run every device's shard in
+parallel — no funnel through one allocator state when the engine itself is
+expanded over the mesh.  Page ids stay global (``dev * span + local``), so
+the page table, the attention kernels, and ``find_obj``-based ``ArenaRef``
+marshalling are unchanged.  On a 1-device mesh the sharded path is
+bit-identical to the single-heap path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.allocator import BalancedAllocator, BalancedState
+from repro.core.allocator import (BalancedAllocator, BalancedState,
+                                  ShardedAllocator, ShardedHeap, shard_heap)
 from repro.kernels.paged_attention import paged_decode_attention
 
 
@@ -38,7 +51,8 @@ class PagedKV:
     v_pages: jax.Array
     page_table: jax.Array    # (B, MAXP) int32
     lengths: jax.Array       # (B,) int32
-    alloc: BalancedState     # page-slot allocator (arena = page-id space)
+    alloc: Union[BalancedState, ShardedHeap]  # page-slot allocator
+    #                          (arena = page-id space; sharded under a mesh)
     page_size: int
 
     def tree_flatten(self):
@@ -50,16 +64,34 @@ class PagedKV:
         return cls(*leaves, aux)
 
 
+def _mesh_devices(mesh) -> int:
+    """Device count of a mesh-like: a ``jax.sharding.Mesh`` or a plain int
+    (logical shard count — lets tests/benches run D>1 shards on one physical
+    device; the sharded heap is a data layout, not a placement)."""
+    return int(mesh) if isinstance(mesh, int) else int(mesh.size)
+
+
 def paged_cache_init(cfg: ModelConfig, batch_slots: int, max_len: int,
                      *, page_size: int = 64,
-                     n_pages: Optional[int] = None) -> PagedKV:
+                     n_pages: Optional[int] = None, mesh=None) -> PagedKV:
     hd = cfg.resolved_head_dim
     maxp = (max_len + page_size - 1) // page_size
     n_pages = n_pages if n_pages is not None else batch_slots * maxp
     cdt = jnp.dtype(cfg.dtype)
     L = cfg.num_layers
-    alloc = BalancedAllocator.init(
-        n_pages, batch_slots, 1, cap=maxp, first_chunk_ratio=1.0)
+    if mesh is None:
+        alloc = BalancedAllocator.init(
+            n_pages, batch_slots, 1, cap=maxp, first_chunk_ratio=1.0)
+    else:
+        D = _mesh_devices(mesh)
+        assert batch_slots % D == 0, \
+            f"batch_slots={batch_slots} must tile the {D} mesh devices"
+        assert n_pages % D == 0, \
+            f"n_pages={n_pages} must tile the {D} mesh devices"
+        local = BalancedAllocator.init(
+            n_pages // D, batch_slots // D, 1, cap=maxp,
+            first_chunk_ratio=1.0)
+        alloc = shard_heap(local, D)      # span = pages per device
     return PagedKV(
         k_pages=jnp.zeros((L, n_pages, page_size, cfg.num_kv_heads, hd), cdt),
         v_pages=jnp.zeros((L, n_pages, page_size, cfg.num_kv_heads, hd), cdt),
@@ -73,11 +105,18 @@ def ensure_pages(kv: PagedKV, active: jax.Array) -> PagedKV:
     """Allocate a page for every active slot whose next token crosses a page
     boundary.  One balanced-allocator grid call: chunks are per-slot, so the
     allocation is embarrassingly parallel (and a full slot fails safe: FAIL
-    page ids are clipped by the kernel and masked by ``lengths``)."""
+    page ids are clipped by the kernel and masked by ``lengths``).  With a
+    sharded page heap, each device's shard serves its block of slots — all
+    devices in parallel, global page ids out."""
     B = kv.lengths.shape[0]
     need = active & (kv.lengths % kv.page_size == 0)
     sizes = jnp.where(need, 1, 0).astype(jnp.int32).reshape(B, 1)
-    alloc, ptrs = BalancedAllocator.malloc_grid(kv.alloc, B, 1, sizes)
+    if isinstance(kv.alloc, ShardedHeap):
+        D = kv.alloc.n_devices
+        alloc, ptrs = ShardedAllocator.malloc_grid(
+            kv.alloc, B // D, 1, sizes.reshape(D, B // D, 1))
+    else:
+        alloc, ptrs = BalancedAllocator.malloc_grid(kv.alloc, B, 1, sizes)
     ptrs = ptrs.reshape(B)
     slot_idx = kv.lengths // kv.page_size
     new_table = jnp.where(
@@ -127,6 +166,10 @@ def advance(kv: PagedKV, active: jax.Array) -> PagedKV:
 def release_slot(kv: PagedKV, slot: int) -> PagedKV:
     """O(1) request completion: reset the slot's allocator chunk (watermark
     reclaim of the whole stack) and zero its table row."""
+    if isinstance(kv.alloc, ShardedHeap):
+        B = kv.lengths.shape[0]
+        return release_slots(
+            kv, jnp.zeros((B,), bool).at[slot].set(True))
     alloc = BalancedAllocator.reset_chunk(kv.alloc, slot)
     return dataclasses.replace(
         kv, alloc=alloc,
@@ -139,10 +182,17 @@ def release_slots(kv: PagedKV, mask: jax.Array) -> PagedKV:
     true in ONE vectorized allocator reset — the free-side counterpart of
     :func:`ensure_pages`'s bulk page allocation (no per-slot loop, so a
     continuous-batching engine retiring many requests per step pays one
-    dispatch)."""
+    dispatch).  With a sharded page heap, each device resets its own
+    shard's chunks — all devices in parallel."""
     mask = jnp.asarray(mask)
+    if isinstance(kv.alloc, ShardedHeap):
+        D = kv.alloc.n_devices
+        alloc = ShardedAllocator.reset_chunks(
+            kv.alloc, mask.reshape(D, mask.shape[0] // D))
+    else:
+        alloc = BalancedAllocator.reset_chunks(kv.alloc, mask)
     return dataclasses.replace(
         kv,
-        alloc=BalancedAllocator.reset_chunks(kv.alloc, mask),
+        alloc=alloc,
         page_table=jnp.where(mask[:, None], 0, kv.page_table),
         lengths=jnp.where(mask, 0, kv.lengths))

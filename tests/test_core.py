@@ -117,6 +117,17 @@ def test_parallel_for_matches_serial():
                                serial_for(body, 32, arr))
 
 
+@pytest.mark.parametrize("n", [7, 1, 31, 0])
+def test_parallel_for_ragged(n):
+    """Ragged iteration spaces are supported (padded + masked tail); the
+    multi-device variant is exercised in test_sharded_runtime.py."""
+    arr = jnp.arange(32.0)
+    body = lambda i, a: a[i] * 2.0 - i
+    out = parallel_for(body, n, arr)
+    assert out.shape[0] == n
+    np.testing.assert_allclose(out, serial_for(body, n, arr))
+
+
 # ---------------------------------------------------------------------------
 # Device libc (paper §3.4)
 # ---------------------------------------------------------------------------
@@ -219,3 +230,53 @@ def test_device_run_hooks_fire_on_schedule():
     assert float(final) == 10.0
     assert [i for i, _ in seen] == [3, 6, 9]
     assert [v for _, v in seen] == [3.0, 6.0, 9.0]
+
+
+def test_device_run_nonfiring_steps_are_host_free():
+    """Regression (ISSUE 3 headline satellite): the non-firing branch of an
+    immediate hook used to dispatch an ordered ``hook.noop`` RPC — one host
+    round-trip on EVERY step.  An every=100 hook over 1000 steps must
+    contact the host exactly 10 times: the hook's firings, nothing else."""
+    jax.effects_barrier()                  # drain strays before counting
+    reset_rpc_stats()
+    seen = []
+    hook = HostHook(every=100, extract=lambda i, s: s,
+                    host_fn=lambda i, v: seen.append(i), name="hook.sparse")
+    device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 1000,
+               hooks=[hook], donate=False)
+    jax.effects_barrier()
+    assert seen == list(range(100, 1001, 100))
+    # TOTAL host callback count across every RPC name == the 10 firings;
+    # in particular there is no noop callee taking ~1000 calls
+    per_name = {k: v["calls"] for k, v in rpc_stats().items() if v["calls"]}
+    assert sum(per_name.values()) == 10, per_name
+    assert per_name == {"hook.sparse": 10}
+
+
+def test_device_run_retires_auto_named_hooks():
+    """Hooks without an explicit name must not leak registry entries (or
+    allow id() reuse to rebind a dead hook's pad): repeated device_run
+    calls leave the registry at constant size."""
+    from repro.core.rpc import REGISTRY
+
+    def run_once():
+        hook = HostHook(every=2, extract=lambda i, s: s,
+                        host_fn=lambda i, v: None)
+        device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 4,
+                   hooks=[hook], donate=False)
+        return (len(REGISTRY.hosts), len(REGISTRY.pads),
+                len(REGISTRY.pad_wrappers), len(REGISTRY.batch_names))
+
+    sizes = [run_once() for _ in range(3)]
+    assert sizes[0] == sizes[1] == sizes[2], sizes
+
+    # batched auto-named hooks recycle their batch callee id slot too
+    def run_batched():
+        hook = HostHook(every=2, extract=lambda i, s: s,
+                        host_fn=lambda i, v: None, batched=True)
+        device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 4,
+                   hooks=[hook], donate=False)
+        return (len(REGISTRY.hosts), len(REGISTRY.batch_names))
+
+    sizes = [run_batched() for _ in range(3)]
+    assert sizes[0] == sizes[1] == sizes[2], sizes

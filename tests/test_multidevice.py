@@ -15,7 +15,10 @@ def run_child(code: str, devices: int = 8, timeout: int = 560) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the cpu platform: forced host devices ARE cpu devices, and letting
+    # the child probe for accelerators stalls for minutes on hosts that
+    # carry a (here unusable) TPU runtime
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=timeout, env=env)
     assert out.returncode == 0, out.stderr[-4000:]

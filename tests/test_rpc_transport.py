@@ -15,8 +15,9 @@ import pytest
 from repro.core.allocator import GenericAllocator as GA
 from repro.core.device_main import HostHook, device_run
 from repro.core.rpc import (
-    READ, READWRITE, REGISTRY, ArenaRef, Ref, RpcQueue, host_rpc, pad_stats,
-    pad_table, queue_drops, reset_rpc_stats, rpc_call, rpc_stats)
+    READ, READWRITE, REGISTRY, ArenaRef, Ref, RpcQueue, flush_stats,
+    host_rpc, pad_stats, pad_table, queue_drops, reset_rpc_stats, rpc_call,
+    rpc_stats)
 
 I32 = jax.ShapeDtypeStruct((), jnp.int32)
 F32 = jax.ShapeDtypeStruct((), jnp.float32)
@@ -287,6 +288,44 @@ def test_queue_overflow_drops_oldest():
     jax.effects_barrier()
     assert seen == [2, 3, 4, 5]          # oldest two overwritten
     assert queue_drops() == 2
+
+
+def test_queue_overflow_surfaced_at_flush():
+    """Satellite (ISSUE 3): capacity + k enqueues must REPORT k drops at
+    flush — warn + counts in flush_stats — while the surviving records
+    replay in exact enqueue order (no corruption); a non-overflowing flush
+    then reports last_drops == 0."""
+    jax.effects_barrier()
+    reset_rpc_stats()
+    seen = []
+    REGISTRY.register("q.wrap", lambda i: seen.append(i))
+    k, cap = 3, 4
+
+    @jax.jit
+    def overflowing():
+        q = RpcQueue.create(capacity=cap, width=1)
+        for i in range(cap + k):
+            q = q.enqueue("q.wrap", jnp.int32(i))
+        q.flush()
+        return jnp.int32(0)
+
+    overflowing()
+    jax.effects_barrier()
+    assert seen == list(range(k, cap + k))      # order preserved, k lost
+    st = flush_stats()
+    assert st == {"flushes": 1, "drops": k, "last_drops": k}
+
+    @jax.jit
+    def clean():
+        q = RpcQueue.create(capacity=cap, width=1)
+        q = q.enqueue("q.wrap", jnp.int32(99))
+        q.flush()
+        return jnp.int32(0)
+
+    clean()
+    jax.effects_barrier()
+    st = flush_stats()
+    assert st == {"flushes": 2, "drops": k, "last_drops": 0}
 
 
 def test_queue_rejects_nonscalar_and_overwidth():

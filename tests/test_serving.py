@@ -70,6 +70,27 @@ def test_engine_mixed_lengths_continuous_batching(dense_model):
         assert res[rid] == ref, rid
 
 
+def test_engine_sharded_page_heap_matches(dense_model):
+    """ISSUE 3: an engine on the sharded page heap (mesh=2: one heap shard
+    per device block of slots) decodes exactly what the single-heap engine
+    decodes — page ids move, token streams don't."""
+    from repro.core.allocator import ShardedHeap
+    cfg, model, params = dense_model
+    prompts = [([5, 17, 42, 7], 6), ([9, 3], 4)]
+    engines = [
+        ServingEngine(model, params, batch_slots=2, max_len=64, page_size=8),
+        ServingEngine(model, params, batch_slots=2, max_len=64, page_size=8,
+                      mesh=2),
+    ]
+    assert isinstance(engines[1].kv.alloc, ShardedHeap)
+    results = []
+    for eng in engines:
+        rids = [eng.submit(p, max_new=n) for p, n in prompts]
+        res = eng.run_until_drained()
+        results.append([res[r] for r in rids])
+    assert results[0] == results[1]
+
+
 def test_paged_cache_allocator_lifecycle(dense_model):
     cfg, _, _ = dense_model
     kv = kvcache.paged_cache_init(cfg, batch_slots=2, max_len=64, page_size=8)
