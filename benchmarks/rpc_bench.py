@@ -14,11 +14,25 @@ io_callback each) vs enqueued on device and drained by ONE ordered flush.
 The reported ``amortization`` is per-call cost / batched cost — the factor
 the batched transport amortizes the host round-trip by.
 
+The payload section (ISSUE 4) repeats that contrast for ARRAY-carrying RPCs
+— the calls that transport v2 forced onto the per-call path because records
+were fixed-width: N_QUEUED records each shipping a P-element float payload,
+per-call ordered io_callback vs the v3 payload arena (enqueue copies the
+array into the on-device arena; ONE flush drains records + arena).  Measured
+at P in {1, 64, 1024}; the 64-element point is the acceptance gate (>= 5x).
+The scalar batched number doubles as the v3-vs-v2 scalar-record regression
+guard: BENCH_rpc.json is a perf-trajectory artifact, so the next PR diffs
+enqueue/flush throughput against this one.
+
 The sharded section (ISSUE 3) contrasts the FUNNELED transport (every
 logical device's records through one queue) with the sharded transport
 (one queue shard per device, one gathered flush replaying (device, slot)
 order) — the per-device answer to the same Fig. 7 serialization, one level
 up.
+
+Results are emitted as CSV rows AND returned as a perf-trajectory artifact
+dict; ``benchmarks/run.py`` (or running this module directly) writes it to
+``BENCH_rpc.json`` so future PRs can diff transport performance.
 """
 from __future__ import annotations
 
@@ -28,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, sharded_queue_contrast, time_fn
+from benchmarks.common import (emit, sharded_queue_contrast, time_fn,
+                               write_artifact)
 from repro.core.libc import LogRing, drain_log_lines
 from repro.core.rpc import (REGISTRY, Ref, RpcQueue, host_rpc,
                             reset_rpc_stats, rpc_call)
@@ -36,9 +51,12 @@ from repro.core.rpc import (REGISTRY, Ref, RpcQueue, host_rpc,
 N_CALLS = 200
 N_QUEUED = 64
 N_SHARDS = 4
+PAYLOAD_ELEMS = (1, 64, 1024)
+PAYLOAD_TARGET = 5.0              # acceptance: >= 5x amortization at 64 elems
 
 
-def run() -> None:
+def run() -> dict:
+    artifact = {"name": "rpc", "schema": 1}
     reset_rpc_stats()
     sink = []
 
@@ -92,13 +110,26 @@ def run() -> None:
     emit("fig7/buffered_logring", (t_buf - t_dev) / N_CALLS * 1e6,
          f"rpc_vs_buffered={per_call / max((t_buf - t_dev) / N_CALLS, 1e-12):.1f}x")
     drain_log_lines()
+    artifact["fig7"] = {
+        "rpc_roundtrip_us": per_call * 1e6,
+        "wait_fraction": wait_frac,
+        "host_body_us": t_host / N_CALLS * 1e6,
+        "buffered_logring_us": (t_buf - t_dev) / N_CALLS * 1e6,
+    }
 
-    run_batched()
-    run_sharded()
+    run_batched(artifact)
+    run_payload(artifact)
+    run_sharded(artifact)
+    return artifact
 
 
-def run_batched() -> None:
-    """Per-call io_callback vs the batched RpcQueue flush, N_QUEUED RPCs."""
+def run_batched(artifact=None) -> None:
+    """Per-call io_callback vs the batched RpcQueue flush, N_QUEUED RPCs.
+
+    The batched number is the SCALAR-record throughput guard: v3 added the
+    payload lanes (pmask/plens/arena) to every queue, so this entry in the
+    BENCH_rpc.json trajectory is what the acceptance criterion's "scalar
+    throughput within 10%" is diffed against."""
     tally = []
 
     def record(i, x):
@@ -144,10 +175,91 @@ def run_batched() -> None:
     if amort < 5.0:
         print(f"WARNING: batched amortization {amort:.1f}x < 5x target",
               flush=True)
+    if artifact is not None:
+        artifact["batched"] = {
+            "records": N_QUEUED,
+            "percall_us_per_record": per_call * 1e6,
+            "scalar_batched_us_per_record": batched * 1e6,
+            "amortization": amort,
+        }
     tally.clear()
 
 
-def run_sharded() -> None:
+def run_payload(artifact=None) -> None:
+    """ISSUE 4 (Fig. 7 with array payloads): N_QUEUED RPCs each carrying a
+    P-element float array — per-call ordered io_callback vs v3 arena-batched
+    enqueue + ONE flush.  The 64-element point must amortize >= 5x."""
+    got = []
+
+    def payload_sink(i, arr):
+        got.append((int(i), len(arr)))
+        return np.int32(0)
+
+    REGISTRY.register("bench.payload", payload_sink)
+
+    from jax import lax
+
+    def drained(fn):
+        """Time the callbacks too: an ordered io_callback completes after
+        its result is ready, so both contestants must drain effects inside
+        the timed region or the flush cost leaks into the next iteration."""
+        jfn = jax.jit(fn)
+
+        def g(s):
+            out = jfn(s)
+            jax.block_until_ready(out)
+            jax.effects_barrier()
+            return out
+
+        return g
+
+    for P in PAYLOAD_ELEMS:
+        def percall_loop(s):
+            def body(i, s):
+                arr = s + jnp.arange(P, dtype=jnp.float32)
+                rpc_call("bench.payload", i, arr,
+                         result_shape=jax.ShapeDtypeStruct((), jnp.int32))
+                return s + 1.0
+            return lax.fori_loop(0, N_QUEUED, body, s)
+
+        def batched_loop(s):
+            q = RpcQueue.create(N_QUEUED, width=2,
+                                payload_capacity=N_QUEUED * P)
+
+            def body(i, carry):
+                s, q = carry
+                arr = s + jnp.arange(P, dtype=jnp.float32)
+                return s + 1.0, q.enqueue("bench.payload", i, arr)
+
+            s, q = lax.fori_loop(0, N_QUEUED, body, (s, q))
+            q.flush()
+            return s
+
+        s0 = jnp.float32(0.0)
+        t_percall = time_fn(drained(percall_loop), s0, warmup=2, iters=9)
+        t_batched = time_fn(drained(batched_loop), s0, warmup=2, iters=9)
+
+        per_call = t_percall / N_QUEUED
+        batched = t_batched / N_QUEUED
+        amort = per_call / batched
+        emit(f"fig7/payload{P}/percall", per_call * 1e6)
+        emit(f"fig7/payload{P}/arena_batched", batched * 1e6,
+             f"amortization={amort:.1f}x")
+        if P == 64 and amort < PAYLOAD_TARGET:
+            print(f"WARNING: payload-64 amortization {amort:.1f}x < "
+                  f"{PAYLOAD_TARGET:.0f}x target", flush=True)
+        if artifact is not None:
+            artifact.setdefault("payload", {})[f"elems{P}"] = {
+                "records": N_QUEUED,
+                "payload_elems": P,
+                "percall_us_per_record": per_call * 1e6,
+                "arena_batched_us_per_record": batched * 1e6,
+                "amortization": amort,
+            }
+    got.clear()
+
+
+def run_sharded(artifact=None) -> None:
     """Funneled (one queue for all devices' records) vs sharded (one queue
     shard per device, one gathered (device, slot)-ordered flush)."""
     D, K = N_SHARDS, N_QUEUED
@@ -157,7 +269,15 @@ def run_sharded() -> None:
     emit(f"fig7/sharded_queue_{D}x{K}/funneled", per_fun * 1e6)
     emit(f"fig7/sharded_queue_{D}x{K}/sharded", per_sh * 1e6,
          f"speedup_vs_funneled={per_fun/max(per_sh, 1e-12):.2f}x")
+    if artifact is not None:
+        artifact["sharded"] = {
+            "devices": D,
+            "records": D * K,
+            "funneled_us_per_record": per_fun * 1e6,
+            "sharded_us_per_record": per_sh * 1e6,
+            "sharded_speedup": per_fun / max(per_sh, 1e-12),
+        }
 
 
 if __name__ == "__main__":
-    run()
+    write_artifact("BENCH_rpc.json", run())

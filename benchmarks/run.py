@@ -6,9 +6,12 @@ artifact ``BENCH_<name>.json`` (to ``$BENCH_ARTIFACT_DIR`` or cwd) that CI
 uploads, so future PRs can diff performance — ``fig6_allocator`` emits
 ``BENCH_allocator.json`` (per-grid µs/alloc for generic vs balanced v1 vs
 v2, the find_obj v1-vs-v2 contrast, the sharded-vs-funneled heap/queue
-contrast, and the ``sharded_mesh`` entry: malloc_grid + sharded queue
-flush under a real >=2-device mesh with bit-identical-to-single-heap
-verification).
+contrast — with the >=0.9x sharded-parity assertion — and the
+``sharded_mesh`` entry: malloc_grid + sharded queue flush under a real
+>=2-device mesh with bit-identical-to-single-heap verification);
+``fig7_rpc`` emits ``BENCH_rpc.json`` (per-call vs batched scalar records,
+the v3 payload contrast at 1/64/1024 elements, and the sharded queue
+contrast).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
 """

@@ -402,8 +402,20 @@ class SizeClassAllocator:
     bit trick: reduce each class's words to an any-free summary, pick the
     first class >= ``ceil_log2(size)`` (every block there is guaranteed to
     fit), then the first set bit (``x & -x`` + ``lax.clz``) names the entry.
-    No watermark reclaim: freed blocks are recycled through their bins, which
-    keeps ``free`` O(log cap) and makes steady-state churn allocation-free.
+    No per-free watermark reclaim: freed blocks are recycled through their
+    bins, which keeps ``free`` O(log cap) and makes steady-state churn
+    allocation-free.
+
+    **Coalescing** (v3): :meth:`coalesce` merges every run of spatially
+    adjacent free holes into one block BEFORE re-inserting it into its (now
+    larger) class bin — one vectorized pass (adjacency mask -> run prefix
+    sums -> table compaction -> bin rebuild), no scan.  ``malloc`` runs it
+    automatically when both the bins and the watermark fail, so a
+    fragmented heap stops failing allocations whose bytes exist but sit in
+    adjacent holes.  A merged run that ends at the watermark is reclaimed
+    entirely (so freeing EVERYTHING restores the fresh-arena state: one
+    full-capacity heap, count 0, watermark 0).  Reuse still hands out the
+    whole hole (no splitting — bounded internal fragmentation, as before).
     """
 
     @staticmethod
@@ -416,7 +428,120 @@ class SizeClassAllocator:
             jnp.zeros((), I32), jnp.zeros((), I32), heap_size)
 
     @staticmethod
+    def coalesce(st: SizeClassState) -> SizeClassState:
+        """Merge every maximal run of spatially adjacent free holes into its
+        first entry, compact the table (sortedness and the DEAD-sentinel
+        discipline are preserved, so ``find_obj``/``free`` stay
+        ``searchsorted``), rebuild the class bins from the merged
+        capacities, and reclaim the watermark when the topmost merged hole
+        touches it.  O(cap) fully vectorized — no ``lax.scan``."""
+        cap = st.offsets.shape[0]
+        nwords = st.free_bits.shape[1]
+        e = jnp.arange(cap)
+        valid = e < st.count
+        freeb = valid & (st.in_use == 0)
+        # watermark-bump creation tiles [0, watermark): entry i+1 starts at
+        # entry i's capacity end, so table adjacency IS spatial adjacency —
+        # checked anyway, so a future layout change degrades to no-merge
+        prev_free = jnp.concatenate([jnp.zeros((1,), jnp.bool_), freeb[:-1]])
+        prev_end = jnp.concatenate(
+            [jnp.zeros((1,), I32), (st.offsets + st.caps)[:-1]])
+        run_start = freeb & ~(prev_free & (st.offsets == prev_end))
+        # rank of each free entry's run; merged capacity = per-run sum
+        run = jnp.cumsum(run_start.astype(I32)) - 1
+        merged = jnp.zeros((cap,), I32).at[
+            jnp.where(freeb, run, cap)].add(
+            jnp.where(freeb, st.caps, 0), mode="drop")
+        keep = (valid & (st.in_use == 1)) | run_start
+        dst = jnp.where(keep, jnp.cumsum(keep.astype(I32)) - 1, cap)
+        count = jnp.sum(keep.astype(I32))
+        caps_src = jnp.where(run_start, merged[jnp.clip(run, 0, cap - 1)],
+                             st.caps)
+        offsets = jnp.full((cap,), DEAD).at[dst].set(st.offsets, mode="drop")
+        sizes = jnp.zeros((cap,), I32).at[dst].set(
+            jnp.where(freeb, 0, st.sizes), mode="drop")
+        caps = jnp.zeros((cap,), I32).at[dst].set(caps_src, mode="drop")
+        in_use = jnp.zeros((cap,), I32).at[dst].set(st.in_use, mode="drop")
+        is_free = jnp.zeros((cap,), jnp.bool_).at[dst].set(run_start,
+                                                           mode="drop")
+        # reclaim the top: a merged hole ending at the watermark is the
+        # stack top — drop the entry and pull the watermark down
+        top = jnp.maximum(count - 1, 0)
+        top_free = (count > 0) & is_free[top] & \
+            (offsets[top] + caps[top] == st.watermark)
+        wm = jnp.where(top_free, offsets[top], st.watermark)
+        drop_top = lambda a, z: jnp.where(top_free & (e == top), z, a)
+        offsets = drop_top(offsets, DEAD)
+        sizes = drop_top(sizes, 0)
+        caps = drop_top(caps, 0)
+        is_free = is_free & ~(top_free & (e == top))
+        count = jnp.where(top_free, count - 1, count)
+        # bins rebuilt from merged holes (each entry owns a distinct bit of
+        # its (class, word) cell, so scatter-add == OR; non-free entries
+        # contribute 0)
+        c_e = _floor_log2(jnp.maximum(caps, 1))
+        contrib = jnp.where(is_free, U32(1) << (e % 32).astype(U32), U32(0))
+        free_bits = jnp.zeros((NCLASSES, nwords), U32).at[
+            c_e, e // 32].add(contrib)
+        return dataclasses.replace(
+            st, offsets=offsets, sizes=sizes, caps=caps, in_use=in_use,
+            free_bits=free_bits, count=count, watermark=wm)
+
+    @staticmethod
     def malloc(st: SizeClassState, size) -> Tuple[SizeClassState, jax.Array]:
+        """Bin reuse / watermark bump; when BOTH fail for a positive size,
+        coalesce adjacent free holes once and retry with an EXACT first-fit
+        (class search rounds up, so a request within 2x of the merged
+        hole's capacity would skip it) — fragmentation recovery on the
+        failure path only; the happy path stays O(#classes).
+
+        Dispatched through a module-level ``jax.jit`` (inlined when already
+        under jit): an EAGER ``lax.cond`` re-traces its branches every
+        call, and the retry branch carries the whole coalesce pass."""
+        return _sizeclass_malloc_jit(st, jnp.asarray(size, I32))
+
+    @staticmethod
+    def _malloc_with_retry(st: SizeClassState, size
+                           ) -> Tuple[SizeClassState, jax.Array]:
+        st1, ptr = SizeClassAllocator._malloc_once(st, size)
+        need_retry = (ptr == FAIL) & (size > 0)
+        return lax.cond(
+            need_retry,
+            lambda s: SizeClassAllocator._malloc_fallback(
+                SizeClassAllocator.coalesce(s), size),
+            lambda s: (st1, ptr), st)
+
+    @staticmethod
+    def _malloc_fallback(st: SizeClassState, size
+                         ) -> Tuple[SizeClassState, jax.Array]:
+        """Post-coalesce retry: exact first-fit over the free entries (the
+        failure path can afford the O(cap) mask), then the regular
+        class-reuse / watermark path (coalescing may have reclaimed the
+        watermark) when no hole fits exactly."""
+        size = jnp.asarray(size, I32)
+        cap = st.offsets.shape[0]
+        ok = (st.in_use == 0) & (st.caps >= size) & \
+            (jnp.arange(cap) < st.count) & (size > 0)
+        has_fit = jnp.any(ok)
+        ei = jnp.argmax(ok).astype(I32)
+
+        def take(st):
+            c = _floor_log2(jnp.maximum(st.caps[ei], 1))
+            w, b = ei // 32, ei % 32
+            word = st.free_bits[c, w] & ~(U32(1) << b.astype(U32))
+            return dataclasses.replace(
+                st,
+                sizes=st.sizes.at[ei].set(size),
+                in_use=st.in_use.at[ei].set(1),
+                free_bits=st.free_bits.at[c, w].set(word)), st.offsets[ei]
+
+        return lax.cond(
+            has_fit, take,
+            lambda s: SizeClassAllocator._malloc_once(s, size), st)
+
+    @staticmethod
+    def _malloc_once(st: SizeClassState, size
+                     ) -> Tuple[SizeClassState, jax.Array]:
         size = jnp.asarray(size, I32)
         cap = st.offsets.shape[0]
         valid = size > 0
@@ -509,6 +634,11 @@ class SizeClassAllocator:
             st,
             in_use=jnp.where(freed, 0, st.in_use),
             free_bits=st.free_bits.at[c_e, e // 32].add(contrib))
+
+
+#: Cached entry point for :meth:`SizeClassAllocator.malloc` — one compile
+#: per (cap, heap_size) instead of an eager branch re-trace per call.
+_sizeclass_malloc_jit = jax.jit(SizeClassAllocator._malloc_with_retry)
 
 
 # ---------------------------------------------------------------------------
@@ -995,33 +1125,86 @@ class ShardedAllocator:
         return found & valid, dev * st.span + base, size
 
     # -- balanced-inner grid ops (the expand/parallel-region pattern) --------
+    #
+    # A ShardedHeap of balanced states is D x NC independent chunks; a
+    # nested vmap (devices of chunks) asks XLA to batch an already-batched
+    # kernel and pays per-device grid regroup transposes.  These entry
+    # points FLATTEN the device axis into the chunk axis instead — one vmap
+    # over D*NC chunks, one kernel — which removed the sharded-vs-funneled
+    # malloc_grid regression (BENCH_allocator.json ``sharded`` section).
+    @staticmethod
+    def _flat_rows(sh: BalancedState, dn: int):
+        return {
+            "offsets": sh.offsets.reshape(dn, -1),
+            "sizes": sh.sizes.reshape(dn, -1),
+            "caps": sh.caps.reshape(dn, -1),
+            "in_use": sh.in_use.reshape(dn, -1),
+            "count": sh.count.reshape(dn),
+            "wm": sh.watermark.reshape(dn),
+            "csize": sh.chunk_size.reshape(dn),
+        }
+
+    @staticmethod
+    def _unflat_rows(sh: BalancedState, rows) -> BalancedState:
+        return dataclasses.replace(
+            sh,
+            offsets=rows["offsets"].reshape(sh.offsets.shape),
+            sizes=rows["sizes"].reshape(sh.sizes.shape),
+            caps=rows["caps"].reshape(sh.caps.shape),
+            in_use=rows["in_use"].reshape(sh.in_use.shape),
+            count=rows["count"].reshape(sh.count.shape),
+            watermark=rows["wm"].reshape(sh.watermark.shape))
+
     @staticmethod
     def malloc_grid(st: ShardedHeap, n_threads: int, n_teams: int, sizes
                     ) -> Tuple[ShardedHeap, jax.Array]:
-        """``sizes``: (D, n_threads, n_teams) — each device runs its own
-        balanced ``malloc_grid`` on its shard; all devices in parallel.
-        Returns (D, n_threads, n_teams) global pointers."""
+        """``sizes``: (D, n_threads, n_teams) — every device's balanced grid
+        allocation, dispatched as ONE vmap over all D*NC chunks.  Returns
+        (D, n_threads, n_teams) global pointers."""
+        sh = st.shards
+        D, NC = sh.offsets.shape[0], sh.offsets.shape[1]
+        N, M = sh.n_slots, sh.m_slots
+        assert n_threads % N == 0 and n_teams % M == 0, \
+            "grid must tile the chunk slots"
         sizes = jnp.asarray(sizes, I32)
-        shards, local = jax.vmap(
-            lambda sh, sz: BalancedAllocator.malloc_grid(
-                sh, n_threads, n_teams, sz))(st.shards, sizes)
+        grouped = jax.vmap(lambda g: _group_grid(g, N, M))(sizes)
+        k = grouped.shape[-1]
+        rows, rels = jax.vmap(BalancedAllocator._chunk_malloc_bulk)(
+            ShardedAllocator._flat_rows(sh, D * NC),
+            grouped.reshape(D * NC, k))
+        rels = rels.reshape(D, NC, k)
+        ptrs = jnp.where(rels == FAIL, FAIL, sh.chunk_start[:, :, None] + rels)
+        ptrs = jax.vmap(
+            lambda p: _ungroup_grid(p, n_threads, n_teams, N, M))(ptrs)
         dev = jnp.arange(st.n_devices, dtype=I32)[:, None, None]
-        return dataclasses.replace(st, shards=shards), \
-            ShardedHeap.global_ptr(dev, local, st.span)
+        return dataclasses.replace(
+            st, shards=ShardedAllocator._unflat_rows(sh, rows)), \
+            ShardedHeap.global_ptr(dev, ptrs, st.span)
 
     @staticmethod
     def free_grid(st: ShardedHeap, n_threads: int, n_teams: int, ptrs
                   ) -> ShardedHeap:
         """``ptrs``: (D, n_threads, n_teams) GLOBAL pointers (row ``d`` from
-        device ``d``'s grid); FAIL / foreign pointers are no-ops."""
+        device ``d``'s grid); FAIL / foreign pointers are no-ops.  Same
+        flattened D*NC-chunk dispatch as :meth:`malloc_grid`."""
+        sh = st.shards
+        D, NC = sh.offsets.shape[0], sh.offsets.shape[1]
+        N, M = sh.n_slots, sh.m_slots
+        assert n_threads % N == 0 and n_teams % M == 0, \
+            "grid must tile the chunk slots"
         ptrs = jnp.asarray(ptrs, I32)
         dev = jnp.arange(st.n_devices, dtype=I32)[:, None, None]
         mine = (ptrs >= dev * st.span) & (ptrs < (dev + 1) * st.span)
         local = jnp.where(mine, ptrs - dev * st.span, FAIL)
-        shards = jax.vmap(
-            lambda sh, p: BalancedAllocator.free_grid(
-                sh, n_threads, n_teams, p))(st.shards, local)
-        return dataclasses.replace(st, shards=shards)
+        grouped = jax.vmap(lambda g: _group_grid(g, N, M))(local)
+        k = grouped.shape[-1]
+        flat = grouped.reshape(D * NC, k)
+        rel = jnp.where(flat < 0, FAIL,
+                        flat - sh.chunk_start.reshape(D * NC)[:, None])
+        rows = jax.vmap(BalancedAllocator._chunk_free_bulk)(
+            ShardedAllocator._flat_rows(sh, D * NC), rel)
+        return dataclasses.replace(
+            st, shards=ShardedAllocator._unflat_rows(sh, rows))
 
     @staticmethod
     def reset_chunks(st: ShardedHeap, mask) -> ShardedHeap:

@@ -23,9 +23,11 @@ Host escapes ride the v2 RPC transport (``repro.core.rpc``):
   the loop: firings are enqueued into an on-device :class:`~repro.core.rpc.
   RpcQueue` (a pure array update), and ONE ordered flush at the end of the
   program replays them on the host in firing order.  Batched hooks are
-  fire-and-forget and their payload must flatten to scalars (queue records
-  are fixed-width); use them for metrics/logging, not for host interactions
-  the next step depends on.
+  fire-and-forget; their payload may mix SCALAR leaves (record lanes) and
+  ARRAY leaves — a histogram, a residual vector — which ride the queue's
+  payload arena (transport v3) and reach ``host_fn`` as 1-D numpy arrays.
+  Use them for metrics/logging, not for host interactions the next step
+  depends on.
 * **Sharded runs** (``device_run(..., mesh=)``) execute the step loop under
   parallelism expansion (§3.3): the whole loop runs inside ``shard_map``
   over every mesh axis, ``step_fn`` (and hook ``extract``) may use the
@@ -74,8 +76,9 @@ class HostHook:
               repeatedly should pass a stable name so registry entries are
               rebound instead of accumulating.
     batched:  queue firings on device; ONE flush at end of run replays them
-              (extract leaves must be scalars; host_fn then receives plain
-              python ints/floats)
+              (scalar extract leaves reach host_fn as plain python
+              ints/floats; array leaves ride the payload arena and arrive
+              as 1-D numpy arrays)
     """
     every: int
     extract: Callable[[jax.Array, Any], Any]
@@ -135,12 +138,14 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                n_steps: int, *, hooks: Sequence[HostHook] = (),
                donate: bool = True, jit_kwargs: Optional[dict] = None,
                queue_capacity: int = 1024, queue_width: int = 8,
+               queue_payload: int = 4096,
                mesh: Optional[Mesh] = None, state_spec=None) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
 
     The whole loop is one compiled program; ``hooks`` are the only host
     contact.  Batched hooks share one on-device :class:`RpcQueue`
-    (``queue_capacity`` records of ``queue_width`` scalars) flushed once
+    (``queue_capacity`` records of ``queue_width`` args, with a
+    ``queue_payload``-word arena for array extract leaves) flushed once
     after the loop.  Returns the final state.
 
     With ``mesh=``, the step loop runs under parallelism expansion
@@ -149,8 +154,9 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
     primitives (``team_id()``, ...), and EVERY hook — immediate or batched
     — is delivered through a per-device :class:`ShardedRpcQueue` shard,
     drained once at the program boundary in (device, slot) order (hook
-    payloads must flatten to scalars, as for batched hooks; ``donate`` is
-    ignored).  ``state_spec`` is the ``PartitionSpec`` of ``state``
+    payloads may mix scalar and array leaves, as for batched hooks — array
+    leaves ride each shard's payload arena; ``donate`` is ignored).
+    ``state_spec`` is the ``PartitionSpec`` of ``state``
     (default ``P()``: replicated — under that default ``step_fn`` must
     keep state identical on every device; a step that folds ``team_id()``
     into the CARRY diverges per device and needs an explicit per-device
@@ -163,7 +169,7 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
         if mesh is not None:
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
                                     state_spec, queue_capacity, queue_width,
-                                    dict(jit_kwargs or {}))
+                                    queue_payload, dict(jit_kwargs or {}))
 
         jit_kwargs = dict(jit_kwargs or {})
         if donate:
@@ -186,7 +192,8 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                             _fire(h, hname, step + 1, state)
                     return (step + 1, state, q)
 
-                q0 = RpcQueue.create(queue_capacity, queue_width)
+                q0 = RpcQueue.create(queue_capacity, queue_width,
+                                     queue_payload)
                 _, final, q = lax.while_loop(
                     cond, body, (jnp.zeros((), jnp.int32), state, q0))
                 q.flush()
@@ -208,14 +215,15 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
 
 
 def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
-                     queue_capacity, queue_width, jit_kwargs):
+                     queue_capacity, queue_width, queue_payload, jit_kwargs):
     """The sharded step loop: whole ``while_loop`` inside one ``shard_map``,
     hooks enqueued into this device's queue shard, ONE gathered drain at the
     program boundary (the flush runs host-side on the materialized shards —
     XLA cannot lower a gathered callback inside the partitioned program)."""
     axes = tuple(mesh.axis_names)
     spec = state_spec if state_spec is not None else P()
-    q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width)
+    q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width,
+                                queue_payload)
 
     def region(state, q):
         lq = q.local_view()

@@ -23,7 +23,11 @@ team", a vectorized lane.  This module provides:
   :func:`set_team_heap` / :func:`set_team_queue` store the functionally
   updated state, and :func:`team_ptr` encodes a team-local heap offset as a
   global ``(device, offset)`` pointer that ``find_obj`` — and therefore the
-  RPC ``ArenaRef`` marshalling — resolves after the region returns;
+  RPC ``ArenaRef`` marshalling — resolves after the region returns.  Since
+  transport v3 the queue shard carries a per-device PAYLOAD ARENA: a team
+  can enqueue array-carrying records (``libc.fprintf``/``fwrite`` data,
+  histograms, bulk remote-malloc size vectors) as pure local array updates,
+  and the one gathered flush replays them with payloads reattached;
 
 * :func:`parallel_for` / :func:`serial_for` — the measurable contrast the
   paper's Fig. 8–10 are built on: the *expanded* execution of an iteration

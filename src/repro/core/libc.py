@@ -16,20 +16,37 @@ device-resident training/serving loop would otherwise escape to the host for:
                      pure array update inside jit; ``flush()`` is ONE ordered
                      RPC that drains the buffer to the host — the paper's
                      buffered ``fprintf`` (and the antidote to its Fig. 7
-                     975 us per-call RPC cost).  Since transport v2 it is the
-                     width-2 special case of the generic batched transport
+                     975 us per-call RPC cost).  Since transport v2 it is a
+                     thin special case of the generic batched transport
                      (``repro.core.rpc.RpcQueue``): every record is an RPC to
                      the ``"logring.sink"`` host callee, and ``flush()`` IS
-                     the queue's generic batched flush.
+                     the queue's generic batched flush.  Since transport v3
+                     ``log(tag, value, payload=...)`` can attach an ARRAY to
+                     a record (a histogram, a vector of residuals): the
+                     payload rides the queue's on-device arena and the sink
+                     receives it as a numpy array — still zero host contact
+                     until flush.
+* ``fprintf``      — REAL buffered formatted output on the v3 transport:
+                     ``fprintf(q, "step %d loss %f", i, x)`` enqueues a
+                     record holding the interned format id plus scalar args
+                     and/or array payloads; the host formats the string at
+                     flush.  ``fwrite`` is its binary sibling: the array
+                     payload is appended verbatim to a host-side stream.
+* ``remote mallocs`` — ``remote_malloc_enqueue``: a batch of allocation
+                     sizes rides the arena as ONE fire-and-forget record;
+                     at flush the host runs the bulk prefix-sum allocation
+                     against a registered host-side heap (the RPC-driven
+                     remote malloc of ROADMAP/HetGPU, amortized).
 * ``realloc``      — allocator-integrated grow/copy on arena arrays.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.allocator import (
@@ -156,10 +173,13 @@ _LOG_SINK = "logring.sink"
 class LogRing:
     """Buffered device-side logging: the batched-transport special case.
 
-    A thin wrapper over :class:`repro.core.rpc.RpcQueue` with width-2
-    records ``(tag:int32, value:float32)`` addressed to the ring's sink
-    callee — ``log()`` is ``enqueue``, ``flush()`` is the generic batched
-    flush (one ordered callback replaying records in order).
+    A thin wrapper over :class:`repro.core.rpc.RpcQueue` with records
+    ``(tag:int32, value:float32[, payload:array])`` addressed to the ring's
+    sink callee — ``log()`` is ``enqueue``, ``flush()`` is the generic
+    batched flush (one ordered callback replaying records in order).  The
+    optional per-record ``payload`` array rides the queue's on-device
+    arena (transport v3); the sink receives it as a third argument, a 1-D
+    numpy array.
 
     Records are addressed to ``name`` (static, baked in at ``log()`` time);
     the registry binds the DEFAULT sink for that name.  A custom ``sink``
@@ -205,19 +225,23 @@ class LogRing:
         return self._lanes.head
 
     @staticmethod
-    def create(capacity: int = 1024, name: str = _LOG_SINK) -> "LogRing":
+    def create(capacity: int = 1024, name: str = _LOG_SINK,
+               payload_capacity: int = 1024) -> "LogRing":
         if name not in REGISTRY.hosts:
             REGISTRY.register(name, _default_sink)
-        return LogRing(RpcQueue.create(capacity, width=2), name)
+        return LogRing(RpcQueue.create(capacity, width=3, payload_capacity=
+                                       payload_capacity), name)
 
     @staticmethod
     def create_sharded(n_devices: int, capacity: int = 1024,
-                      name: str = _LOG_SINK) -> "LogRing":
+                      name: str = _LOG_SINK,
+                      payload_capacity: int = 1024) -> "LogRing":
         """One ring shard per mesh device, on the sharded batched transport."""
         if name not in REGISTRY.hosts:
             REGISTRY.register(name, _default_sink)
-        return LogRing(ShardedRpcQueue.create(n_devices, capacity, width=2),
-                       name)
+        return LogRing(ShardedRpcQueue.create(n_devices, capacity, width=3,
+                                              payload_capacity=
+                                              payload_capacity), name)
 
     # -- team protocol (threads through ``expand(..., queue=True)``) ----------
     def local_view(self) -> "LogRing":
@@ -227,11 +251,16 @@ class LogRing:
     def with_local(self, local: "LogRing") -> "LogRing":
         return LogRing(self.q.with_local(local.q), self.name)
 
-    def log(self, tag, value) -> "LogRing":
-        """Pure device-side append (overwrites oldest when full)."""
-        return LogRing(self.q.enqueue(self.name,
-                                      jnp.asarray(tag, jnp.int32),
-                                      jnp.asarray(value, jnp.float32)),
+    def log(self, tag, value, payload=None, where=None) -> "LogRing":
+        """Pure device-side append (overwrites oldest when full).
+
+        ``payload`` (optional array, any shape) rides the payload arena and
+        reaches the sink as a third argument (1-D numpy).  ``where``
+        (optional traced bool) makes the append conditional."""
+        args = (jnp.asarray(tag, jnp.int32), jnp.asarray(value, jnp.float32))
+        if payload is not None:
+            args = args + (jnp.asarray(payload),)
+        return LogRing(self.q.enqueue(self.name, *args, where=where),
                        self.name)
 
     def flush(self, sink: Optional[Callable] = None) -> "LogRing":
@@ -246,8 +275,11 @@ class LogRing:
 _LOG_LINES = []
 
 
-def _default_sink(tag: int, value: float):
-    _LOG_LINES.append((int(tag), float(value)))
+def _default_sink(tag: int, value: float, payload=None):
+    if payload is None:
+        _LOG_LINES.append((int(tag), float(value)))
+    else:
+        _LOG_LINES.append((int(tag), float(value), np.asarray(payload)))
 
 
 REGISTRY.register(_LOG_SINK, _default_sink)
@@ -257,6 +289,148 @@ def drain_log_lines():
     out = list(_LOG_LINES)
     _LOG_LINES.clear()
     return out
+
+
+# ---------------------------------------------------------------------------
+# fprintf / fwrite — buffered formatted + binary output on the v3 transport
+# ---------------------------------------------------------------------------
+
+#: Interned format strings: ``fprintf`` call sites register their (static,
+#: python) format string here at trace time and the RECORD carries only the
+#: small integer id — the string itself never touches the device.
+_FMT_TABLE: List[str] = []
+_FMT_IDS: Dict[str, int] = {}
+
+_PRINTF_LINES: List[str] = []
+_WRITE_STREAMS: Dict[int, List[np.ndarray]] = {}
+
+
+def _intern_fmt(fmt: str) -> int:
+    fid = _FMT_IDS.get(fmt)
+    if fid is None:
+        fid = len(_FMT_TABLE)
+        _FMT_TABLE.append(fmt)
+        _FMT_IDS[fmt] = fid
+    return fid
+
+
+def _fprintf_sink(fid, *args):
+    fmt = _FMT_TABLE[int(fid)]
+    coerced = tuple(a if isinstance(a, (int, float)) else np.asarray(a)
+                    for a in args)
+    _PRINTF_LINES.append(fmt % coerced)      # zero args still resolves %%
+
+
+def _fwrite_sink(stream, data):
+    _WRITE_STREAMS.setdefault(int(stream), []).append(np.asarray(data))
+
+
+REGISTRY.register("libc.fprintf", _fprintf_sink)
+REGISTRY.register("libc.fwrite", _fwrite_sink)
+
+
+def fprintf(q: RpcQueue, fmt: str, *args, where=None) -> RpcQueue:
+    """Buffered ``fprintf`` from device code: pure enqueue, ZERO host
+    contact until the queue flushes (the paper's §3.4 buffered-I/O answer
+    to the Fig. 7 per-call RPC cost, now with REAL format strings).
+
+    ``fmt`` must be a static python ``%``-format string (interned host-side
+    at trace time; the record ships only its id).  ``args`` are scalars
+    and/or arrays — arrays ride the payload arena and format via ``%s``.
+    The formatted lines accumulate host-side at flush; read them with
+    :func:`drain_printf`."""
+    fid = _intern_fmt(fmt)
+    return q.enqueue("libc.fprintf", jnp.int32(fid), *args, where=where)
+
+
+def fwrite(q: RpcQueue, data, stream: int = 0, where=None) -> RpcQueue:
+    """Buffered binary write: ``data`` (any shape/dtype; delivered as 1-D
+    int32 or float32) rides the payload arena and is appended to host-side
+    stream ``stream`` at flush.  Read back with :func:`drain_fwrite`."""
+    return q.enqueue("libc.fwrite", jnp.int32(stream), jnp.asarray(data),
+                     where=where)
+
+
+def drain_printf() -> List[str]:
+    """Formatted lines accumulated by flushed ``fprintf`` records."""
+    out = list(_PRINTF_LINES)
+    _PRINTF_LINES.clear()
+    return out
+
+
+def drain_fwrite(stream: int = 0) -> np.ndarray:
+    """Concatenation of every chunk written to ``stream`` (empty i32 array
+    when nothing was written).  All chunks of a stream must share a dtype —
+    mixing int and float writes on one stream would silently promote the
+    result to float64 and break fixed-width framing, so it raises instead
+    (use one stream per dtype)."""
+    chunks = _WRITE_STREAMS.pop(stream, [])
+    if not chunks:
+        return np.zeros((0,), np.int32)
+    dtypes = {c.dtype for c in chunks}
+    if len(dtypes) > 1:
+        raise ValueError(
+            f"fwrite stream {stream} mixes dtypes {sorted(map(str, dtypes))};"
+            " write int and float data to separate streams")
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# RPC-driven remote malloc — bulk size vectors ride the payload arena
+# ---------------------------------------------------------------------------
+
+#: Host-side heaps servicing batched remote-malloc records: name ->
+#: allocator state (any state ``allocator_for`` dispatches on).
+_REMOTE_HEAPS: Dict[str, object] = {}
+_REMOTE_PTRS: Dict[str, List[np.ndarray]] = {}
+
+
+def _remote_malloc_sink(name_id, sizes):
+    name = _FMT_TABLE[int(name_id)]        # heap names intern like formats
+    state = _REMOTE_HEAPS[name]
+    state, ptrs = allocator_for(state).malloc_many(
+        state, jnp.asarray(sizes, jnp.int32))
+    _REMOTE_HEAPS[name] = state
+    _REMOTE_PTRS.setdefault(name, []).append(np.asarray(ptrs))
+
+
+REGISTRY.register("libc.remote_malloc", _remote_malloc_sink)
+
+
+def remote_heap_register(name: str, state) -> None:
+    """Bind a host-side allocator state to service batched remote mallocs
+    addressed to ``name`` (the cross-device/remote-heap story: the device
+    requests space it cannot see; the host runs the bulk prefix-sum
+    allocation at flush).  The state's allocator must expose ``malloc_many``
+    (generic / size-class / sharded — checked HERE, where the error is
+    attributable, not mid-drain inside the flush callback)."""
+    if not hasattr(allocator_for(state), "malloc_many"):
+        raise TypeError(
+            f"remote heap {name!r}: {type(state).__name__} has no bulk "
+            "malloc_many path; use a Generic/SizeClass/Sharded state")
+    _REMOTE_HEAPS[name] = state
+
+
+def remote_malloc_enqueue(q: RpcQueue, name: str, sizes,
+                          where=None) -> RpcQueue:
+    """Enqueue ONE fire-and-forget record asking the host to bulk-allocate
+    ``sizes`` (an int array — it rides the payload arena) from the
+    registered heap ``name``.  The allocation happens at flush, in record
+    order; resulting pointers are retrievable host-side via
+    :func:`remote_malloc_results`."""
+    if name not in _REMOTE_HEAPS:
+        raise KeyError(f"no remote heap registered under {name!r}; call "
+                       "remote_heap_register first")
+    nid = _intern_fmt(name)
+    return q.enqueue("libc.remote_malloc", jnp.int32(nid),
+                     jnp.asarray(sizes, jnp.int32), where=where)
+
+
+def remote_malloc_results(name: str):
+    """(state, [ptr arrays in flush order]) for heap ``name``; clears the
+    pointer log."""
+    ptrs = _REMOTE_PTRS.pop(name, [])
+    return _REMOTE_HEAPS.get(name), ptrs
 
 
 # ---------------------------------------------------------------------------

@@ -43,31 +43,54 @@ compiler may elide, cache, or reorder the call, so it is only sound for pure
 host functions whose result is actually consumed; write-back refs are
 rejected (there is no ordering to make a host-side mutation meaningful).
 
-**Batched transport.**  :class:`RpcQueue` is an on-device ring of fixed-width
-RPC records (callee id + scalar payload packed into int32/float32 lanes with
-an interleave mask, so mixed int/float argument order survives the trip).
+**Batched transport (v3: variable-width records).**  :class:`RpcQueue` is an
+on-device ring of RPC records plus a flat on-device **payload arena**.  Each
+record is ``(callee id, up to W arguments)``; a *scalar* argument packs into
+an int32 or float32 lane (``imask`` bit j records which lane argument ``j``
+used, so mixed int/float argument order survives the trip), while an *array*
+argument rides the arena: its words are copied into ``pbuf`` at the current
+payload watermark and the record stores a **descriptor** in argument ``j``'s
+lanes — offset in ``ivals[.., j]``, length in ``plens[.., j]``, presence in
+``pmask`` bit j, and dtype tag in ``imask`` bit j (set = int32 words, clear
+= float32 words bitcast into the i32 arena).  One watermark bump reserves
+space for ALL of a record's payloads (the allocator-v2 prefix-sum
+discipline: per-payload offsets are static partial sums of the lengths).
+
 ``enqueue`` is a pure array update inside jit — no host contact; ``flush``
-drains the whole queue to the host in ONE ordered ``io_callback``, replaying
-records in enqueue order (generalizing the buffered-``fprintf`` trick that
-``core/libc.py``'s ``LogRing`` applies to log records, and the antidote to
-the paper's Fig. 7 ~975 µs per-call RPC cost).  Batched RPCs are
-fire-and-forget: the device has already executed past the enqueue, so record
-callees cannot return values to the device.  If more than ``capacity``
-records are enqueued between flushes, the oldest are overwritten; every
-flush counts the records it lost, warns, and publishes the counts through
-``flush_stats()`` / ``queue_drops()`` — overflow is loud, and the surviving
-records still replay in exact enqueue order.
+drains records AND arena to the host in ONE ordered ``io_callback``,
+replaying records (payloads reattached from their descriptors) in enqueue
+order (generalizing the buffered-``fprintf`` trick that ``core/libc.py``'s
+``LogRing`` applies to log records, and the antidote to the paper's Fig. 7
+~975 µs per-call RPC cost).  Batched RPCs are fire-and-forget: the device
+has already executed past the enqueue, so record callees cannot return
+values to the device.  :func:`rpc_call` exposes the same path as
+``rpc_call(name, *args, batched=True, queue=q)`` — value args only (scalars
+or arrays; no write-back refs on a fire-and-forget transport), returning the
+updated queue.
+
+Overflow is loud and two-sided.  If more than ``capacity`` records are
+enqueued between flushes, the oldest are overwritten (their arena words are
+simply left unread — the arena is append-only between flushes, so surviving
+descriptors always point at their own data); every flush counts the records
+it lost, warns, and publishes the counts through ``flush_stats()`` /
+``queue_drops()``.  If the RING has room but the ARENA cannot hold a
+record's payloads, the record is dropped **atomically** at enqueue time: no
+arena words are written, no descriptor is stored, the head does not advance
+— there can never be a descriptor pointing at unwritten space.  Arena drops
+are counted on device and surfaced separately (``arena_drops`` /
+``last_arena_drops`` in ``flush_stats()``).
 
 **Sharded transport** (paper §3.3 applied to the transport).  Under
 ``expand`` every mesh device is a team, and funnelling all teams' records
 through one logical queue would serialize the machine on a single ring.
 :class:`ShardedRpcQueue` keeps ONE independent :class:`RpcQueue` shard per
-device (leading device axis on every lane array, partitioned by
-``shard_map``); inside an expanded region each device enqueues into its own
-shard with zero cross-device traffic, and ``flush`` gathers all shards and
-replays records in ``(flush-order, device, slot)`` order on the host — a
-deterministic total order.  ``core/libc.py``'s ``LogRing`` rides it
-unchanged (a sharded ring is a sharded queue of width-2 records).  Flush of
+device (leading device axis on every lane array AND on the payload arena,
+partitioned by ``shard_map``); inside an expanded region each device
+enqueues into its own shard — payload copies included — with zero
+cross-device traffic, and ``flush`` gathers all shards and replays records
+in ``(flush-order, device, slot)`` order on the host — a deterministic
+total order, payloads reattached per shard.  ``core/libc.py``'s ``LogRing``
+rides it unchanged (a sharded ring is a sharded queue of width-3 records).  Flush of
 a *traced* sharded queue works in single-program (vmapped logical devices)
 form; when the shards live on a real multi-device mesh, flush at the
 program boundary instead (``device_run(mesh=...)`` does) — XLA cannot lower
@@ -100,6 +123,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.experimental import io_callback
 
 from repro.core import allocator as alloc_mod
@@ -166,8 +190,10 @@ class _Registry:
         self.batch_names: List[Optional[str]] = []  # queue callee id -> name
         self.batch_free: List[int] = []            # reusable callee id slots
         self.queue_drops = 0
+        self.arena_drops = 0
         self.flushes = 0
         self.last_flush_drops = 0
+        self.last_flush_arena_drops = 0
         self._next_pad = 0                         # pad ids are never reused
 
     def register(self, name: str, fn: Callable):
@@ -250,10 +276,12 @@ class _Registry:
         with self.lock:
             self.queue_drops += n
 
-    def bump_flush(self, drops: int):
+    def bump_flush(self, drops: int, arena_drops: int = 0):
         with self.lock:
             self.flushes += 1
             self.last_flush_drops = drops
+            self.arena_drops += arena_drops
+            self.last_flush_arena_drops = arena_drops
 
 
 REGISTRY = _Registry()
@@ -288,12 +316,16 @@ def queue_drops() -> int:
 
 
 def flush_stats() -> Dict[str, int]:
-    """Queue-flush accounting: total flushes, total dropped records, and the
-    drop count of the most recent flush (0 when nothing was lost)."""
+    """Queue-flush accounting: total flushes, records lost to ring overwrite
+    (``drops``) and to a full payload arena (``arena_drops``, counted at
+    enqueue time — the atomic-drop path), plus both counts for the most
+    recent flush alone (0 when nothing was lost)."""
     with REGISTRY.lock:
         return {"flushes": REGISTRY.flushes,
                 "drops": REGISTRY.queue_drops,
-                "last_drops": REGISTRY.last_flush_drops}
+                "last_drops": REGISTRY.last_flush_drops,
+                "arena_drops": REGISTRY.arena_drops,
+                "last_arena_drops": REGISTRY.last_flush_arena_drops}
 
 
 def reset_rpc_stats():
@@ -305,8 +337,10 @@ def reset_rpc_stats():
             for k in p:
                 p[k] = 0
         REGISTRY.queue_drops = 0
+        REGISTRY.arena_drops = 0
         REGISTRY.flushes = 0
         REGISTRY.last_flush_drops = 0
+        REGISTRY.last_flush_arena_drops = 0
 
 
 # ---------------------------------------------------------------------------
@@ -408,8 +442,9 @@ def _marshal(args) -> Tuple[Tuple, List, List]:
     return tuple(sig), operands, ref_shapes
 
 
-def rpc_call(name: str, *args, result_shape, ordered: bool = True,
-             pure: bool = False):
+def rpc_call(name: str, *args, result_shape=None, ordered: bool = True,
+             pure: bool = False, batched: bool = False, queue=None,
+             where=None):
     """Issue a blocking host RPC from device code (traceable).
 
     ``args`` may mix plain arrays/scalars (value args), :class:`Ref`, and
@@ -421,9 +456,45 @@ def rpc_call(name: str, *args, result_shape, ordered: bool = True,
     ``pure=True`` dispatches through ``jax.pure_callback`` (elidable,
     cacheable, unordered) — only for pure host functions; write-back refs are
     rejected.  Otherwise ``io_callback`` is used, with ``ordered`` as given.
+
+    ``batched=True`` routes the call through the batched transport instead:
+    the record (scalars in lanes, arrays in the payload arena) is enqueued
+    on ``queue`` — a :class:`RpcQueue` — and the UPDATED QUEUE is returned.
+    Batched calls are fire-and-forget: no result reaches the device and no
+    write-back refs are allowed (pass value args only), so ``result_shape``
+    is ignored; the host sees the call when the queue flushes.  ``where``
+    (optional traced bool) makes the enqueue conditional.  This is the
+    paper-§3.5 path for array-carrying library calls — buffered ``fwrite``,
+    bulk remote mallocs whose size vectors ride the arena — that v2 forced
+    onto a per-call ordered callback.
     """
     if name not in REGISTRY.hosts:
         raise KeyError(f"no host function registered for RPC {name!r}")
+
+    if batched:
+        if queue is None:
+            raise ValueError(
+                "rpc_call(batched=True) needs queue=<RpcQueue>: batched "
+                "RPCs live in the on-device ring until flush")
+        if pure:
+            raise ValueError("batched RPCs are effectful records; "
+                             "pure=True does not apply")
+        for j, a in enumerate(args):
+            if isinstance(a, (Ref, ArenaRef)):
+                raise ValueError(
+                    f"batched RPC {name!r} arg {j}: Ref/ArenaRef arguments "
+                    "need a round-trip (write-back / runtime object "
+                    "lookup); the batched transport is fire-and-forget — "
+                    "pass value args (scalars or arrays) only")
+        return queue.enqueue(name, *args, where=where)
+    if where is not None:
+        raise ValueError(
+            "rpc_call(where=...) is only meaningful with batched=True: an "
+            "immediate callback has no conditional form — wrap the call in "
+            "lax.cond, or route it through a queue")
+    if result_shape is None:
+        raise TypeError("rpc_call() missing required keyword argument "
+                        "'result_shape' (only batched=True may omit it)")
 
     sig, operands, ref_shapes = _marshal(args)
     if pure:
@@ -471,12 +542,19 @@ def _find_obj(state, ptr):
 # Batched transport: on-device RPC queue, drained by ONE ordered callback
 # ---------------------------------------------------------------------------
 
-def _replay_shard(callee, nargs, imask, ivals, fvals, n, overrides, names,
-                  hosts, per_name_calls, per_name_bytes) -> int:
+def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, n,
+                  overrides, names, hosts, per_name_calls,
+                  per_name_bytes) -> int:
     """Replay one queue shard's records in enqueue order; returns the number
-    of records that were overwritten before this flush could drain them."""
+    of records that were overwritten before this flush could drain them.
+
+    Scalar arguments come out of the int/float lanes; payload arguments
+    (``pmask`` bit set) are reattached from the arena via their descriptor —
+    offset in the int lane, length in ``plens``, dtype from the ``imask``
+    tag (set = int32 words, clear = float32 bitcast)."""
     cap = callee.shape[0]
     lo = max(0, n - cap)
+    fbuf = pbuf.view(np.float32)
     for j in range(lo, n):
         k = j % cap
         cid = int(callee[k])
@@ -484,15 +562,27 @@ def _replay_shard(callee, nargs, imask, ivals, fvals, n, overrides, names,
         fn = (overrides or {}).get(name) or hosts[name]
         na = int(nargs[k])
         mask = int(imask[k])
-        args = [int(ivals[k, t]) if (mask >> t) & 1 else float(fvals[k, t])
-                for t in range(na)]
+        pm = int(pmask[k])
+        args = []
+        nbytes = 12 + 4 * na
+        for t in range(na):
+            if (pm >> t) & 1:
+                off, ln = int(ivals[k, t]), int(plens[k, t])
+                buf = pbuf if (mask >> t) & 1 else fbuf
+                args.append(buf[off:off + ln])
+                nbytes += 4 * ln
+            elif (mask >> t) & 1:
+                args.append(int(ivals[k, t]))
+            else:
+                args.append(float(fvals[k, t]))
         fn(*args)
         per_name_calls[name] = per_name_calls.get(name, 0) + 1
-        per_name_bytes[name] = per_name_bytes.get(name, 0) + 12 + 4 * na
+        per_name_bytes[name] = per_name_bytes.get(name, 0) + nbytes
     return lo
 
 
-def _finish_flush(drops: int, per_name_calls, per_name_bytes):
+def _finish_flush(drops: int, arena_drops: int, per_name_calls,
+                  per_name_bytes):
     if drops:
         REGISTRY.bump_drops(drops)
         warnings.warn(
@@ -500,12 +590,19 @@ def _finish_flush(drops: int, per_name_calls, per_name_bytes):
             "enqueued than the queue capacity between flushes; the oldest "
             "were overwritten.  Flush more often or enlarge the queue.",
             RuntimeWarning, stacklevel=2)
-    REGISTRY.bump_flush(drops)
+    if arena_drops:
+        warnings.warn(
+            f"RpcQueue dropped {arena_drops} payload record(s) at enqueue: "
+            "the payload arena was full (records dropped atomically — no "
+            "partial payloads).  Flush more often or enlarge "
+            "payload_capacity.", RuntimeWarning, stacklevel=2)
+    REGISTRY.bump_flush(drops, arena_drops)
     for name, calls in per_name_calls.items():
         REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
 
 
-def _drain_queue(callee, nargs, imask, ivals, fvals, head, overrides=None):
+def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
+                 head, phead, adrops, overrides=None):
     """Host side of :meth:`RpcQueue.flush`: replay queued records in enqueue
     order, dispatching each to its registered callee (resolved at drain
     time), unless ``overrides`` maps the callee's name to a handler captured
@@ -515,29 +612,34 @@ def _drain_queue(callee, nargs, imask, ivals, fvals, head, overrides=None):
     ``io_callback`` the same stable callable."""
     # the callback may receive jax Arrays; materialize to numpy ONCE so the
     # per-record scalar indexing below doesn't pay a device sync each time
-    callee, nargs, imask, ivals, fvals = (
-        np.asarray(x) for x in (callee, nargs, imask, ivals, fvals))
+    callee, nargs, imask, pmask, ivals, fvals, plens, pbuf = (
+        np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf))
     n = int(head)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:                    # one snapshot, not per record
         names = list(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
-    drops = _replay_shard(callee, nargs, imask, ivals, fvals, n, overrides,
-                          names, hosts, per_name_calls, per_name_bytes)
-    _finish_flush(drops, per_name_calls, per_name_bytes)
+    drops = _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens,
+                          pbuf, n, overrides, names, hosts, per_name_calls,
+                          per_name_bytes)
+    _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes)
     return np.int32(n)
 
 
-def _drain_queue_sharded(callee, nargs, imask, ivals, fvals, head,
-                         overrides=None):
+def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
+                         pbuf, head, phead, adrops, overrides=None):
     """Host side of :meth:`ShardedRpcQueue.flush`: every array carries a
     leading device axis; records replay in ``(device, slot)`` order — device
     0's records first (oldest surviving to newest), then device 1's, and so
-    on — a deterministic total order over the whole mesh's records."""
-    callee, nargs, imask, ivals, fvals = (
-        np.asarray(x) for x in (callee, nargs, imask, ivals, fvals))
+    on — a deterministic total order over the whole mesh's records.  Each
+    shard's payloads resolve against ITS arena slice."""
+    callee, nargs, imask, pmask, ivals, fvals, plens, pbuf = (
+        np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf))
     head = np.asarray(head)
+    adrops = np.asarray(adrops)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
@@ -548,38 +650,68 @@ def _drain_queue_sharded(callee, nargs, imask, ivals, fvals, head,
     for d in range(callee.shape[0]):
         n = int(head[d])
         total += n
-        drops += _replay_shard(callee[d], nargs[d], imask[d], ivals[d],
-                               fvals[d], n, overrides, names, hosts,
-                               per_name_calls, per_name_bytes)
-    _finish_flush(drops, per_name_calls, per_name_bytes)
+        drops += _replay_shard(callee[d], nargs[d], imask[d], pmask[d],
+                               ivals[d], fvals[d], plens[d], pbuf[d], n,
+                               overrides, names, hosts, per_name_calls,
+                               per_name_bytes)
+    _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes)
     return np.int32(total)
+
+
+def _payload_words(a: jax.Array) -> Tuple[jax.Array, bool]:
+    """Flatten an array argument to int32 arena words + its dtype tag
+    (True = integer payload, False = float32 payload bitcast to i32)."""
+    flat = a.reshape(-1)
+    if jnp.issubdtype(flat.dtype, jnp.integer) or flat.dtype == jnp.bool_:
+        return flat.astype(jnp.int32), True
+    return lax.bitcast_convert_type(flat.astype(jnp.float32), jnp.int32), \
+        False
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class RpcQueue:
-    """On-device ring of pending RPC records (the batched transport).
+    """On-device ring of pending RPC records (the batched transport, v3).
 
-    Each record is ``(callee id, up to W scalar args)``; integer args live in
-    int32 lanes, floats in float32 lanes, and ``imask`` bit ``j`` records
-    which lane argument ``j`` used — so mixed int/float argument ORDER is
-    reconstructed exactly on the host.  ``enqueue`` is a pure array update
-    (zero host contact inside jit); ``flush`` drains every queued record to
-    the host in ONE ordered ``io_callback``, preserving enqueue order.
-    Records are fire-and-forget: no values return to the device.  When more
-    than ``capacity`` records accumulate, the oldest are overwritten (the
-    drop is counted in :func:`queue_drops`).
+    Each record is ``(callee id, up to W args)``.  Scalar integer args live
+    in int32 lanes, scalar floats in float32 lanes, and ``imask`` bit ``j``
+    records which lane argument ``j`` used — so mixed int/float argument
+    ORDER is reconstructed exactly on the host.  ARRAY args ride the flat
+    payload arena ``pbuf``: one watermark (``phead``) bump reserves space
+    for all of a record's payloads, each payload is copied in at a static
+    partial-sum offset, and the argument's lanes hold the descriptor
+    (offset in ``ivals``, length in ``plens``, presence in ``pmask`` bit j,
+    int-vs-float tag in ``imask`` bit j; float payloads are bitcast into
+    the i32 arena and bitcast back on the host).
+
+    ``enqueue`` is a pure array update (zero host contact inside jit);
+    ``flush`` drains every queued record AND the arena to the host in ONE
+    ordered ``io_callback``, preserving enqueue order.  Records are
+    fire-and-forget: no values return to the device.  When more than
+    ``capacity`` records accumulate, the oldest are overwritten (the drop
+    is counted in :func:`queue_drops`; their arena words are simply never
+    read — the arena is append-only between flushes, so surviving
+    descriptors stay valid).  When the arena cannot hold a record's
+    payloads, the record is dropped ATOMICALLY at enqueue: nothing is
+    written, the head does not advance, and the drop is counted on device
+    (``adrops``) and surfaced via ``flush_stats()['arena_drops']``.
     """
     callee: jax.Array    # (N,) int32 — batch callee id per record
     nargs: jax.Array     # (N,) int32 — args used in this record
-    imask: jax.Array     # (N,) int32 — bit j set => arg j is in the int lane
-    ivals: jax.Array     # (N, W) int32
+    imask: jax.Array     # (N,) int32 — bit j: arg j int lane / int payload
+    pmask: jax.Array     # (N,) int32 — bit j set => arg j is an array payload
+    ivals: jax.Array     # (N, W) int32 — scalar value / payload offset
     fvals: jax.Array     # (N, W) float32
+    plens: jax.Array     # (N, W) int32 — payload word length (0 for scalars)
+    pbuf: jax.Array      # (PC,) int32 — flat payload arena (f32 bitcast in)
     head: jax.Array      # () int32 — total records ever enqueued
+    phead: jax.Array     # () int32 — arena words reserved since last flush
+    adrops: jax.Array    # () int32 — records dropped: arena full
 
     def tree_flatten(self):
-        return ((self.callee, self.nargs, self.imask, self.ivals, self.fvals,
-                 self.head), None)
+        return ((self.callee, self.nargs, self.imask, self.pmask, self.ivals,
+                 self.fvals, self.plens, self.pbuf, self.head, self.phead,
+                 self.adrops), None)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -593,8 +725,16 @@ class RpcQueue:
     def width(self) -> int:
         return self.ivals.shape[1]
 
+    @property
+    def payload_capacity(self) -> int:
+        return self.pbuf.shape[-1]
+
     @staticmethod
-    def create(capacity: int = 1024, width: int = 4) -> "RpcQueue":
+    def create(capacity: int = 1024, width: int = 4,
+               payload_capacity: int = 1024) -> "RpcQueue":
+        """``payload_capacity`` is the arena size in 4-byte words shared by
+        every payload between two flushes (0 = scalar-only queue: array
+        args are rejected at trace time)."""
         if not 0 < width <= 31:
             raise ValueError(
                 f"width must be in [1, 31] to fit the int32 interleave "
@@ -603,64 +743,120 @@ class RpcQueue:
             jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity,), jnp.int32),
+            jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity, width), jnp.int32),
             jnp.zeros((capacity, width), jnp.float32),
+            jnp.zeros((capacity, width), jnp.int32),
+            jnp.zeros((payload_capacity,), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32))
 
-    def enqueue(self, name: str, *scalars, where=None) -> "RpcQueue":
+    def enqueue(self, name: str, *args, where=None) -> "RpcQueue":
         """Queue one RPC to host function ``name`` (pure device-side append).
 
-        ``scalars`` are scalar ints/floats/bools (traced or concrete); which
-        lane each lands in is decided by its dtype at trace time.
+        ``args`` are scalars (ints/floats/bools, traced or concrete — which
+        lane each lands in is decided by its dtype at trace time) and/or
+        ARRAYS (any shape; flattened, copied into the payload arena, and
+        delivered to the host as a 1-D numpy array of int32 or float32).
 
         ``where`` (optional traced bool) makes the append conditional with
-        O(record) cost: the target ROW is selected against its old contents
-        and the head only advances when true — no whole-queue select."""
+        O(record + payload) cost: the target ROW is selected against its old
+        contents, payload slices read-modify-write their own reservation,
+        and the heads only advance when true — no whole-queue select."""
         cid = REGISTRY.batch_callee_id(name)
-        cap, w = self.capacity, self.width
-        if len(scalars) > w:
+        cap, w, pc = self.capacity, self.width, self.payload_capacity
+        if len(args) > w:
             raise ValueError(
-                f"RPC record for {name!r} has {len(scalars)} args; queue "
+                f"RPC record for {name!r} has {len(args)} args; queue "
                 f"width is {w}")
         i = self.head % cap
         iv = jnp.zeros((w,), jnp.int32)
         fv = jnp.zeros((w,), jnp.float32)
+        pl = jnp.zeros((w,), jnp.int32)
         mask = 0
-        for j, s in enumerate(scalars):
+        pm = 0
+        payloads = []                      # (words, static offset in record)
+        npay = 0
+        for j, s in enumerate(args):
             s = jnp.asarray(s)
             if np.shape(s) != ():
-                raise ValueError(
-                    f"RPC record args must be scalars; arg {j} for {name!r} "
-                    f"has shape {np.shape(s)}")
-            if jnp.issubdtype(s.dtype, jnp.integer) or s.dtype == jnp.bool_:
+                if pc == 0:
+                    raise ValueError(
+                        f"RPC record arg {j} for {name!r} is an array but "
+                        "the queue has no payload arena; create the queue "
+                        "with payload_capacity > 0")
+                words, is_int = _payload_words(s)
+                if is_int:
+                    mask |= 1 << j
+                pm |= 1 << j
+                # descriptor: offset rides the int lane, length in plens —
+                # offsets are the prefix sums of this record's payloads
+                # (one watermark bump reserves them all)
+                iv = iv.at[j].set(self.phead + npay)
+                pl = pl.at[j].set(words.shape[0])
+                payloads.append((words, npay))
+                npay += words.shape[0]
+            elif jnp.issubdtype(s.dtype, jnp.integer) or \
+                    s.dtype == jnp.bool_:
                 iv = iv.at[j].set(s.astype(jnp.int32))
                 mask |= 1 << j
             else:
                 fv = fv.at[j].set(s.astype(jnp.float32))
+        if npay > pc:
+            raise ValueError(
+                f"RPC record for {name!r} carries {npay} payload words but "
+                f"the arena only holds {pc}; enlarge payload_capacity")
+        keep = jnp.bool_(True) if where is None else jnp.asarray(where)
+        if npay:
+            # atomic arena reservation: the record only exists if ALL its
+            # payloads fit (no orphaned words, no dangling descriptor)
+            fits = self.phead + npay <= pc
+            dropped = keep & ~fits
+            keep = keep & fits
+        pbuf = self.pbuf
+        for words, off in payloads:
+            # contiguous copy-in (dynamic_update_slice, not a scatter).
+            # Dropped records read-modify-write the same slice — a no-op —
+            # and the automatic start clamp is only ever exercised on the
+            # dropped path (a kept record's reservation fits by `fits`)
+            start = (self.phead + off,)
+            old = lax.dynamic_slice(pbuf, start, (words.shape[0],))
+            pbuf = lax.dynamic_update_slice(
+                pbuf, jnp.where(keep, words, old), start)
         cid_v = jnp.int32(cid)
-        na_v = jnp.int32(len(scalars))
+        na_v = jnp.int32(len(args))
         mask_v = jnp.int32(mask)
-        step = 1
-        if where is not None:
-            keep = jnp.asarray(where)
+        pm_v = jnp.int32(pm)
+        if where is None and not npay:
+            step = 1
+        else:
             cid_v = jnp.where(keep, cid_v, self.callee[i])
             na_v = jnp.where(keep, na_v, self.nargs[i])
             mask_v = jnp.where(keep, mask_v, self.imask[i])
+            pm_v = jnp.where(keep, pm_v, self.pmask[i])
             iv = jnp.where(keep, iv, self.ivals[i])
             fv = jnp.where(keep, fv, self.fvals[i])
+            pl = jnp.where(keep, pl, self.plens[i])
             step = keep.astype(jnp.int32)
         return RpcQueue(
             self.callee.at[i].set(cid_v),
             self.nargs.at[i].set(na_v),
             self.imask.at[i].set(mask_v),
+            self.pmask.at[i].set(pm_v),
             self.ivals.at[i].set(iv),
             self.fvals.at[i].set(fv),
-            self.head + step)
+            self.plens.at[i].set(pl),
+            pbuf,
+            self.head + step,
+            self.phead + (jnp.int32(npay) * step if npay else 0),
+            self.adrops + dropped.astype(jnp.int32) if npay else self.adrops)
 
     def flush(self, handlers: Optional[Dict[str, Callable]] = None
               ) -> "RpcQueue":
-        """Drain the queue to the host in ONE ordered RPC; returns the
-        emptied queue.  Safe inside jit (ordered effect, never elided).
+        """Drain the queue (records + payload arena) to the host in ONE
+        ordered RPC; returns the emptied queue.  Safe inside jit (ordered
+        effect, never elided).
 
         ``handlers`` maps callee names to per-flush handlers, CAPTURED into
         this flush's compiled program (like v1's sink closures) — records
@@ -675,9 +871,11 @@ class RpcQueue:
         else:
             drain = _drain_queue
         io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                    self.callee, self.nargs, self.imask, self.ivals,
-                    self.fvals, self.head, ordered=True)
-        return dataclasses.replace(self, head=jnp.zeros((), jnp.int32))
+                    self.callee, self.nargs, self.imask, self.pmask,
+                    self.ivals, self.fvals, self.plens, self.pbuf,
+                    self.head, self.phead, self.adrops, ordered=True)
+        z = jnp.zeros((), jnp.int32)
+        return dataclasses.replace(self, head=z, phead=z, adrops=z)
 
 
 # ---------------------------------------------------------------------------
@@ -728,10 +926,14 @@ class ShardedRpcQueue:
     def width(self) -> int:
         return self.q.ivals.shape[2]
 
+    @property
+    def payload_capacity(self) -> int:
+        return self.q.pbuf.shape[-1]
+
     @staticmethod
-    def create(n_devices: int, capacity: int = 1024, width: int = 4
-               ) -> "ShardedRpcQueue":
-        q = RpcQueue.create(capacity, width)
+    def create(n_devices: int, capacity: int = 1024, width: int = 4,
+               payload_capacity: int = 1024) -> "ShardedRpcQueue":
+        q = RpcQueue.create(capacity, width, payload_capacity)
         return ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
 
@@ -755,10 +957,13 @@ class ShardedRpcQueue:
 
     def flush(self, handlers: Optional[Dict[str, Callable]] = None
               ) -> "ShardedRpcQueue":
-        """Drain every shard to the host; records replay in
-        ``(device, slot)`` order.  Returns the emptied sharded queue."""
-        leaves = jax.tree.leaves(self.q)
-        if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        """Drain every shard (records + per-shard payload arenas) to the
+        host; records replay in ``(device, slot)`` order.  Returns the
+        emptied sharded queue."""
+        operands = (self.q.callee, self.q.nargs, self.q.imask, self.q.pmask,
+                    self.q.ivals, self.q.fvals, self.q.plens, self.q.pbuf,
+                    self.q.head, self.q.phead, self.q.adrops)
+        if any(isinstance(x, jax.core.Tracer) for x in operands):
             if handlers:
                 bound = dict(handlers)
 
@@ -767,18 +972,16 @@ class ShardedRpcQueue:
             else:
                 drain = _drain_queue_sharded
             io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                        self.q.callee, self.q.nargs, self.q.imask,
-                        self.q.ivals, self.q.fvals, self.q.head, ordered=True)
+                        *operands, ordered=True)
         else:
             # concrete shards (program boundary): drain directly — this also
             # works when the shards live on a real multi-device mesh
-            _drain_queue_sharded(self.q.callee, self.q.nargs, self.q.imask,
-                                 self.q.ivals, self.q.fvals, self.q.head,
+            _drain_queue_sharded(*operands,
                                  overrides=dict(handlers) if handlers
                                  else None)
+        z = jnp.zeros((self.n_devices,), jnp.int32)
         return dataclasses.replace(
-            self, q=dataclasses.replace(
-                self.q, head=jnp.zeros((self.n_devices,), jnp.int32)))
+            self, q=dataclasses.replace(self.q, head=z, phead=z, adrops=z))
 
 
 # ---------------------------------------------------------------------------

@@ -26,8 +26,15 @@ from repro.models.mlp import mlp_apply
 from repro.models.moe import moe_apply
 from repro.models.model_zoo import Model
 from repro.models.transformer import _slice_layer
+from repro.core.rpc import REGISTRY, RpcQueue
 from repro.serving import kvcache
 from repro.serving.kvcache import PagedKV
+
+#: Batched-transport callee for retiring-request page spills; the default
+#: binding is a no-op so enqueue always resolves — each engine captures its
+#: own sink as a per-flush handler (no cross-engine rebinding).
+_SPILL_RPC = "kvcache.spill"
+REGISTRY.register(_SPILL_RPC, lambda rid, n_tokens, pages: None)
 
 
 # ---------------------------------------------------------------------------
@@ -112,11 +119,20 @@ class ServingEngine:
 
     def __init__(self, model: Model, params, *, batch_slots: int = 4,
                  max_len: int = 256, page_size: int = 16,
-                 eos_id: Optional[int] = None, mesh=None):
+                 eos_id: Optional[int] = None, mesh=None,
+                 spill_sink: Optional[Any] = None):
         """``mesh`` (a ``jax.sharding.Mesh`` or an int shard count) shards
         the KV page heap per device: each device's allocator shard serves
         its block of batch slots, so page alloc/release never funnel
-        through one allocator state (see ``serving/kvcache.py``)."""
+        through one allocator state (see ``serving/kvcache.py``).
+
+        ``spill_sink(request_id, n_tokens, pages)`` — optional host
+        callback receiving every retiring request's page-id list (a 1-D
+        int32 numpy array) BEFORE its slot is released.  Deliveries ride
+        the batched payload transport: the page ids of all requests retired
+        in a tick travel in one queue flush, not one RPC per request (the
+        host-side page-spill bookkeeping path — eviction logs, tiered KV
+        stores)."""
         self.model = model
         self.cfg = model.cfg
         assert self.cfg.family in ("dense", "moe", "vlm"), \
@@ -127,6 +143,13 @@ class ServingEngine:
         self.kv = kvcache.paged_cache_init(
             self.cfg, batch_slots, max_len, page_size=page_size, mesh=mesh)
         self.eos_id = eos_id
+        self.spill_sink = spill_sink
+        self.spill_q: Optional[RpcQueue] = None
+        if spill_sink is not None:
+            maxp = (max_len + page_size - 1) // page_size
+            self.spill_q = RpcQueue.create(
+                capacity=max(2 * batch_slots, 8), width=3,
+                payload_capacity=max(batch_slots * maxp, 8))
         self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, List[int], int]] = []
         self.finished: Dict[int, List[int]] = {}
@@ -173,6 +196,7 @@ class ServingEngine:
         nxt = jnp.argmax(logits, axis=-1)
 
         done_slots = []
+        done_rids = []
         for i, s in enumerate(self.slots):
             if s.request_id < 0:
                 continue
@@ -188,8 +212,18 @@ class ServingEngine:
                 if done:
                     self.finished[s.request_id] = s.out
                     done_slots.append(i)
+                    done_rids.append(s.request_id)
                     self.slots[i] = _Slot()
         if done_slots:
+            if self.spill_q is not None:
+                # page-spill: every retiring slot's page ids ride the
+                # payload arena; ONE flush delivers the whole tick
+                for i, rid in zip(done_slots, done_rids):
+                    self.spill_q = self.spill_q.enqueue(
+                        _SPILL_RPC, jnp.int32(rid), self.kv.lengths[i],
+                        kvcache.live_pages(self.kv, i))
+                self.spill_q = self.spill_q.flush(
+                    handlers={_SPILL_RPC: self.spill_sink})
             # every retired request this tick releases in ONE bulk reset
             mask = jnp.zeros((len(self.slots),), bool).at[
                 jnp.asarray(done_slots, jnp.int32)].set(True)

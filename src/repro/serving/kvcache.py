@@ -29,6 +29,12 @@ expanded over the mesh.  Page ids stay global (``dev * span + local``), so
 the page table, the attention kernels, and ``find_obj``-based ``ArenaRef``
 marshalling are unchanged.  On a 1-device mesh the sharded path is
 bit-identical to the single-heap path.
+
+**Host-side page spill** (transport v3): when the engine is constructed
+with a ``spill_sink``, every retiring request ships its page-id list
+(:func:`live_pages`) to the host as ONE batched payload RPC — the ids ride
+the RPC queue's on-device arena and the whole tick's retirements drain in
+one ordered callback, instead of a per-page (or per-request) round-trip.
 """
 from __future__ import annotations
 
@@ -161,6 +167,16 @@ def paged_attend(kv: PagedKV, layer: int, q: jax.Array,
 def advance(kv: PagedKV, active: jax.Array) -> PagedKV:
     return dataclasses.replace(
         kv, lengths=kv.lengths + active.astype(jnp.int32))
+
+
+def live_pages(kv: PagedKV, slot: int) -> jax.Array:
+    """Page ids currently backing ``slot`` (in position order): the page
+    table's live prefix, one entry per started page.  The engine's
+    host-side page-spill path ships this as ONE batched payload RPC per
+    retiring request (transport v3) instead of a per-page round-trip —
+    call BEFORE releasing the slot."""
+    n = int((int(kv.lengths[slot]) + kv.page_size - 1) // kv.page_size)
+    return kv.page_table[slot, :n]
 
 
 def release_slot(kv: PagedKV, slot: int) -> PagedKV:

@@ -189,6 +189,66 @@ def _random_balanced_ops(seed: int):
 
 
 # ---------------------------------------------------------------------------
+# Size-class coalescing (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_sizeclass_full_free_coalesce_restores_fresh_arena(seed):
+    """Allocate until the arena is exhausted, free EVERYTHING in random
+    order, coalesce: the merged capacity must match a fresh arena — every
+    hole fuses into one run, the run touches the watermark and is
+    reclaimed (count 0, watermark 0), and a single malloc of the FULL heap
+    succeeds exactly as on init."""
+    rng = random.Random(seed)
+    s = SC.init(HEAP, cap=64)
+    live = []
+    while True:
+        s, p = SC.malloc(s, rng.randint(1, 60))
+        if int(p) < 0:
+            break
+        live.append(int(p))
+    assert live
+    rng.shuffle(live)
+    for p in live:
+        s = SC.free(s, p)
+    s = SC.coalesce(s)
+    assert int(s.count) == 0 and int(s.watermark) == 0
+    assert (np.asarray(s.free_bits) == 0).all()
+    s, p = SC.malloc(s, HEAP)
+    assert int(p) == 0
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_sizeclass_fragmented_malloc_recovers(seed):
+    """Fragmentation recovery on the malloc failure path: adjacent freed
+    holes merge (and the table compacts), so an allocation that fits only
+    in the COALESCED space succeeds — with find_obj/free still agreeing
+    with the linear reference afterwards."""
+    rng = random.Random(100 + seed)
+    s = SC.init(HEAP, cap=64)
+    ptrs = []
+    while True:
+        s, p = SC.malloc(s, 8)          # fill the heap with small blocks
+        if int(p) < 0:
+            break
+        ptrs.append(int(p))
+    k = rng.randint(3, 8)
+    start = rng.randint(0, len(ptrs) - k)
+    freed = ptrs[start:start + k]
+    order = list(freed)
+    rng.shuffle(order)
+    for p in order:
+        s = SC.free(s, p)
+    s, big = SC.malloc(s, 8 * k)        # only fits if the run merged
+    assert int(big) == freed[0]
+    found, base, size = SC.find_obj(s, int(big) + 8 * k - 1)
+    assert bool(found) and int(base) == int(big) and int(size) == 8 * k
+    live = {p: 8 for p in ptrs if p not in freed}
+    live[int(big)] = 8 * k
+    _check_lookup_matches_linear(SC, s, live, list(range(0, HEAP, 5)))
+
+
+# ---------------------------------------------------------------------------
 # Grid group/ungroup bijection
 # ---------------------------------------------------------------------------
 

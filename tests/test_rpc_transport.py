@@ -313,7 +313,8 @@ def test_queue_overflow_surfaced_at_flush():
     jax.effects_barrier()
     assert seen == list(range(k, cap + k))      # order preserved, k lost
     st = flush_stats()
-    assert st == {"flushes": 1, "drops": k, "last_drops": k}
+    assert st == {"flushes": 1, "drops": k, "last_drops": k,
+                  "arena_drops": 0, "last_arena_drops": 0}
 
     @jax.jit
     def clean():
@@ -325,18 +326,25 @@ def test_queue_overflow_surfaced_at_flush():
     clean()
     jax.effects_barrier()
     st = flush_stats()
-    assert st == {"flushes": 2, "drops": k, "last_drops": 0}
+    assert st == {"flushes": 2, "drops": k, "last_drops": 0,
+                  "arena_drops": 0, "last_arena_drops": 0}
 
 
-def test_queue_rejects_nonscalar_and_overwidth():
+def test_queue_rejects_overwidth_unregistered_and_armless_arrays():
     REGISTRY.register("q.bad", lambda *a: None)
     q = RpcQueue.create(capacity=2, width=1)
     with pytest.raises(ValueError, match="width"):
         q.enqueue("q.bad", jnp.int32(0), jnp.int32(1))
-    with pytest.raises(ValueError, match="scalar"):
-        q.enqueue("q.bad", jnp.zeros(3, jnp.float32))
     with pytest.raises(KeyError):
         q.enqueue("q.unregistered", jnp.int32(0))
+    # v3: arrays are payloads — but only on a queue WITH an arena
+    q0 = RpcQueue.create(capacity=2, width=1, payload_capacity=0)
+    with pytest.raises(ValueError, match="payload"):
+        q0.enqueue("q.bad", jnp.zeros(3, jnp.float32))
+    # a single record that can NEVER fit the arena is a trace-time error
+    q1 = RpcQueue.create(capacity=2, width=1, payload_capacity=4)
+    with pytest.raises(ValueError, match="arena only holds"):
+        q1.enqueue("q.bad", jnp.zeros(5, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -429,3 +437,257 @@ def test_mixed_immediate_and_batched_hooks():
     jax.effects_barrier()
     assert now == [2, 4, 6, 8, 10]
     assert later == [5, 10]
+
+
+# ---------------------------------------------------------------------------
+# Transport v3: payload arena (variable-width records)
+# ---------------------------------------------------------------------------
+
+def test_payload_roundtrip_dtypes_and_order():
+    """A record mixing scalar lanes and int/float array payloads reaches
+    the host with every argument in call-site position, arrays as 1-D
+    numpy of the right dtype and exact values."""
+    seen = []
+    REGISTRY.register(
+        "p.mix", lambda i, ints, f, floats: seen.append(
+            (i, ints.copy(), f, floats.copy())))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=4, payload_capacity=64)
+        q = q.enqueue("p.mix", jnp.int32(7),
+                      jnp.asarray([3, -1, 12], jnp.int32), jnp.float32(2.5),
+                      jnp.asarray([0.5, -1.25], jnp.float32))
+        q = q.enqueue("p.mix", jnp.int32(8),
+                      jnp.asarray([[9, 9]], jnp.int32),   # flattened
+                      jnp.float32(0.5), jnp.zeros((3,), jnp.float32))
+        q = q.flush()
+        return q.head, q.phead
+
+    head, phead = prog()
+    jax.effects_barrier()
+    assert int(head) == 0 and int(phead) == 0      # flush resets both
+    assert len(seen) == 2
+    i0, ints0, f0, floats0 = seen[0]
+    assert (i0, f0) == (7, 2.5)
+    assert ints0.dtype == np.int32 and ints0.tolist() == [3, -1, 12]
+    assert floats0.dtype == np.float32 and floats0.tolist() == [0.5, -1.25]
+    assert seen[1][1].tolist() == [9, 9]           # 2-D flattens to 1-D
+    assert seen[1][3].tolist() == [0.0, 0.0, 0.0]
+
+
+def test_payload_order_across_mixed_records():
+    """Scalar-only and payload-carrying records interleave; replay is exact
+    enqueue order (seeded property-style sweep)."""
+    import random
+    rng = random.Random(7)
+    seen = []
+    REGISTRY.register("p.scalar", lambda i: seen.append(("s", i)))
+    REGISTRY.register("p.arr", lambda i, a: seen.append(("a", i, a.tolist())))
+
+    plan = []
+    for i in range(20):
+        if rng.random() < 0.5:
+            plan.append(("s", i, None))
+        else:
+            plan.append(("a", i, [rng.randint(-99, 99)
+                                  for _ in range(rng.randint(0, 5))]))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(32, width=2, payload_capacity=128)
+        for kind, i, data in plan:
+            if kind == "s":
+                q = q.enqueue("p.scalar", jnp.int32(i))
+            else:
+                q = q.enqueue("p.arr", jnp.int32(i),
+                              jnp.asarray(data, jnp.int32).reshape(-1))
+        q = q.flush()
+        return q.head
+
+    prog()
+    jax.effects_barrier()
+    expect = [("s", i) if kind == "s" else ("a", i, data)
+              for kind, i, data in plan]
+    assert seen == expect
+
+
+def test_payload_arena_overflow_drops_atomically():
+    """Ring has room, arena does not: the record disappears entirely — not
+    replayed, no orphaned words (the NEXT record's payload lands at the
+    un-advanced watermark), and the drop is accounted separately."""
+    jax.effects_barrier()
+    reset_rpc_stats()
+    seen = []
+    REGISTRY.register("p.over", lambda i, a: seen.append((i, a.tolist())))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, payload_capacity=10)
+        q = q.enqueue("p.over", jnp.int32(0),
+                      jnp.arange(6, dtype=jnp.int32))          # fits: 6/10
+        q = q.enqueue("p.over", jnp.int32(1),
+                      jnp.arange(6, dtype=jnp.int32) + 100)    # 12 > 10: DROP
+        q = q.enqueue("p.over", jnp.int32(2),
+                      jnp.arange(4, dtype=jnp.int32) + 50)     # fits: 10/10
+        q = q.flush()
+        return q.head
+
+    with pytest.warns(RuntimeWarning, match="payload"):
+        prog()
+        jax.effects_barrier()
+    assert seen == [(0, [0, 1, 2, 3, 4, 5]), (2, [50, 51, 52, 53])]
+    st = flush_stats()
+    assert st["arena_drops"] == 1 and st["last_arena_drops"] == 1
+    assert st["drops"] == 0                      # ring never overflowed
+
+
+def test_payload_conditional_enqueue_reserves_nothing():
+    """where=False with a payload must not advance the arena watermark or
+    write words — the next record's payload starts where the skipped one
+    would have."""
+    seen = []
+    REGISTRY.register("p.cond", lambda i, a: seen.append((i, a.tolist())))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, payload_capacity=4)
+        q = q.enqueue("p.cond", jnp.int32(0),
+                      jnp.asarray([1, 2], jnp.int32), where=jnp.bool_(False))
+        # only fits if the skipped record reserved nothing (4-word arena)
+        q = q.enqueue("p.cond", jnp.int32(1),
+                      jnp.asarray([7, 8, 9, 10], jnp.int32))
+        q = q.flush()
+        return q.head
+
+    head = prog()
+    jax.effects_barrier()
+    assert int(head) == 0
+    assert seen == [(1, [7, 8, 9, 10])]
+    assert flush_stats()["last_arena_drops"] == 0
+
+
+def test_rpc_call_batched_path():
+    """rpc_call(batched=True, queue=...) is the fire-and-forget array-arg
+    fast path: enqueue returns the updated queue; Refs are rejected; the
+    host sees the call at flush."""
+    seen = []
+    REGISTRY.register("p.batched", lambda i, a: seen.append((i, a.tolist())))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, payload_capacity=32)
+        q = rpc_call("p.batched", jnp.int32(3),
+                     jnp.asarray([4.0, 5.0], jnp.float32),
+                     batched=True, queue=q)
+        q = q.flush()
+        return q.head
+
+    prog()
+    jax.effects_barrier()
+    assert seen == [(3, [4.0, 5.0])]
+
+    q = RpcQueue.create(8, width=2, payload_capacity=32)
+    with pytest.raises(ValueError, match="fire-and-forget"):
+        rpc_call("p.batched", jnp.int32(0),
+                 Ref(jnp.zeros(2, jnp.float32)), batched=True, queue=q)
+    with pytest.raises(ValueError, match="queue"):
+        rpc_call("p.batched", jnp.int32(0), batched=True)
+    with pytest.raises(TypeError, match="result_shape"):
+        rpc_call("p.batched", jnp.int32(0))
+
+
+def test_remote_malloc_rides_arena():
+    """Bulk remote mallocs: the size vector travels as ONE payload record;
+    at flush the host runs the prefix-sum bulk allocation against the
+    registered host-side heap, in record order."""
+    from repro.core.allocator import GenericAllocator as GAlloc
+    from repro.core.libc import (remote_heap_register, remote_malloc_enqueue,
+                                 remote_malloc_results)
+    remote_heap_register("heap.t", GAlloc.init(256, cap=32))
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, payload_capacity=32)
+        q = remote_malloc_enqueue(q, "heap.t",
+                                  jnp.asarray([8, 16, 8], jnp.int32))
+        q = remote_malloc_enqueue(q, "heap.t", jnp.asarray([4], jnp.int32))
+        q = q.flush()
+        return q.head
+
+    prog()
+    jax.effects_barrier()
+    state, ptr_batches = remote_malloc_results("heap.t")
+    assert [p.tolist() for p in ptr_batches] == [[0, 8, 24], [32]]
+    assert int(state.watermark) == 36
+
+    q = RpcQueue.create(8, width=2, payload_capacity=32)
+    with pytest.raises(KeyError, match="remote heap"):
+        remote_malloc_enqueue(q, "heap.unknown", jnp.asarray([1], jnp.int32))
+
+
+def test_fprintf_fwrite_buffered():
+    """libc.fprintf/fwrite buffer REAL formatted strings and binary data
+    through the queue: zero host contact until ONE flush."""
+    from repro.core.libc import drain_fwrite, drain_printf, fprintf, fwrite
+    reset_rpc_stats()
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(16, width=4, payload_capacity=64)
+        q = fprintf(q, "step %d loss %.2f", jnp.int32(3), jnp.float32(0.125))
+        q = fwrite(q, jnp.asarray([10, 20, 30], jnp.int32))
+        q = fprintf(q, "hist %s", jnp.asarray([1, 2, 3], jnp.int32))
+        q = fwrite(q, jnp.asarray([40], jnp.int32))
+        q = fwrite(q, jnp.asarray([0.5, 1.5], jnp.float32), stream=7)
+        q = q.flush()
+        return q.head
+
+    prog()
+    jax.effects_barrier()
+    assert flush_stats()["flushes"] == 1          # ONE host contact
+    assert drain_printf() == ["step 3 loss 0.12", "hist [1 2 3]"]
+    assert drain_fwrite().tolist() == [10, 20, 30, 40]   # stream 0, in order
+    assert drain_fwrite(7).tolist() == [0.5, 1.5]
+    assert drain_fwrite(99).tolist() == []        # untouched stream is empty
+
+
+def test_logring_payload_records():
+    """LogRing.log(tag, value, payload=...) attaches an array that reaches
+    the sink as a third argument; scalar records keep the 2-arg shape."""
+    from repro.core.libc import LogRing, drain_log_lines
+    drain_log_lines()
+
+    @jax.jit
+    def prog():
+        r = LogRing.create(8, payload_capacity=16)
+        r = r.log(1, 0.5)
+        r = r.log(2, 1.5, payload=jnp.asarray([9.0, 8.0], jnp.float32))
+        r = r.flush()
+        return r.head
+
+    prog()
+    jax.effects_barrier()
+    lines = drain_log_lines()
+    assert lines[0] == (1, 0.5)
+    tag, val, arr = lines[1]
+    assert (tag, val) == (2, 1.5) and arr.tolist() == [9.0, 8.0]
+
+
+def test_batched_hook_array_payload():
+    """device_run batched hooks ship array extract leaves host-free: the
+    whole run is ONE flush, each firing delivering its vector."""
+    seen = []
+    hook = HostHook(every=2,
+                    extract=lambda i, s: {"v": s, "hist": s + jnp.arange(
+                        3, dtype=jnp.float32)},
+                    host_fn=lambda i, hist, v: seen.append(
+                        (i, hist.tolist(), v)),
+                    name="hook.payload_test", batched=True)
+    final = device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 6,
+                       hooks=[hook], donate=False)
+    jax.effects_barrier()
+    assert float(final) == 6.0
+    assert seen == [(2, [2.0, 3.0, 4.0], 2.0),
+                    (4, [4.0, 5.0, 6.0], 4.0),
+                    (6, [6.0, 7.0, 8.0], 6.0)]

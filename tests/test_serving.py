@@ -57,6 +57,46 @@ def test_engine_slot_reuse_is_clean(dense_model):
     assert res[b] == ref
 
 
+def test_engine_spill_sink_receives_page_ids(dense_model):
+    """Host-side page spill (transport v3): every retiring request ships
+    its page-id list as ONE batched payload RPC before its slot is
+    released — ids are the slot's live page-table prefix, distinct, and
+    consistent with the request's token count."""
+    cfg, model, params = dense_model
+    spilled = []
+
+    def sink(rid, n_tokens, pages):
+        spilled.append((int(rid), int(n_tokens), pages.tolist()))
+
+    eng = ServingEngine(model, params, batch_slots=2, max_len=64,
+                        page_size=8, spill_sink=sink)
+    r1 = eng.submit([5, 17, 42, 7], max_new=6)
+    r2 = eng.submit([9, 3], max_new=13)
+    res = eng.run_until_drained()
+    assert len(res) == 2 and len(spilled) == 2
+    by_rid = {rid: (n, pages) for rid, n, pages in spilled}
+    assert set(by_rid) == {r1, r2}
+    for rid, (n_tokens, pages) in by_rid.items():
+        # one page per started page_size window, all ids distinct
+        assert len(pages) == -(-n_tokens // 8)
+        assert len(set(pages)) == len(pages)
+    # cache holds prompt + generated - 1 tokens (the final sampled token is
+    # harvested without ever being fed back)
+    # r1: 4 prompt + 6 generated -> 9 written tokens -> 2 pages of 8
+    assert by_rid[r1][0] == 9 and len(by_rid[r1][1]) == 2
+    # r2: 2 prompt + 13 generated -> 14 written tokens -> 2 pages
+    assert by_rid[r2][0] == 14 and len(by_rid[r2][1]) == 2
+
+
+def test_engine_spill_disabled_by_default(dense_model):
+    cfg, model, params = dense_model
+    eng = ServingEngine(model, params, batch_slots=1, max_len=32,
+                        page_size=8)
+    assert eng.spill_q is None
+    eng.submit([3, 1], max_new=2)
+    eng.run_until_drained()        # no spill machinery touched
+
+
 def test_engine_mixed_lengths_continuous_batching(dense_model):
     cfg, model, params = dense_model
     eng = ServingEngine(model, params, batch_slots=2, max_len=64, page_size=8)
