@@ -28,7 +28,9 @@ def write_artifact(filename: str, payload: Dict) -> str:
     Target directory comes from ``$BENCH_ARTIFACT_DIR`` (default: cwd), so
     CI can collect artifacts without knowing which suites produce them.
     """
-    path = os.path.join(os.environ.get("BENCH_ARTIFACT_DIR", "."), filename)
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -47,6 +49,48 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def time_fn_drained(fn: Callable, *args, warmup: int = 2,
+                    iters: int = 5) -> float:
+    """:func:`time_fn` with host-callback drain INSIDE the timed region.
+
+    ``jax.block_until_ready(result)`` does NOT wait for ordered
+    ``io_callback``s whose output is unused — their cost leaks into the
+    NEXT timed iteration, silently inflating whichever contestant runs
+    second.  Anything that flushes an RpcQueue/LogRing must be timed
+    through this wrapper (the PR-4 timing fix, promoted here so every
+    suite shares it)."""
+
+    def g(*a):
+        out = fn(*a)
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+        return out
+
+    jax.effects_barrier()                 # don't inherit pending callbacks
+    return time_fn(g, *args, warmup=warmup, iters=iters)
+
+
+def contrast_best_of(fn_a: Callable, fn_b: Callable, *args,
+                     rounds: int = 3, drained: bool = False,
+                     warmup: int = 2, iters: int = 9
+                     ) -> "tuple[float, float]":
+    """Contention-guarded A/B timing for ratio assertions.
+
+    This CPU container's noise floor is ±2-3x between rounds — close to
+    most effect sizes — so a single median per contestant flakes.  This
+    measures both contestants in INTERLEAVED rounds (A, B, A, B, ...: a
+    background-load burst hits both, not just whoever ran second) and
+    returns each contestant's best-of-``rounds`` median.  ``drained=True``
+    routes through :func:`time_fn_drained` (required whenever either
+    contestant flushes a queue)."""
+    timer = time_fn_drained if drained else time_fn
+    ta = tb = float("inf")
+    for _ in range(rounds):
+        ta = min(ta, timer(fn_a, *args, warmup=warmup, iters=iters))
+        tb = min(tb, timer(fn_b, *args, warmup=warmup, iters=iters))
+    return ta, tb
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -105,5 +149,7 @@ def sharded_queue_contrast(n_shards: int, per_shard: int,
         q = ShardedRpcQueue(jax.vmap(fill)(q.q, jnp.arange(D)))
         return q.flush().q.head
 
-    return {"funneled": time_fn(funneled, **time_kwargs),
-            "sharded": time_fn(sharded, **time_kwargs)}
+    # both contestants flush (ordered callbacks): drain inside the timed
+    # region so neither leaks its flush cost into the other's round
+    return {"funneled": time_fn_drained(funneled, **time_kwargs),
+            "sharded": time_fn_drained(sharded, **time_kwargs)}

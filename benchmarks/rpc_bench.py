@@ -24,6 +24,14 @@ The scalar batched number doubles as the v3-vs-v2 scalar-record regression
 guard: BENCH_rpc.json is a perf-trajectory artifact, so the next PR diffs
 enqueue/flush throughput against this one.
 
+The reply section (ISSUE 5, transport v4) measures the RESULT path: RPCs
+whose P-element reply is consumed on device — per-call ordered io_callback
+(the pre-v4 only option) vs ticketed enqueue + ONE two-phase flush + reply
+arena reads, at P in {1, 64, 1024}.  The 64-element amortization is
+ASSERTED (>= 2x) behind the interleaved best-of-N contention guard with
+callbacks drained inside the timed region (the de-flaked pattern shared
+with the allocator bench's sharded gate via benchmarks.common).
+
 The sharded section (ISSUE 3) contrasts the FUNNELED transport (every
 logical device's records through one queue) with the sharded transport
 (one queue shard per device, one gathered flush replaying (device, slot)
@@ -42,8 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (emit, sharded_queue_contrast, time_fn,
-                               write_artifact)
+from benchmarks.common import (contrast_best_of, emit,
+                               sharded_queue_contrast, time_fn,
+                               time_fn_drained, write_artifact)
 from repro.core.libc import LogRing, drain_log_lines
 from repro.core.rpc import (REGISTRY, Ref, RpcQueue, host_rpc,
                             reset_rpc_stats, rpc_call)
@@ -53,6 +62,13 @@ N_QUEUED = 64
 N_SHARDS = 4
 PAYLOAD_ELEMS = (1, 64, 1024)
 PAYLOAD_TARGET = 5.0              # acceptance: >= 5x amortization at 64 elems
+REPLY_ELEMS = (1, 64, 1024)
+#: ISSUE 5 acceptance gate: batched-with-results must amortize the
+#: per-call ordered round-trip by at least this factor at 64-element
+#: replies.  Deliberately below the typically-observed ratio — the gate
+#: catches a transport regression, not container noise (and it sits
+#: behind the contrast_best_of contention guard besides).
+REPLY_TARGET = 2.0
 
 
 def run() -> dict:
@@ -119,6 +135,7 @@ def run() -> dict:
 
     run_batched(artifact)
     run_payload(artifact)
+    run_reply(artifact)
     run_sharded(artifact)
     return artifact
 
@@ -199,20 +216,6 @@ def run_payload(artifact=None) -> None:
 
     from jax import lax
 
-    def drained(fn):
-        """Time the callbacks too: an ordered io_callback completes after
-        its result is ready, so both contestants must drain effects inside
-        the timed region or the flush cost leaks into the next iteration."""
-        jfn = jax.jit(fn)
-
-        def g(s):
-            out = jfn(s)
-            jax.block_until_ready(out)
-            jax.effects_barrier()
-            return out
-
-        return g
-
     for P in PAYLOAD_ELEMS:
         def percall_loop(s):
             def body(i, s):
@@ -236,8 +239,10 @@ def run_payload(artifact=None) -> None:
             return s
 
         s0 = jnp.float32(0.0)
-        t_percall = time_fn(drained(percall_loop), s0, warmup=2, iters=9)
-        t_batched = time_fn(drained(batched_loop), s0, warmup=2, iters=9)
+        t_percall = time_fn_drained(jax.jit(percall_loop), s0, warmup=2,
+                                    iters=9)
+        t_batched = time_fn_drained(jax.jit(batched_loop), s0, warmup=2,
+                                    iters=9)
 
         per_call = t_percall / N_QUEUED
         batched = t_batched / N_QUEUED
@@ -257,6 +262,77 @@ def run_payload(artifact=None) -> None:
                 "amortization": amort,
             }
     got.clear()
+
+
+def run_reply(artifact=None) -> None:
+    """ISSUE 5 (transport v4): RESULT-BEARING RPCs — N_QUEUED calls whose
+    P-element int reply is consumed on device — per-call ordered
+    io_callback (the only way to get a result before v4) vs ticketed
+    enqueue + ONE two-phase flush + reply-arena reads.  The 64-element
+    point must amortize >= REPLY_TARGET, asserted behind the
+    contrast_best_of contention guard (interleaved best-of-N, callbacks
+    drained inside the timed region — the de-flaked pattern the sharded
+    heap gate uses)."""
+
+    def reply_host(i, p):
+        return np.arange(int(p), dtype=np.int32) + int(i)
+
+    REGISTRY.register("bench.reply", reply_host)
+
+    from jax import lax
+
+    for P in REPLY_ELEMS:
+        shape = jax.ShapeDtypeStruct((P,), jnp.int32)
+
+        def percall_loop(s):
+            def body(i, s):
+                r, _ = rpc_call("bench.reply", i, jnp.int32(P),
+                                result_shape=shape)
+                return s + r[0]
+            return lax.fori_loop(0, N_QUEUED, body, s)
+
+        def batched_loop(s):
+            q = RpcQueue.create(N_QUEUED, width=2,
+                                reply_capacity=N_QUEUED * P)
+
+            def body(i, q):
+                # no drops in this loop, so ticket i == loop index i: the
+                # read-back loop below can address replies by index
+                q, _ = q.enqueue_ticketed("bench.reply", i, jnp.int32(P),
+                                          returns=shape)
+                return q
+
+            q = lax.fori_loop(0, N_QUEUED, body, q)
+            q = q.flush()
+
+            def rd(i, s):
+                return s + q.result(i, (P,), jnp.int32)[0]
+            return lax.fori_loop(0, N_QUEUED, rd, s)
+
+        s0 = jnp.int32(0)
+        t_percall, t_batched = contrast_best_of(
+            jax.jit(percall_loop), jax.jit(batched_loop), s0,
+            rounds=3, drained=True, warmup=2, iters=9)
+
+        per_call = t_percall / N_QUEUED
+        batched = t_batched / N_QUEUED
+        amort = per_call / max(batched, 1e-12)
+        emit(f"fig7/reply{P}/percall", per_call * 1e6)
+        emit(f"fig7/reply{P}/arena_batched", batched * 1e6,
+             f"amortization={amort:.1f}x")
+        if artifact is not None:
+            artifact.setdefault("reply", {})[f"elems{P}"] = {
+                "records": N_QUEUED,
+                "reply_elems": P,
+                "percall_us_per_record": per_call * 1e6,
+                "reply_batched_us_per_record": batched * 1e6,
+                "amortization": amort,
+            }
+        if P == 64:
+            assert amort >= REPLY_TARGET, (
+                f"reply-path regression: batched-with-results amortizes "
+                f"only {amort:.1f}x < {REPLY_TARGET:.0f}x the per-call "
+                f"ordered RPC at 64-element replies (best-of-N, drained)")
 
 
 def run_sharded(artifact=None) -> None:

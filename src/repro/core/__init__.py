@@ -14,10 +14,14 @@ from repro.core.device_main import HostHook, device_run, host_driven_run
 from repro.core.expand import (
     barrier, expand, num_teams, num_threads, parallel_for, serial_for,
     team_id, thread_id, ws_range)
-from repro.core.libc import LogRing, atoi, rand_u32, rand_uniform, realloc, strtod
+from repro.core.libc import (
+    LogRing, atoi, fgets, fprintf, fread, fread_feed, fwrite, rand_u32,
+    rand_uniform, realloc, remote_heap_register, remote_malloc_enqueue,
+    remote_malloc_results, strtod)
 from repro.core.rpc import (
-    READ, READWRITE, WRITE, ArenaRef, Ref, RpcQueue, host_rpc, pad_stats,
-    pad_table, queue_drops, rpc_call, rpc_stats, reset_rpc_stats)
+    READ, READWRITE, WRITE, ArenaRef, Ref, RpcQueue, ShardedRpcQueue,
+    flush_stats, host_rpc, pad_stats, pad_table, queue_drops, rpc_call,
+    rpc_stats, reset_rpc_stats)
 
 __all__ = [
     "BalancedAllocator", "BalancedState", "GenericAllocator", "GenericState",
@@ -26,8 +30,10 @@ __all__ = [
     "HostHook", "device_run", "host_driven_run",
     "barrier", "expand", "num_teams", "num_threads", "parallel_for",
     "serial_for", "team_id", "thread_id", "ws_range",
-    "LogRing", "atoi", "rand_u32", "rand_uniform", "realloc", "strtod",
-    "READ", "READWRITE", "WRITE", "ArenaRef", "Ref", "RpcQueue", "host_rpc",
-    "pad_stats", "pad_table", "queue_drops", "rpc_call", "rpc_stats",
-    "reset_rpc_stats",
+    "LogRing", "atoi", "fgets", "fprintf", "fread", "fread_feed", "fwrite",
+    "rand_u32", "rand_uniform", "realloc", "remote_heap_register",
+    "remote_malloc_enqueue", "remote_malloc_results", "strtod",
+    "READ", "READWRITE", "WRITE", "ArenaRef", "Ref", "RpcQueue",
+    "ShardedRpcQueue", "flush_stats", "host_rpc", "pad_stats", "pad_table",
+    "queue_drops", "rpc_call", "rpc_stats", "reset_rpc_stats",
 ]

@@ -138,15 +138,33 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                n_steps: int, *, hooks: Sequence[HostHook] = (),
                donate: bool = True, jit_kwargs: Optional[dict] = None,
                queue_capacity: int = 1024, queue_width: int = 8,
-               queue_payload: int = 4096,
+               queue_payload: int = 4096, queue_reply: int = 0,
+               thread_queue: bool = False, return_queue: bool = False,
                mesh: Optional[Mesh] = None, state_spec=None) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
 
     The whole loop is one compiled program; ``hooks`` are the only host
     contact.  Batched hooks share one on-device :class:`RpcQueue`
     (``queue_capacity`` records of ``queue_width`` args, with a
-    ``queue_payload``-word arena for array extract leaves) flushed once
-    after the loop.  Returns the final state.
+    ``queue_payload``-word arena for array extract leaves and a
+    ``queue_reply``-word REPLY arena — transport v4) flushed once after
+    the loop.  Returns the final state.
+
+    ``thread_queue=True`` hands the run's queue to the step itself:
+    ``step_fn(step, state, queue) -> (state, queue)``.  Without ``mesh=``
+    the step may enqueue ticketed RPCs, FLUSH mid-loop, and read replies
+    on later steps (``queue.result`` after an in-loop ``queue.flush()``)
+    — the v4 blocking-at-flush path threaded across steps; give the queue
+    a reply arena via ``queue_reply``.  ``return_queue=True``
+    additionally returns ``(final_state, flushed_queue)`` so post-loop
+    code (or the caller) can read the LAST flush's replies by ticket.
+    Both options also work with ``mesh=`` (the step sees its device's
+    queue SHARD; the returned queue is the flushed sharded queue) with
+    ONE restriction: no mid-loop flush — XLA cannot lower the drain
+    callback inside the partitioned program, so under a mesh the step
+    only ENQUEUES and every reply is read after the single
+    program-boundary flush (``RpcQueue.flush`` raises a clear error if a
+    step tries anyway).
 
     With ``mesh=``, the step loop runs under parallelism expansion
     (§3.3): one ``shard_map`` over every mesh axis contains the whole
@@ -169,22 +187,27 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
         if mesh is not None:
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
                                     state_spec, queue_capacity, queue_width,
-                                    queue_payload, dict(jit_kwargs or {}))
+                                    queue_payload, queue_reply, thread_queue,
+                                    return_queue, dict(jit_kwargs or {}))
 
         jit_kwargs = dict(jit_kwargs or {})
         if donate:
             jit_kwargs.setdefault("donate_argnums", (0,))
         any_batched = any(h.batched for h in hooks)
+        carries_queue = any_batched or thread_queue or return_queue
 
         @functools.partial(jax.jit, **jit_kwargs)
         def program(state):
             def cond(carry):
                 return carry[0] < n_steps
 
-            if any_batched:
+            if carries_queue:
                 def body(carry):
                     step, state, q = carry
-                    state = step_fn(step, state)
+                    if thread_queue:
+                        state, q = step_fn(step, state, q)
+                    else:
+                        state = step_fn(step, state)
                     for h, hname in named:
                         if h.batched:
                             q = _fire_batched(h, hname, step + 1, state, q)
@@ -193,10 +216,12 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                     return (step + 1, state, q)
 
                 q0 = RpcQueue.create(queue_capacity, queue_width,
-                                     queue_payload)
+                                     queue_payload, queue_reply)
                 _, final, q = lax.while_loop(
                     cond, body, (jnp.zeros((), jnp.int32), state, q0))
-                q.flush()
+                q = q.flush()
+                if return_queue:
+                    return final, q
             else:
                 def body(carry):
                     step, state = carry
@@ -215,15 +240,19 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
 
 
 def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
-                     queue_capacity, queue_width, queue_payload, jit_kwargs):
+                     queue_capacity, queue_width, queue_payload, queue_reply,
+                     thread_queue, return_queue, jit_kwargs):
     """The sharded step loop: whole ``while_loop`` inside one ``shard_map``,
     hooks enqueued into this device's queue shard, ONE gathered drain at the
     program boundary (the flush runs host-side on the materialized shards —
-    XLA cannot lower a gathered callback inside the partitioned program)."""
+    XLA cannot lower a gathered callback inside the partitioned program).
+    With ``thread_queue`` the step owns its device's shard; with
+    ``return_queue`` the flushed sharded queue — reply tables stacked per
+    device — is returned next to the final state."""
     axes = tuple(mesh.axis_names)
     spec = state_spec if state_spec is not None else P()
     q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width,
-                                queue_payload)
+                                queue_payload, queue_reply)
 
     def region(state, q):
         lq = q.local_view()
@@ -233,7 +262,10 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
 
             def body(carry):
                 step, st, lq = carry
-                st = step_fn(step, st)
+                if thread_queue:
+                    st, lq = step_fn(step, st, lq)
+                else:
+                    st = step_fn(step, st)
                 for h, hname in named:
                     lq = _fire_batched(h, hname, step + 1, st, lq)
                 return (step + 1, st, lq)
@@ -246,7 +278,9 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
         region, mesh=mesh, in_specs=(spec, P(axes)),
         out_specs=(spec, P(axes)), check_vma=False), **jit_kwargs)
     final, q = program(state, q0)
-    q.flush()                      # concrete shards -> host-side drain
+    q = q.flush()                  # concrete shards -> host-side drain
+    if return_queue:
+        return final, q
     return final
 
 

@@ -27,7 +27,14 @@ team", a vectorized lane.  This module provides:
   transport v3 the queue shard carries a per-device PAYLOAD ARENA: a team
   can enqueue array-carrying records (``libc.fprintf``/``fwrite`` data,
   histograms, bulk remote-malloc size vectors) as pure local array updates,
-  and the one gathered flush replays them with payloads reattached;
+  and the one gathered flush replays them with payloads reattached.  Since
+  transport v4 it can also carry a per-device REPLY ARENA
+  (``reply_capacity > 0``): a team enqueues TICKETED records
+  (``enqueue_ticketed(returns=...)``, ``remote_malloc_enqueue(...,
+  device=team_id())``) and threads the tickets out of the region with its
+  other outputs; after the program-boundary flush, ``q.local(d).result``
+  / ``q.result(d, ticket, ...)`` reads device ``d``'s replies — e.g. the
+  global ``(device, offset)`` pointers of a remote malloc it requested;
 
 * :func:`parallel_for` / :func:`serial_for` — the measurable contrast the
   paper's Fig. 8–10 are built on: the *expanded* execution of an iteration

@@ -33,10 +33,23 @@ device-resident training/serving loop would otherwise escape to the host for:
                      flush.  ``fwrite`` is its binary sibling: the array
                      payload is appended verbatim to a host-side stream.
 * ``remote mallocs`` — ``remote_malloc_enqueue``: a batch of allocation
-                     sizes rides the arena as ONE fire-and-forget record;
-                     at flush the host runs the bulk prefix-sum allocation
-                     against a registered host-side heap (the RPC-driven
-                     remote malloc of ROADMAP/HetGPU, amortized).
+                     sizes rides the arena as ONE record; at flush the host
+                     runs the bulk prefix-sum allocation against a
+                     registered host-side heap (the RPC-driven remote
+                     malloc of ROADMAP/HetGPU, amortized).  Since transport
+                     v4 the enqueue returns a TICKET whose reply — read on
+                     device via ``queue.result(ticket, ...)`` after flush —
+                     is the vector of resulting pointers; against a
+                     registered :class:`~repro.core.allocator.ShardedHeap`
+                     they are global ``(device, offset)`` pointers that
+                     ``find_obj`` resolves, so a device can consume memory
+                     it asked the host to reserve.
+* ``fread/fgets``  — INPUT through the v4 reply arena: the device enqueues
+                     a read request; at flush the host pops bytes/elements
+                     off a registered input stream and the data comes back
+                     through the reply buffer, readable as a device array
+                     (``fgets`` stops after the first newline, zero-padded
+                     — feed the streams with ``fread_feed``).
 * ``realloc``      — allocator-integrated grow/copy on arena arrays.
 """
 from __future__ import annotations
@@ -51,7 +64,7 @@ from jax import lax
 
 from repro.core.allocator import (
     BalancedAllocator, BalancedState, GenericAllocator, GenericState,
-    SizeClassAllocator, SizeClassState, allocator_for)
+    ShardedHeap, SizeClassAllocator, SizeClassState, allocator_for)
 from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue
 
 
@@ -364,15 +377,111 @@ def drain_fwrite(stream: int = 0) -> np.ndarray:
     mixing int and float writes on one stream would silently promote the
     result to float64 and break fixed-width framing, so it raises instead
     (use one stream per dtype)."""
-    chunks = _WRITE_STREAMS.pop(stream, [])
+    chunks = _WRITE_STREAMS.get(stream, [])
     if not chunks:
         return np.zeros((0,), np.int32)
     dtypes = {c.dtype for c in chunks}
     if len(dtypes) > 1:
+        # validate BEFORE popping: the error must not destroy the buffered
+        # data (the caller can still inspect/recover the stream)
         raise ValueError(
             f"fwrite stream {stream} mixes dtypes {sorted(map(str, dtypes))};"
             " write int and float data to separate streams")
+    _WRITE_STREAMS.pop(stream, None)
     return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# fread / fgets — buffered INPUT through the v4 reply arena
+# ---------------------------------------------------------------------------
+
+#: Host-side input streams: stream id -> {"buf": 1-D numpy array, "pos"}.
+#: Text feeds (bytes/str) store uint8 codes widened to int32; numeric feeds
+#: keep int32/float32.  One dtype per stream (mirrors the fwrite rule).
+_READ_STREAMS: Dict[int, Dict] = {}
+
+
+def fread_feed(stream: int, data, reset: bool = False) -> None:
+    """Bind host-side input for :func:`fread`/:func:`fgets` on ``stream``.
+
+    ``data``: ``bytes``/``str`` (stored as uint8 character codes, the
+    device-parsable form — see :func:`atoi`/:func:`strtod`) or a numpy/jax
+    array (int kinds -> int32, floats -> float32).  Appends to the stream
+    unless ``reset``."""
+    if isinstance(data, str):
+        data = data.encode()
+    if isinstance(data, (bytes, bytearray)):
+        arr = np.frombuffer(bytes(data), np.uint8).astype(np.int32)
+    else:
+        arr = np.asarray(data).reshape(-1)
+        arr = (arr.astype(np.float32)
+               if np.issubdtype(arr.dtype, np.floating)
+               else arr.astype(np.int32))
+    st = _READ_STREAMS.get(int(stream))
+    if st is None or reset:
+        _READ_STREAMS[int(stream)] = {"buf": arr, "pos": 0}
+        return
+    if st["buf"].dtype != arr.dtype:
+        raise ValueError(
+            f"fread stream {int(stream)} holds {st['buf'].dtype}; feeding "
+            f"{arr.dtype} would mix dtypes — use one stream per dtype")
+    st["buf"] = np.concatenate([st["buf"][st["pos"]:], arr])
+    st["pos"] = 0
+
+
+def _fread_sink(stream, n):
+    st = _READ_STREAMS.get(int(stream))
+    if st is None:
+        return None                       # unknown stream: reads as zeros
+    take = st["buf"][st["pos"]:st["pos"] + int(n)]
+    st["pos"] += len(take)
+    return take                           # short read: drain zero-pads
+
+
+def _fgets_sink(stream, n):
+    st = _READ_STREAMS.get(int(stream))
+    if st is None:
+        return None
+    window = st["buf"][st["pos"]:st["pos"] + int(n)]
+    nl = np.nonzero(window == 10)[0]      # stop AFTER the first newline
+    k = int(nl[0]) + 1 if len(nl) else len(window)
+    st["pos"] += k
+    return window[:k]
+
+
+REGISTRY.register("libc.fread", _fread_sink)
+REGISTRY.register("libc.fgets", _fgets_sink)
+
+
+def fread(q: RpcQueue, n: int, stream: int = 0, dtype=jnp.int32,
+          where=None) -> Tuple[RpcQueue, jax.Array]:
+    """Buffered ``fread`` from device code: enqueue a request for ``n``
+    elements of host stream ``stream`` (fed via :func:`fread_feed`);
+    returns ``(queue', ticket)``.  At flush the host pops the elements and
+    the data rides the reply arena back — read it with
+    ``q.result(ticket, (n,), dtype)``.  Short reads (stream exhausted) are
+    zero-padded, C-``fread``-style semantics minus the count (parse the
+    zero tail, or frame your records).  ``dtype`` must match what was fed
+    (int stream -> int kinds, float stream -> floats).  Requires
+    ``reply_capacity >= n``."""
+    n = int(n)
+    return q.enqueue_ticketed(
+        "libc.fread", jnp.int32(stream), jnp.int32(n),
+        returns=jax.ShapeDtypeStruct((n,), dtype), where=where)
+
+
+def fgets(q: RpcQueue, n: int, stream: int = 0, where=None
+          ) -> Tuple[RpcQueue, jax.Array]:
+    """Buffered ``fgets``: read up to ``n`` bytes of ``stream`` through the
+    first newline (newline kept, as in C); returns ``(queue', ticket)``.
+    The reply — ``q.result(ticket, (n,), jnp.int32)`` after flush — holds
+    the character codes, zero-padded past the line end (the pad doubles as
+    the NUL terminator; a line filling the whole buffer has none).  Codes
+    feed :func:`atoi`/:func:`strtod` directly."""
+    n = int(n)
+    return q.enqueue_ticketed(
+        "libc.fgets", jnp.int32(stream), jnp.int32(n),
+        returns=jax.ShapeDtypeStruct((n,), jnp.int32), where=where)
 
 
 # ---------------------------------------------------------------------------
@@ -385,13 +494,49 @@ _REMOTE_HEAPS: Dict[str, object] = {}
 _REMOTE_PTRS: Dict[str, List[np.ndarray]] = {}
 
 
-def _remote_malloc_sink(name_id, sizes):
+def _remote_malloc_sink(name_id, dev, sizes):
+    """Service one remote-malloc record: bulk-allocate ``sizes`` from heap
+    ``name_id`` and RETURN the pointers (the v4 reply path carries them
+    back to the device; the host-side log keeps them too).  When the
+    registered heap is a :class:`ShardedHeap`, the record's ``dev``
+    selects the shard and the returned pointers are global ``(device,
+    offset)`` pointers."""
     name = _FMT_TABLE[int(name_id)]        # heap names intern like formats
     state = _REMOTE_HEAPS[name]
-    state, ptrs = allocator_for(state).malloc_many(
-        state, jnp.asarray(sizes, jnp.int32))
+    sizes = jnp.asarray(np.asarray(sizes), jnp.int32)
+    if isinstance(state, ShardedHeap):
+        d = int(dev)
+        if not 0 <= d < state.n_devices:
+            # loud — but fail only THIS record: raising here would abort
+            # the drain mid-replay and silently discard every sibling
+            # record in the same flush.  The requester sees all-FAIL
+            # pointers (a silent modulo wrap would instead hand it a
+            # valid-looking pointer on a shard it never asked for).
+            import warnings
+            warnings.warn(
+                f"remote malloc on heap {name!r}: device {d} out of range "
+                f"for a {state.n_devices}-shard heap — mesh size and "
+                "registered heap shard count disagree; returning FAIL "
+                "pointers for this record", RuntimeWarning, stacklevel=2)
+            out = np.full((sizes.shape[0],), -1, np.int32)
+            _REMOTE_PTRS.setdefault(name, []).append(out)
+            return out
+        # slice shard d, run the inner bulk path ONCE, and write the shard
+        # back — a (D, k) ShardedAllocator.malloc_many would vmap the
+        # allocator (and rebuild every shard's tables) D-wide per record
+        # on the drain hot path for one shard's worth of work
+        shard = jax.tree.map(lambda a: a[d], state.shards)
+        shard, local = allocator_for(shard).malloc_many(shard, sizes)
+        state = dataclasses.replace(
+            state, shards=jax.tree.map(
+                lambda full, upd: full.at[d].set(upd), state.shards, shard))
+        ptrs = ShardedHeap.global_ptr(d, local, state.span)
+    else:
+        state, ptrs = allocator_for(state).malloc_many(state, sizes)
     _REMOTE_HEAPS[name] = state
-    _REMOTE_PTRS.setdefault(name, []).append(np.asarray(ptrs))
+    out = np.asarray(ptrs, np.int32)
+    _REMOTE_PTRS.setdefault(name, []).append(out)
+    return out
 
 
 REGISTRY.register("libc.remote_malloc", _remote_malloc_sink)
@@ -411,19 +556,33 @@ def remote_heap_register(name: str, state) -> None:
     _REMOTE_HEAPS[name] = state
 
 
-def remote_malloc_enqueue(q: RpcQueue, name: str, sizes,
-                          where=None) -> RpcQueue:
-    """Enqueue ONE fire-and-forget record asking the host to bulk-allocate
-    ``sizes`` (an int array — it rides the payload arena) from the
-    registered heap ``name``.  The allocation happens at flush, in record
-    order; resulting pointers are retrievable host-side via
-    :func:`remote_malloc_results`."""
+def remote_malloc_enqueue(q: RpcQueue, name: str, sizes, *, device=0,
+                          where=None) -> Tuple[RpcQueue, jax.Array]:
+    """Enqueue ONE record asking the host to bulk-allocate ``sizes`` (an
+    int array — it rides the payload arena) from the registered heap
+    ``name``; returns ``(queue', ticket)``.  The allocation happens at
+    flush, in record order.
+
+    On a reply-carrying queue (``reply_capacity > 0``) the ticket's reply
+    is the vector of resulting pointers — read it on device after flush
+    with ``q.result(ticket, (k,), jnp.int32)`` (``k = sizes.size``; FAIL
+    pointers stay ``-1``).  Against a sharded host heap, ``device``
+    (scalar, may be traced — e.g. ``team_id()``) picks the shard and the
+    pointers come back in the global ``(device, offset)`` encoding that
+    ``find_obj``/``ArenaRef`` marshalling resolves.  On a reply-less queue
+    the record is fire-and-forget as before and the pointers are only
+    retrievable host-side via :func:`remote_malloc_results`.  Needs queue
+    ``width >= 3``."""
     if name not in _REMOTE_HEAPS:
         raise KeyError(f"no remote heap registered under {name!r}; call "
                        "remote_heap_register first")
     nid = _intern_fmt(name)
-    return q.enqueue("libc.remote_malloc", jnp.int32(nid),
-                     jnp.asarray(sizes, jnp.int32), where=where)
+    sizes = jnp.asarray(sizes, jnp.int32).reshape(-1)
+    returns = (jax.ShapeDtypeStruct((sizes.shape[0],), jnp.int32)
+               if q.reply_capacity else None)
+    return q.enqueue_ticketed("libc.remote_malloc", jnp.int32(nid),
+                              jnp.asarray(device, jnp.int32), sizes,
+                              returns=returns, where=where)
 
 
 def remote_malloc_results(name: str):

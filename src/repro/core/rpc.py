@@ -61,12 +61,12 @@ drains records AND arena to the host in ONE ordered ``io_callback``,
 replaying records (payloads reattached from their descriptors) in enqueue
 order (generalizing the buffered-``fprintf`` trick that ``core/libc.py``'s
 ``LogRing`` applies to log records, and the antidote to the paper's Fig. 7
-~975 µs per-call RPC cost).  Batched RPCs are fire-and-forget: the device
-has already executed past the enqueue, so record callees cannot return
-values to the device.  :func:`rpc_call` exposes the same path as
-``rpc_call(name, *args, batched=True, queue=q)`` — value args only (scalars
-or arrays; no write-back refs on a fire-and-forget transport), returning the
-updated queue.
+~975 µs per-call RPC cost).  The device has already executed past the
+enqueue when the callee runs, so write-back refs are rejected — but since
+v4 record callees CAN return values to the device: see the reply arena
+below.  :func:`rpc_call` exposes the same path as ``rpc_call(name, *args,
+batched=True, queue=q)`` — value args only (scalars or arrays), returning
+the updated queue (plus a ticket with ``returns=``).
 
 Overflow is loud and two-sided.  If more than ``capacity`` records are
 enqueued between flushes, the oldest are overwritten (their arena words are
@@ -80,6 +80,40 @@ arena words are written, no descriptor is stored, the head does not advance
 are counted on device and surfaced separately (``arena_drops`` /
 ``last_arena_drops`` in ``flush_stats()``).
 
+**Reply arena (v4): device-visible results for queued RPCs.**  The paper's
+RPC is bidirectional — the host executes the call and hands the result back
+to the device — but fire-and-forget records cannot return values.  A queue
+created with ``reply_capacity > 0`` closes the loop: ``flush`` becomes a
+two-phase epoch.  Phase one is unchanged (ONE ordered ``io_callback``
+drains records + payload arena and replays the callees); phase two is the
+callback's RETURN value — a flat i32 **reply buffer** (integer replies
+stored raw, float replies bitcast, mirroring the request arena) plus a
+per-slot ``(offset, length)`` reply table, scattered back into the queue's
+device-resident reply state.  Each enqueue is keyed by a **ticket** — its
+enqueue order within the epoch (``head`` at enqueue time; ``-1`` for
+records dropped at enqueue) — and ``enqueue_ticketed(...,
+returns=ShapeDtypeStruct)`` declares the expected reply (count + dtype
+stored in the record's ``rwant`` lane: ``+words`` integer, ``-words``
+float).  After flush, device code reads ``queue.result(ticket, shape,
+dtype)``: an O(1) dynamic slice of the reply buffer.  Tickets are GLOBAL
+sequence numbers (they never reset), and each flush stamps the reply
+table with its epoch's base — so a ticket only resolves against the flush
+that serviced it: a stale ticket held across a later flush, or a dropped
+ticket, reads zeros, never another record's bytes.  The one remaining
+alias is ring overwrite WITHIN an epoch: an overwritten record's ticket
+reads the surviving record in its slot (when the reply length matches) —
+the same caveat ring overwrite always had.
+A record whose declared reply does not fit the remaining reply arena is
+dropped WHOLE at drain — its callee is NOT run (an effectful callee must
+not consume input or reserve memory when its result can never reach the
+requester), the reader sees zeros, and the drop is counted in
+``flush_stats()['reply_drops']`` — the reply-side mirror of the request
+arena's atomic enqueue drop.
+``rpc_call(name, *args, batched=True, queue=q, returns=ShapeDtype)``
+exposes the path generically, returning ``(queue, ticket)`` — the
+blocking-at-flush result path that makes input-style libc (``fread``,
+``fgets``) and device-usable remote-malloc pointers possible.
+
 **Sharded transport** (paper §3.3 applied to the transport).  Under
 ``expand`` every mesh device is a team, and funnelling all teams' records
 through one logical queue would serialize the machine on a single ring.
@@ -89,7 +123,11 @@ partitioned by ``shard_map``); inside an expanded region each device
 enqueues into its own shard — payload copies included — with zero
 cross-device traffic, and ``flush`` gathers all shards and replays records
 in ``(flush-order, device, slot)`` order on the host — a deterministic
-total order, payloads reattached per shard.  ``core/libc.py``'s ``LogRing``
+total order, payloads reattached per shard.  The reply arena stacks the
+same way: one reply buffer + reply table PER DEVICE, filled in that same
+deterministic replay order, so ``q.local(d).result(ticket, ...)`` (or
+``q.result(d, ticket, ...)``) after the flush reads device ``d``'s
+replies regardless of how the drain interleaved the shards.  ``core/libc.py``'s ``LogRing``
 rides it unchanged (a sharded ring is a sharded queue of width-3 records).  Flush of
 a *traced* sharded queue works in single-program (vmapped logical devices)
 form; when the shards live on a real multi-device mesh, flush at the
@@ -191,9 +229,11 @@ class _Registry:
         self.batch_free: List[int] = []            # reusable callee id slots
         self.queue_drops = 0
         self.arena_drops = 0
+        self.reply_drops = 0
         self.flushes = 0
         self.last_flush_drops = 0
         self.last_flush_arena_drops = 0
+        self.last_flush_reply_drops = 0
         self._next_pad = 0                         # pad ids are never reused
 
     def register(self, name: str, fn: Callable):
@@ -276,12 +316,15 @@ class _Registry:
         with self.lock:
             self.queue_drops += n
 
-    def bump_flush(self, drops: int, arena_drops: int = 0):
+    def bump_flush(self, drops: int, arena_drops: int = 0,
+                   reply_drops: int = 0):
         with self.lock:
             self.flushes += 1
             self.last_flush_drops = drops
             self.arena_drops += arena_drops
             self.last_flush_arena_drops = arena_drops
+            self.reply_drops += reply_drops
+            self.last_flush_reply_drops = reply_drops
 
 
 REGISTRY = _Registry()
@@ -317,15 +360,20 @@ def queue_drops() -> int:
 
 def flush_stats() -> Dict[str, int]:
     """Queue-flush accounting: total flushes, records lost to ring overwrite
-    (``drops``) and to a full payload arena (``arena_drops``, counted at
-    enqueue time — the atomic-drop path), plus both counts for the most
-    recent flush alone (0 when nothing was lost)."""
+    (``drops``), to a full payload arena (``arena_drops``, counted at
+    enqueue time — the atomic-drop path), and result-bearing records lost
+    to a full REPLY arena (``reply_drops``, counted at drain time: the
+    reply could not fit, so the record's callee was NOT run and the
+    reader sees zeros — the drain-side atomic drop), plus each count for
+    the most recent flush alone (0 when nothing was lost)."""
     with REGISTRY.lock:
         return {"flushes": REGISTRY.flushes,
                 "drops": REGISTRY.queue_drops,
                 "last_drops": REGISTRY.last_flush_drops,
                 "arena_drops": REGISTRY.arena_drops,
-                "last_arena_drops": REGISTRY.last_flush_arena_drops}
+                "last_arena_drops": REGISTRY.last_flush_arena_drops,
+                "reply_drops": REGISTRY.reply_drops,
+                "last_reply_drops": REGISTRY.last_flush_reply_drops}
 
 
 def reset_rpc_stats():
@@ -338,9 +386,11 @@ def reset_rpc_stats():
                 p[k] = 0
         REGISTRY.queue_drops = 0
         REGISTRY.arena_drops = 0
+        REGISTRY.reply_drops = 0
         REGISTRY.flushes = 0
         REGISTRY.last_flush_drops = 0
         REGISTRY.last_flush_arena_drops = 0
+        REGISTRY.last_flush_reply_drops = 0
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +494,7 @@ def _marshal(args) -> Tuple[Tuple, List, List]:
 
 def rpc_call(name: str, *args, result_shape=None, ordered: bool = True,
              pure: bool = False, batched: bool = False, queue=None,
-             where=None):
+             where=None, returns=None):
     """Issue a blocking host RPC from device code (traceable).
 
     ``args`` may mix plain arrays/scalars (value args), :class:`Ref`, and
@@ -460,13 +510,22 @@ def rpc_call(name: str, *args, result_shape=None, ordered: bool = True,
     ``batched=True`` routes the call through the batched transport instead:
     the record (scalars in lanes, arrays in the payload arena) is enqueued
     on ``queue`` — a :class:`RpcQueue` — and the UPDATED QUEUE is returned.
-    Batched calls are fire-and-forget: no result reaches the device and no
-    write-back refs are allowed (pass value args only), so ``result_shape``
-    is ignored; the host sees the call when the queue flushes.  ``where``
-    (optional traced bool) makes the enqueue conditional.  This is the
-    paper-§3.5 path for array-carrying library calls — buffered ``fwrite``,
-    bulk remote mallocs whose size vectors ride the arena — that v2 forced
-    onto a per-call ordered callback.
+    By default batched calls are fire-and-forget: no result reaches the
+    device and no write-back refs are allowed (pass value args only), so
+    ``result_shape`` is ignored; the host sees the call when the queue
+    flushes.  ``where`` (optional traced bool) makes the enqueue
+    conditional.  This is the paper-§3.5 path for array-carrying library
+    calls — buffered ``fwrite``, bulk remote mallocs whose size vectors
+    ride the arena — that v2 forced onto a per-call ordered callback.
+
+    ``batched=True, returns=jax.ShapeDtypeStruct(...)`` is the v4
+    blocking-at-flush result path: the call returns ``(queue', ticket)``
+    instead, and after the queue flushes the host function's return value
+    is readable on device as ``queue.result(ticket, returns)`` — the reply
+    rode the flush's reply arena (requires a queue created with
+    ``reply_capacity > 0``).  ``returns`` is only meaningful with
+    ``batched=True`` (immediate RPCs already return results via
+    ``result_shape``).
     """
     if name not in REGISTRY.hosts:
         raise KeyError(f"no host function registered for RPC {name!r}")
@@ -483,10 +542,19 @@ def rpc_call(name: str, *args, result_shape=None, ordered: bool = True,
             if isinstance(a, (Ref, ArenaRef)):
                 raise ValueError(
                     f"batched RPC {name!r} arg {j}: Ref/ArenaRef arguments "
-                    "need a round-trip (write-back / runtime object "
-                    "lookup); the batched transport is fire-and-forget — "
-                    "pass value args (scalars or arrays) only")
+                    "need a synchronous round-trip (write-back / runtime "
+                    "object lookup) that the batched transport does not "
+                    "provide — pass value args (scalars or arrays) only; "
+                    "host RESULTS do come back: use returns= for a ticket "
+                    "readable via queue.result() after flush")
+        if returns is not None:
+            return queue.enqueue_ticketed(name, *args, returns=returns,
+                                          where=where)
         return queue.enqueue(name, *args, where=where)
+    if returns is not None:
+        raise ValueError(
+            "rpc_call(returns=...) is only meaningful with batched=True: "
+            "immediate RPCs return results directly via result_shape")
     if where is not None:
         raise ValueError(
             "rpc_call(where=...) is only meaningful with batched=True: an "
@@ -542,19 +610,32 @@ def _find_obj(state, ptr):
 # Batched transport: on-device RPC queue, drained by ONE ordered callback
 # ---------------------------------------------------------------------------
 
-def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, n,
-                  overrides, names, hosts, per_name_calls,
-                  per_name_bytes) -> int:
-    """Replay one queue shard's records in enqueue order; returns the number
-    of records that were overwritten before this flush could drain them.
+def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
+                  rwant, n, overrides, names, hosts, per_name_calls,
+                  per_name_bytes, reply=None) -> Tuple[int, int]:
+    """Replay one queue shard's records in enqueue order; returns ``(number
+    of records overwritten before this flush could drain them, number of
+    replies dropped because the reply arena was full)``.
 
     Scalar arguments come out of the int/float lanes; payload arguments
     (``pmask`` bit set) are reattached from the arena via their descriptor —
     offset in the int lane, length in ``plens``, dtype from the ``imask``
-    tag (set = int32 words, clear = float32 bitcast)."""
+    tag (set = int32 words, clear = float32 bitcast).
+
+    ``reply`` (a ``(rwords, roff, rlen)`` triple of preallocated numpy
+    arrays, or None on a reply-less drain) collects result-bearing records:
+    a record whose ``rwant`` lane is nonzero has its callee's return value
+    coerced to ``|rwant|`` words of the declared dtype (``+`` = int32, ``-``
+    = float32 bitcast; short results zero-padded, long ones truncated, a
+    None return reads as zeros) and appended at the reply watermark, with
+    the slot's ``(offset, length)`` recorded for the device-side
+    ``result()`` read.  A result-bearing record whose reply cannot fit is
+    dropped ATOMICALLY — callee not run, nothing written, counted."""
     cap = callee.shape[0]
     lo = max(0, n - cap)
     fbuf = pbuf.view(np.float32)
+    rhead = 0
+    rdrops = 0
     for j in range(lo, n):
         k = j % cap
         cid = int(callee[k])
@@ -575,14 +656,46 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, n,
                 args.append(int(ivals[k, t]))
             else:
                 args.append(float(fvals[k, t]))
-        fn(*args)
+        want = int(rwant[k]) if reply is not None else 0
+        if want != 0 and rhead + abs(want) > reply[0].shape[0]:
+            # reply-arena overflow is checked BEFORE the callee runs, so
+            # the drop is atomic like a request-arena drop: the record is
+            # NOT executed (an effectful callee — fread consuming stream
+            # bytes, remote malloc reserving heap — must not run when its
+            # result can never reach the requester) and the reader sees
+            # zeros with ok=False
+            rdrops += 1
+            continue
+        out = fn(*args)
+        if want != 0:
+            rwords, roff, rlen = reply
+            nw = abs(want)
+            dt = np.int32 if want > 0 else np.float32
+            try:
+                arr = (np.zeros((nw,), dt) if out is None
+                       else np.asarray(out).reshape(-1).astype(dt))
+            except (TypeError, ValueError):
+                # a non-numeric return must fail only THIS record's reply,
+                # not abort the drain mid-replay and discard its siblings
+                warnings.warn(
+                    f"RPC reply from {name!r} ({type(out).__name__}) is "
+                    f"not coercible to {dt.__name__}; its reader sees "
+                    "zeros", RuntimeWarning, stacklevel=2)
+                arr = np.zeros((nw,), dt)
+            if arr.size < nw:
+                arr = np.pad(arr, (0, nw - arr.size))
+            rwords[rhead:rhead + nw] = arr[:nw].view(np.int32)
+            roff[k] = rhead
+            rlen[k] = nw
+            rhead += nw
+            nbytes += 4 * nw
         per_name_calls[name] = per_name_calls.get(name, 0) + 1
         per_name_bytes[name] = per_name_bytes.get(name, 0) + nbytes
-    return lo
+    return lo, rdrops
 
 
 def _finish_flush(drops: int, arena_drops: int, per_name_calls,
-                  per_name_bytes):
+                  per_name_bytes, reply_drops: int = 0):
     if drops:
         REGISTRY.bump_drops(drops)
         warnings.warn(
@@ -596,17 +709,43 @@ def _finish_flush(drops: int, arena_drops: int, per_name_calls,
             "the payload arena was full (records dropped atomically — no "
             "partial payloads).  Flush more often or enlarge "
             "payload_capacity.", RuntimeWarning, stacklevel=2)
-    REGISTRY.bump_flush(drops, arena_drops)
+    if reply_drops:
+        warnings.warn(
+            f"RpcQueue flush dropped {reply_drops} result-bearing "
+            "record(s): the reply arena was full (records dropped "
+            "atomically — callee NOT run, readers see zeros).  Flush more "
+            "often or enlarge reply_capacity.", RuntimeWarning,
+            stacklevel=2)
+    REGISTRY.bump_flush(drops, arena_drops, reply_drops)
     for name, calls in per_name_calls.items():
         REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
 
 
+def _bind_drain(fn, handlers):
+    """Close ``handlers`` over a drain callable — or return the stable
+    module-level callable untouched when there are none (the jit cache and
+    callback registry key on callable identity, so the no-handler path
+    must always hand ``io_callback`` the same object)."""
+    if not handlers:
+        return fn
+    bound = dict(handlers)
+
+    def drain(*flat):
+        return fn(*flat, overrides=bound)
+
+    return drain
+
+
 def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
                  head, phead, adrops, overrides=None):
-    """Host side of :meth:`RpcQueue.flush`: replay queued records in enqueue
-    order, dispatching each to its registered callee (resolved at drain
-    time), unless ``overrides`` maps the callee's name to a handler captured
-    by this particular flush.
+    """Host side of :meth:`RpcQueue.flush` (reply-less queues): replay
+    queued records in enqueue order, dispatching each to its registered
+    callee (resolved at drain time), unless ``overrides`` maps the callee's
+    name to a handler captured by this particular flush.
+
+    Keeps the v3 operand tuple — no ``rwant`` lane: a reply-less flush
+    never reads it, so shipping it would be a dead (capacity,)-word
+    device-to-host transfer on every fire-and-forget flush.
 
     A module-level function, so every default flush of every queue hands
     ``io_callback`` the same stable callable."""
@@ -621,19 +760,53 @@ def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     with REGISTRY.lock:                    # one snapshot, not per record
         names = list(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
-    drops = _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens,
-                          pbuf, n, overrides, names, hosts, per_name_calls,
-                          per_name_bytes)
+    drops, _ = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
+                             plens, pbuf, None, n, overrides, names, hosts,
+                             per_name_calls, per_name_bytes)
     _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes)
     return np.int32(n)
 
 
+def _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals, plens,
+                         pbuf, rwant, head, phead, adrops, rc,
+                         overrides=None):
+    """Host side of the TWO-PHASE flush (``reply_capacity > 0`` queues):
+    phase one replays records exactly like :func:`_drain_queue`; phase two
+    returns the reply triple ``(rbuf, roff, rlen)`` the device scatters
+    into its reply state — the flat i32 reply buffer plus the per-slot
+    offset/length table keyed by ticket slot.  ``rc`` (the static reply
+    capacity) travels as a scalar operand so this stays ONE stable
+    module-level callable for every reply-carrying queue."""
+    callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant = (
+        np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf, rwant))
+    n = int(head)
+    rc = int(rc)
+    cap = callee.shape[0]
+    rwords = np.zeros((rc,), np.int32)
+    roff = np.zeros((cap,), np.int32)
+    rlen = np.zeros((cap,), np.int32)
+    per_name_calls: Dict[str, int] = {}
+    per_name_bytes: Dict[str, int] = {}
+    with REGISTRY.lock:
+        names = list(REGISTRY.batch_names)
+        hosts = dict(REGISTRY.hosts)
+    drops, rdrops = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
+                                  plens, pbuf, rwant, n, overrides, names,
+                                  hosts, per_name_calls, per_name_bytes,
+                                  reply=(rwords, roff, rlen))
+    _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes,
+                  reply_drops=rdrops)
+    return rwords, roff, rlen
+
+
 def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
                          pbuf, head, phead, adrops, overrides=None):
-    """Host side of :meth:`ShardedRpcQueue.flush`: every array carries a
-    leading device axis; records replay in ``(device, slot)`` order — device
-    0's records first (oldest surviving to newest), then device 1's, and so
-    on — a deterministic total order over the whole mesh's records.  Each
+    """Host side of :meth:`ShardedRpcQueue.flush` (reply-less; v3 operand
+    tuple, no dead ``rwant`` transfer): every array carries a leading
+    device axis; records replay in ``(device, slot)`` order — device 0's
+    records first (oldest surviving to newest), then device 1's, and so on
+    — a deterministic total order over the whole mesh's records.  Each
     shard's payloads resolve against ITS arena slice."""
     callee, nargs, imask, pmask, ivals, fvals, plens, pbuf = (
         np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
@@ -650,12 +823,53 @@ def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
     for d in range(callee.shape[0]):
         n = int(head[d])
         total += n
-        drops += _replay_shard(callee[d], nargs[d], imask[d], pmask[d],
-                               ivals[d], fvals[d], plens[d], pbuf[d], n,
-                               overrides, names, hosts, per_name_calls,
-                               per_name_bytes)
+        sh_drops, _ = _replay_shard(callee[d], nargs[d], imask[d], pmask[d],
+                                    ivals[d], fvals[d], plens[d], pbuf[d],
+                                    None, n, overrides, names, hosts,
+                                    per_name_calls, per_name_bytes)
+        drops += sh_drops
     _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes)
     return np.int32(total)
+
+
+def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
+                                 plens, pbuf, rwant, head, phead, adrops, rc,
+                                 overrides=None):
+    """Sharded two-phase flush: replay in ``(device, slot)`` order AND
+    return per-device reply triples stacked along the device axis —
+    ``(rbuf (D, rc), roff (D, cap), rlen (D, cap))``.  Each shard's replies
+    pack into ITS reply buffer in the deterministic replay order, so
+    ``q.local(d).result(ticket, ...)`` reads device ``d``'s results no
+    matter how the drain interleaved the shards."""
+    callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant = (
+        np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf, rwant))
+    head = np.asarray(head)
+    adrops = np.asarray(adrops)
+    rc = int(rc)
+    D, cap = callee.shape[0], callee.shape[1]
+    rwords = np.zeros((D, rc), np.int32)
+    roff = np.zeros((D, cap), np.int32)
+    rlen = np.zeros((D, cap), np.int32)
+    per_name_calls: Dict[str, int] = {}
+    per_name_bytes: Dict[str, int] = {}
+    with REGISTRY.lock:
+        names = list(REGISTRY.batch_names)
+        hosts = dict(REGISTRY.hosts)
+    drops = 0
+    rdrops = 0
+    for d in range(D):
+        n = int(head[d])
+        sh_drops, sh_rdrops = _replay_shard(
+            callee[d], nargs[d], imask[d], pmask[d], ivals[d], fvals[d],
+            plens[d], pbuf[d], rwant[d], n, overrides, names, hosts,
+            per_name_calls, per_name_bytes,
+            reply=(rwords[d], roff[d], rlen[d]))
+        drops += sh_drops
+        rdrops += sh_rdrops
+    _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes,
+                  reply_drops=rdrops)
+    return rwords, roff, rlen
 
 
 def _payload_words(a: jax.Array) -> Tuple[jax.Array, bool]:
@@ -695,6 +909,19 @@ class RpcQueue:
     payloads, the record is dropped ATOMICALLY at enqueue: nothing is
     written, the head does not advance, and the drop is counted on device
     (``adrops``) and surfaced via ``flush_stats()['arena_drops']``.
+
+    **Reply state (v4).**  A queue created with ``reply_capacity > 0``
+    carries a device-resident reply table: ``rwant`` declares each slot's
+    expected reply (``+words`` int32, ``-words`` float32-bitcast, 0 none —
+    set by ``enqueue_ticketed(returns=...)``), and after each flush
+    ``rbuf``/``roff``/``rlen`` hold the host's reply words and the per-slot
+    scatter of where each record's reply landed.  ``result(ticket, shape,
+    dtype)`` reads them back.  Tickets are GLOBAL: ``base`` counts records
+    across all epochs and never resets, each enqueue's ticket is its
+    global sequence number, and flush stamps the reply table with the
+    serviced epoch's ``(rbase, rcount)`` window — a ticket outside the
+    window (stale, or from a dropped enqueue) reads zeros with
+    ``ok=False``, it can never alias a later epoch's bytes.
     """
     callee: jax.Array    # (N,) int32 — batch callee id per record
     nargs: jax.Array     # (N,) int32 — args used in this record
@@ -707,11 +934,22 @@ class RpcQueue:
     head: jax.Array      # () int32 — total records ever enqueued
     phead: jax.Array     # () int32 — arena words reserved since last flush
     adrops: jax.Array    # () int32 — records dropped: arena full
+    rwant: jax.Array     # (N,) int32 — expected reply words (+i32/-f32/0)
+    rbuf: jax.Array      # (RC,) int32 — reply arena from the LAST flush
+    roff: jax.Array      # (N,) int32 — reply offset per slot (last flush)
+    rlen: jax.Array      # (N,) int32 — reply words per slot (0 = none)
+    #                      (rwant/roff/rlen are sized (0,) when RC == 0)
+    base: jax.Array      # () int32 — global seq no. of this epoch's first
+    #                       record (tickets = base + within-epoch order)
+    rbase: jax.Array     # () int32 — base of the epoch the reply table
+    #                       corresponds to (stamped at flush)
+    rcount: jax.Array    # () int32 — records serviced by that flush
 
     def tree_flatten(self):
         return ((self.callee, self.nargs, self.imask, self.pmask, self.ivals,
                  self.fvals, self.plens, self.pbuf, self.head, self.phead,
-                 self.adrops), None)
+                 self.adrops, self.rwant, self.rbuf, self.roff, self.rlen,
+                 self.base, self.rbase, self.rcount), None)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -729,16 +967,26 @@ class RpcQueue:
     def payload_capacity(self) -> int:
         return self.pbuf.shape[-1]
 
+    @property
+    def reply_capacity(self) -> int:
+        return self.rbuf.shape[-1]
+
     @staticmethod
     def create(capacity: int = 1024, width: int = 4,
-               payload_capacity: int = 1024) -> "RpcQueue":
+               payload_capacity: int = 1024,
+               reply_capacity: int = 0) -> "RpcQueue":
         """``payload_capacity`` is the arena size in 4-byte words shared by
         every payload between two flushes (0 = scalar-only queue: array
-        args are rejected at trace time)."""
+        args are rejected at trace time).  ``reply_capacity`` is the REPLY
+        arena size in words (0 = fire-and-forget queue: ``returns=`` is
+        rejected at trace time, ``flush`` keeps the single-output callback
+        of the v3 transport, and the per-slot reply state is sized (0,) so
+        the v3 enqueue/flush hot paths carry no dead weight)."""
         if not 0 < width <= 31:
             raise ValueError(
                 f"width must be in [1, 31] to fit the int32 interleave "
                 f"mask; got {width}")
+        rslots = capacity if reply_capacity else 0
         return RpcQueue(
             jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity,), jnp.int32),
@@ -750,26 +998,84 @@ class RpcQueue:
             jnp.zeros((payload_capacity,), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((rslots,), jnp.int32),
+            jnp.zeros((reply_capacity,), jnp.int32),
+            jnp.zeros((rslots,), jnp.int32),
+            jnp.zeros((rslots,), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32))
 
     def enqueue(self, name: str, *args, where=None) -> "RpcQueue":
-        """Queue one RPC to host function ``name`` (pure device-side append).
+        """Queue one fire-and-forget RPC to host function ``name`` (pure
+        device-side append); see :meth:`enqueue_ticketed` for the full
+        semantics — this is the same append with the ticket discarded."""
+        return self._enqueue(name, args, None, where)[0]
+
+    def enqueue_ticketed(self, name: str, *args, returns=None, where=None
+                         ) -> Tuple["RpcQueue", jax.Array]:
+        """Queue one RPC and return ``(queue', ticket)``.
 
         ``args`` are scalars (ints/floats/bools, traced or concrete — which
         lane each lands in is decided by its dtype at trace time) and/or
         ARRAYS (any shape; flattened, copied into the payload arena, and
         delivered to the host as a 1-D numpy array of int32 or float32).
 
+        ``returns`` (optional ``jax.ShapeDtypeStruct``, 32-bit-or-narrower
+        dtype) declares that the callee's return value should come back
+        through the reply arena: after the next flush,
+        ``queue.result(ticket, returns)`` reads it.  Requires
+        ``reply_capacity > 0``.  The ticket is the record's GLOBAL
+        sequence number (int32, monotone across epochs; ``-1`` when the
+        record was dropped — ``where=False`` or a full payload arena), so
+        a ticket can only ever resolve against the flush that serviced
+        its epoch.
+
         ``where`` (optional traced bool) makes the append conditional with
         O(record + payload) cost: the target ROW is selected against its old
         contents, payload slices read-modify-write their own reservation,
         and the heads only advance when true — no whole-queue select."""
+        return self._enqueue(name, args, returns, where)
+
+    def _enqueue(self, name: str, args, returns, where
+                 ) -> Tuple["RpcQueue", jax.Array]:
         cid = REGISTRY.batch_callee_id(name)
         cap, w, pc = self.capacity, self.width, self.payload_capacity
         if len(args) > w:
             raise ValueError(
                 f"RPC record for {name!r} has {len(args)} args; queue "
                 f"width is {w}")
+        rw = 0
+        if returns is not None:
+            rc = self.reply_capacity
+            rshape = tuple(returns.shape)
+            rdtype = jnp.dtype(returns.dtype)
+            nw = int(np.prod(rshape)) if rshape else 1
+            if rdtype.itemsize > 4:
+                raise TypeError(
+                    f"RPC record for {name!r}: reply dtype {rdtype} is "
+                    "wider than the 32-bit reply arena words (a 64-bit "
+                    "reply would be silently truncated); use int32/float32")
+            if rc == 0:
+                raise ValueError(
+                    f"RPC record for {name!r} declares returns= but the "
+                    "queue has no reply arena; create the queue with "
+                    "reply_capacity > 0")
+            if nw > rc:
+                raise ValueError(
+                    f"RPC record for {name!r} expects {nw} reply words but "
+                    f"the reply arena only holds {rc}; enlarge "
+                    "reply_capacity")
+            if jnp.issubdtype(rdtype, jnp.floating):
+                rw = -nw
+            elif jnp.issubdtype(rdtype, jnp.integer) or rdtype == jnp.bool_:
+                rw = nw
+            else:
+                raise TypeError(
+                    f"RPC record for {name!r}: unsupported reply dtype "
+                    f"{rdtype} (int, bool and float replies ride the i32 "
+                    "reply arena)")
         i = self.head % cap
         iv = jnp.zeros((w,), jnp.int32)
         fv = jnp.zeros((w,), jnp.float32)
@@ -828,29 +1134,40 @@ class RpcQueue:
         na_v = jnp.int32(len(args))
         mask_v = jnp.int32(mask)
         pm_v = jnp.int32(pm)
+        rw_v = jnp.int32(rw)
         if where is None and not npay:
             step = 1
+            ticket = self.base + self.head
         else:
             cid_v = jnp.where(keep, cid_v, self.callee[i])
             na_v = jnp.where(keep, na_v, self.nargs[i])
             mask_v = jnp.where(keep, mask_v, self.imask[i])
             pm_v = jnp.where(keep, pm_v, self.pmask[i])
+            if self.rwant.shape[0]:
+                rw_v = jnp.where(keep, rw_v, self.rwant[i])
             iv = jnp.where(keep, iv, self.ivals[i])
             fv = jnp.where(keep, fv, self.fvals[i])
             pl = jnp.where(keep, pl, self.plens[i])
             step = keep.astype(jnp.int32)
-        return RpcQueue(
-            self.callee.at[i].set(cid_v),
-            self.nargs.at[i].set(na_v),
-            self.imask.at[i].set(mask_v),
-            self.pmask.at[i].set(pm_v),
-            self.ivals.at[i].set(iv),
-            self.fvals.at[i].set(fv),
-            self.plens.at[i].set(pl),
-            pbuf,
-            self.head + step,
-            self.phead + (jnp.int32(npay) * step if npay else 0),
-            self.adrops + dropped.astype(jnp.int32) if npay else self.adrops)
+            ticket = jnp.where(keep, self.base + self.head, jnp.int32(-1))
+        return dataclasses.replace(
+            self,
+            callee=self.callee.at[i].set(cid_v),
+            nargs=self.nargs.at[i].set(na_v),
+            imask=self.imask.at[i].set(mask_v),
+            pmask=self.pmask.at[i].set(pm_v),
+            ivals=self.ivals.at[i].set(iv),
+            fvals=self.fvals.at[i].set(fv),
+            plens=self.plens.at[i].set(pl),
+            pbuf=pbuf,
+            head=self.head + step,
+            phead=self.phead + (jnp.int32(npay) * step if npay else 0),
+            adrops=(self.adrops + dropped.astype(jnp.int32) if npay
+                    else self.adrops),
+            # reply-less queues carry (0,) reply state: no dead scatter on
+            # the v3 enqueue hot path
+            rwant=(self.rwant.at[i].set(rw_v) if self.rwant.shape[0]
+                   else self.rwant)), ticket
 
     def flush(self, handlers: Optional[Dict[str, Callable]] = None
               ) -> "RpcQueue":
@@ -858,24 +1175,156 @@ class RpcQueue:
         ordered RPC; returns the emptied queue.  Safe inside jit (ordered
         effect, never elided).
 
+        On a reply-carrying queue (``reply_capacity > 0``) the flush is the
+        TWO-PHASE epoch: the same single callback also returns the reply
+        buffer + per-ticket reply table, which land in the returned queue's
+        ``rbuf``/``roff``/``rlen`` — read them with :meth:`result`.  The
+        returned queue therefore both starts the next epoch (heads zeroed)
+        and carries the last epoch's results: thread it onward (including
+        through ``lax.while_loop`` carries — flushing mid-loop and reading
+        the reply on a later step is supported).
+
         ``handlers`` maps callee names to per-flush handlers, CAPTURED into
         this flush's compiled program (like v1's sink closures) — records
         for those names bypass the registry, so two compiled programs can
         drain same-named records to different handlers.  Without it, the
-        drain dispatches through the registry via one stable callable."""
-        if handlers:
-            bound = dict(handlers)
+        drain dispatches through the registry via one stable callable.
 
-            def drain(*flat):
-                return _drain_queue(*flat, overrides=bound)
-        else:
-            drain = _drain_queue
-        io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                    self.callee, self.nargs, self.imask, self.pmask,
-                    self.ivals, self.fvals, self.plens, self.pbuf,
-                    self.head, self.phead, self.adrops, ordered=True)
+        NOT callable inside a ``shard_map``-partitioned region: XLA aborts
+        (fatally, a C++ CHECK) lowering the drain callback inside the
+        partitioned program — flush at the program boundary instead
+        (``device_run(mesh=)`` does).  Regions entered through this
+        package (``expand(...)``, ``device_run(mesh=)``) are guarded here
+        so the failure is a Python error, not a process abort; a DIRECT
+        ``jax.shard_map`` of user code bypasses the guard and still hits
+        the XLA abort."""
+        records = (self.callee, self.nargs, self.imask, self.pmask,
+                   self.ivals, self.fvals, self.plens, self.pbuf)
+        heads = (self.head, self.phead, self.adrops)
+        if any(isinstance(x, jax.core.Tracer) for x in records + heads):
+            # lazy: rpc is imported by expand's siblings at package init
+            from repro.core.expand import _ENV as _team_env_state
+            if _team_env_state.axes:
+                raise RuntimeError(
+                    "RpcQueue.flush() inside a shard_map-expanded region: "
+                    "XLA cannot lower the drain callback inside the "
+                    "partitioned program (fatal CHECK abort).  Enqueue in "
+                    "the region and flush at the program boundary — "
+                    "device_run(mesh=) and ShardedRpcQueue.flush on "
+                    "concrete shards do.")
         z = jnp.zeros((), jnp.int32)
-        return dataclasses.replace(self, head=z, phead=z, adrops=z)
+        rc = self.reply_capacity
+        if rc:
+            cap = self.capacity
+            shapes = (jax.ShapeDtypeStruct((rc,), jnp.int32),
+                      jax.ShapeDtypeStruct((cap,), jnp.int32),
+                      jax.ShapeDtypeStruct((cap,), jnp.int32))
+            rbuf, roff, rlen = io_callback(
+                _bind_drain(_drain_queue_replies, handlers), shapes,
+                *records, self.rwant, *heads, jnp.int32(rc), ordered=True)
+            return dataclasses.replace(self, head=z, phead=z, adrops=z,
+                                       rbuf=rbuf, roff=roff, rlen=rlen,
+                                       base=self.base + self.head,
+                                       rbase=self.base, rcount=self.head)
+        io_callback(_bind_drain(_drain_queue, handlers),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    *records, *heads, ordered=True)
+        return dataclasses.replace(self, head=z, phead=z, adrops=z,
+                                   base=self.base + self.head)
+
+    def result(self, ticket, shape=(), dtype=None) -> jax.Array:
+        """Read ticket ``ticket``'s reply from the LAST flush.
+
+        ``shape``/``dtype`` must match the ``returns=`` declared at
+        enqueue (``shape`` may be a ``jax.ShapeDtypeStruct``, in which case
+        ``dtype`` is taken from it).  Returns the reply reshaped to
+        ``shape``; a missing reply — dropped record (ticket ``-1``), reply
+        arena overflow, stale ticket from an earlier epoch, or a length
+        mismatch — reads as zeros.  Use :meth:`result_ok` for the validity
+        mask.  O(1): one dynamic slice of the reply buffer."""
+        return self.result_ok(ticket, shape, dtype)[0]
+
+    def result_ok(self, ticket, shape=(), dtype=None
+                  ) -> Tuple[jax.Array, jax.Array]:
+        """:meth:`result` plus its validity mask: ``(value, ok)`` where
+        ``ok`` is a traced bool — True iff the ticket's slot holds a reply
+        of exactly the expected length from the last flush."""
+        shape, dtype, nw = self._reply_spec(shape, dtype)
+        rc = self.reply_capacity
+        t = jnp.asarray(ticket, jnp.int32)
+        # global ticket -> this reply table's epoch window: a ticket from
+        # any OTHER epoch (stale or future) falls outside [rbase, rbase +
+        # rcount) and reads zeros — it can never alias another epoch's
+        # bytes.  Within the window, slot aliasing only happens under ring
+        # overwrite (the documented caveat).
+        local = t - self.rbase
+        slot = jnp.where(local >= 0, local, 0) % self.capacity
+        ok = (t >= 0) & (local >= 0) & (local < self.rcount) & \
+            (self.rlen[slot] == nw)
+        off = jnp.clip(self.roff[slot], 0, rc - nw)
+        words = lax.dynamic_slice(self.rbuf, (off,), (nw,))
+        if jnp.issubdtype(dtype, jnp.floating):
+            vals = lax.bitcast_convert_type(words, jnp.float32).astype(dtype)
+        else:
+            vals = words.astype(dtype)
+        vals = jnp.where(ok, vals, jnp.zeros_like(vals))
+        return vals.reshape(shape), ok
+
+    def _reply_spec(self, shape, dtype):
+        """Normalize a reply read spec to ``(shape, dtype, nwords)`` with
+        the arena-fit and 32-bit-width checks — the ONE place the
+        ticket-read contract is validated (``result_ok`` and
+        ``results_host`` both resolve through it)."""
+        if hasattr(shape, "shape") and hasattr(shape, "dtype"):
+            dtype = shape.dtype
+            shape = tuple(shape.shape)
+        shape = tuple(shape)
+        dtype = jnp.dtype(dtype if dtype is not None else jnp.int32)
+        nw = int(np.prod(shape)) if shape else 1
+        rc = self.reply_capacity
+        if rc == 0:
+            raise ValueError(
+                "result() on a queue with no reply arena; create the queue "
+                "with reply_capacity > 0 and enqueue with returns=")
+        if nw > rc:
+            raise ValueError(
+                f"result() reads {nw} words but the reply arena only holds "
+                f"{rc}")
+        if dtype.itemsize > 4:
+            raise TypeError(
+                f"result() dtype {dtype} is wider than the 32-bit reply "
+                "arena words; use int32/float32")
+        return shape, dtype, nw
+
+    def results_host(self, tickets, shape=(), dtype=None):
+        """Host-side batch read: ``[(numpy value, ok), ...]`` for many
+        tickets with ONE device->host pull of the reply table.
+
+        For concrete (post-flush, outside-jit) queues on driver/serving
+        hot paths, where per-ticket :meth:`result` calls would each pay an
+        eager program dispatch + transfer.  Same semantics as
+        :meth:`result_ok`, ticket for ticket."""
+        shape, dtype, nw = self._reply_spec(shape, dtype)
+        rbuf = np.asarray(self.rbuf)
+        roff = np.asarray(self.roff)
+        rlen = np.asarray(self.rlen)
+        rbase, rcount = int(self.rbase), int(self.rcount)
+        np_dtype = np.dtype(dtype.name)
+        out = []
+        for t in tickets:
+            t = int(t)
+            local = t - rbase
+            slot = local % self.capacity if local >= 0 else 0
+            ok = t >= 0 and 0 <= local < rcount and int(rlen[slot]) == nw
+            if ok:
+                words = rbuf[int(roff[slot]):int(roff[slot]) + nw]
+                vals = (words.view(np.float32).astype(np_dtype)
+                        if np.issubdtype(np_dtype, np.floating)
+                        else words.astype(np_dtype))
+            else:
+                vals = np.zeros((nw,), np_dtype)
+            out.append((vals.reshape(shape), ok))
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -930,10 +1379,16 @@ class ShardedRpcQueue:
     def payload_capacity(self) -> int:
         return self.q.pbuf.shape[-1]
 
+    @property
+    def reply_capacity(self) -> int:
+        return self.q.rbuf.shape[-1]
+
     @staticmethod
     def create(n_devices: int, capacity: int = 1024, width: int = 4,
-               payload_capacity: int = 1024) -> "ShardedRpcQueue":
-        q = RpcQueue.create(capacity, width, payload_capacity)
+               payload_capacity: int = 1024,
+               reply_capacity: int = 0) -> "ShardedRpcQueue":
+        q = RpcQueue.create(capacity, width, payload_capacity,
+                            reply_capacity)
         return ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
 
@@ -959,29 +1414,49 @@ class ShardedRpcQueue:
               ) -> "ShardedRpcQueue":
         """Drain every shard (records + per-shard payload arenas) to the
         host; records replay in ``(device, slot)`` order.  Returns the
-        emptied sharded queue."""
-        operands = (self.q.callee, self.q.nargs, self.q.imask, self.q.pmask,
-                    self.q.ivals, self.q.fvals, self.q.plens, self.q.pbuf,
-                    self.q.head, self.q.phead, self.q.adrops)
-        if any(isinstance(x, jax.core.Tracer) for x in operands):
-            if handlers:
-                bound = dict(handlers)
-
-                def drain(*flat):
-                    return _drain_queue_sharded(*flat, overrides=bound)
+        emptied sharded queue — on a reply-carrying queue, with each
+        device's reply buffer/table stacked along the device axis (read
+        them with :meth:`result` or ``local(d).result``)."""
+        records = (self.q.callee, self.q.nargs, self.q.imask, self.q.pmask,
+                   self.q.ivals, self.q.fvals, self.q.plens, self.q.pbuf)
+        heads = (self.q.head, self.q.phead, self.q.adrops)
+        rc = self.reply_capacity
+        D, cap = self.n_devices, self.capacity
+        z = jnp.zeros((D,), jnp.int32)
+        traced = any(isinstance(x, jax.core.Tracer) for x in records + heads)
+        if rc:
+            drain = _bind_drain(_drain_queue_sharded_replies, handlers)
+            operands = records + (self.q.rwant,) + heads
+            if traced:
+                shapes = (jax.ShapeDtypeStruct((D, rc), jnp.int32),
+                          jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                          jax.ShapeDtypeStruct((D, cap), jnp.int32))
+                rbuf, roff, rlen = io_callback(drain, shapes, *operands,
+                                               jnp.int32(rc), ordered=True)
             else:
-                drain = _drain_queue_sharded
+                rbuf, roff, rlen = (jnp.asarray(a) for a in drain(
+                    *operands, np.int32(rc)))
+            return dataclasses.replace(self, q=dataclasses.replace(
+                self.q, head=z, phead=z, adrops=z,
+                rbuf=rbuf, roff=roff, rlen=rlen,
+                base=self.q.base + self.q.head,
+                rbase=self.q.base, rcount=self.q.head))
+        drain = _bind_drain(_drain_queue_sharded, handlers)
+        if traced:
             io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                        *operands, ordered=True)
+                        *records, *heads, ordered=True)
         else:
             # concrete shards (program boundary): drain directly — this also
             # works when the shards live on a real multi-device mesh
-            _drain_queue_sharded(*operands,
-                                 overrides=dict(handlers) if handlers
-                                 else None)
-        z = jnp.zeros((self.n_devices,), jnp.int32)
+            drain(*records, *heads)
         return dataclasses.replace(
-            self, q=dataclasses.replace(self.q, head=z, phead=z, adrops=z))
+            self, q=dataclasses.replace(self.q, head=z, phead=z, adrops=z,
+                                        base=self.q.base + self.q.head))
+
+    def result(self, dev, ticket, shape=(), dtype=None) -> jax.Array:
+        """Device ``dev``'s reply for ``ticket`` from the last flush (the
+        per-shard analogue of :meth:`RpcQueue.result`)."""
+        return self.local(dev).result(ticket, shape, dtype)
 
 
 # ---------------------------------------------------------------------------

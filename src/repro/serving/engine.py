@@ -16,6 +16,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
@@ -132,7 +133,16 @@ class ServingEngine:
         the batched payload transport: the page ids of all requests retired
         in a tick travel in one queue flush, not one RPC per request (the
         host-side page-spill bookkeeping path — eviction logs, tiered KV
-        stores)."""
+        stores).  The flush is ACKNOWLEDGED through the v4 reply arena:
+        each spill record carries a ticket whose reply is the sink's
+        return value (or, when the sink returns None, the number of pages
+        it was handed); acks land in ``self.spill_acks[request_id]`` after
+        the tick — ``None`` when the ack was LOST (reply-arena overflow,
+        in which case the sink was never invoked for that record), which
+        is therefore distinguishable from a sink that legitimately
+        returned 0.  Acks accumulate until the consumer
+        collects them with :meth:`drain_spill_acks` (one entry per retired
+        request — drain periodically in long-running processes)."""
         self.model = model
         self.cfg = model.cfg
         assert self.cfg.family in ("dense", "moe", "vlm"), \
@@ -145,11 +155,13 @@ class ServingEngine:
         self.eos_id = eos_id
         self.spill_sink = spill_sink
         self.spill_q: Optional[RpcQueue] = None
+        self.spill_acks: Dict[int, Optional[int]] = {}
         if spill_sink is not None:
             maxp = (max_len + page_size - 1) // page_size
             self.spill_q = RpcQueue.create(
                 capacity=max(2 * batch_slots, 8), width=3,
-                payload_capacity=max(batch_slots * maxp, 8))
+                payload_capacity=max(batch_slots * maxp, 8),
+                reply_capacity=max(2 * batch_slots, 8))
         self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, List[int], int]] = []
         self.finished: Dict[int, List[int]] = {}
@@ -217,17 +229,43 @@ class ServingEngine:
         if done_slots:
             if self.spill_q is not None:
                 # page-spill: every retiring slot's page ids ride the
-                # payload arena; ONE flush delivers the whole tick
+                # payload arena; ONE flush delivers the whole tick and its
+                # replies ack every spill (sink return, or page count)
+                sink = self.spill_sink
+
+                def handler(rid, n_tokens, pages):
+                    # sinks written against the pre-ack contract may return
+                    # anything (or nothing): a None ack defaults to the
+                    # page count; other returns pass through untouched —
+                    # the drain's reply coercion handles shape/dtype
+                    out = sink(rid, n_tokens, pages)
+                    return np.int32(len(pages)) if out is None else out
+
+                tickets = []
                 for i, rid in zip(done_slots, done_rids):
-                    self.spill_q = self.spill_q.enqueue(
+                    self.spill_q, t = self.spill_q.enqueue_ticketed(
                         _SPILL_RPC, jnp.int32(rid), self.kv.lengths[i],
-                        kvcache.live_pages(self.kv, i))
+                        kvcache.live_pages(self.kv, i),
+                        returns=jax.ShapeDtypeStruct((), jnp.int32))
+                    tickets.append((rid, t))
                 self.spill_q = self.spill_q.flush(
-                    handlers={_SPILL_RPC: self.spill_sink})
+                    handlers={_SPILL_RPC: handler})
+                acks = self.spill_q.results_host([t for _, t in tickets])
+                for (rid, _), (val, ok) in zip(tickets, acks):
+                    # None = reply lost (arena overflow) — distinct from a
+                    # sink that acknowledged with 0
+                    self.spill_acks[rid] = int(val) if ok else None
             # every retired request this tick releases in ONE bulk reset
             mask = jnp.zeros((len(self.slots),), bool).at[
                 jnp.asarray(done_slots, jnp.int32)].set(True)
             self.kv = kvcache.release_slots(self.kv, mask)
+
+    def drain_spill_acks(self) -> Dict[int, Optional[int]]:
+        """Collect-and-clear the accumulated spill acks (request id ->
+        ack value, or None for a lost reply).  The eviction point that
+        keeps steady-state memory flat on long-running engines."""
+        acks, self.spill_acks = self.spill_acks, {}
+        return acks
 
     def run_until_drained(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
         ticks = 0

@@ -248,6 +248,100 @@ def test_sizeclass_fragmented_malloc_recovers(seed):
     _check_lookup_matches_linear(SC, s, live, list(range(0, HEAP, 5)))
 
 
+def _state_snapshot(s):
+    return {f: np.asarray(getattr(s, f)).copy()
+            for f in ("offsets", "sizes", "caps", "in_use", "free_bits",
+                      "count", "watermark")}
+
+
+def test_sizeclass_coalesce_full_arena_is_noop():
+    """ISSUE 5 satellite: coalesce when the arena is 100% allocated (no
+    free entry anywhere) must be a bit-exact no-op — no table compaction,
+    no bin writes, no watermark movement, and lookups stay intact."""
+    s = SC.init(HEAP, cap=64)
+    live = {}
+    while True:
+        size = 16 if int(s.watermark) + 16 <= HEAP else \
+            HEAP - int(s.watermark)
+        if size <= 0:
+            break
+        s, p = SC.malloc(s, size)
+        assert int(p) >= 0
+        live[int(p)] = size
+    assert int(s.watermark) == HEAP        # truly 100% allocated
+    before = _state_snapshot(s)
+    s2 = SC.coalesce(s)
+    after = _state_snapshot(s2)
+    for f, arr in before.items():
+        np.testing.assert_array_equal(arr, after[f], err_msg=f)
+    _check_lookup_matches_linear(SC, s2, live, list(range(0, HEAP, 7)))
+
+
+def test_sizeclass_coalesce_single_top_hole_reclaims_watermark():
+    """Watermark reclaim when the ONLY hole is the one touching the top:
+    no run-merging happens (a single free entry), but the hole must be
+    reclaimed into the watermark and its entry dropped — and a lower,
+    NON-top hole must survive the same pass un-reclaimed."""
+    s = SC.init(HEAP, cap=64)
+    s, a = SC.malloc(s, 32)
+    s, b = SC.malloc(s, 16)
+    s = SC.free(s, b)                      # only hole; touches watermark
+    s = SC.coalesce(s)
+    assert int(s.watermark) == 32          # pulled down over the hole
+    assert int(s.count) == 1               # b's entry dropped, a survives
+    assert (np.asarray(s.free_bits) == 0).all()
+    found, base, size = SC.find_obj(s, a)
+    assert bool(found) and int(base) == 0 and int(size) == 32
+    # contrast: the same hole NOT at the top is kept as a (binned) hole
+    s2 = SC.init(HEAP, cap=64)
+    s2, a2 = SC.malloc(s2, 32)
+    s2, b2 = SC.malloc(s2, 16)
+    s2, c2 = SC.malloc(s2, 8)
+    s2 = SC.free(s2, b2)                   # hole below live c2: not top
+    s2 = SC.coalesce(s2)
+    assert int(s2.watermark) == 56 and int(s2.count) == 3
+    assert (np.asarray(s2.free_bits) != 0).any()
+    s2, r = SC.malloc(s2, 16)
+    assert int(r) == int(b2)               # ...and is recycled exactly
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sizeclass_coalesce_interleaved_with_bulk_malloc(seed):
+    """coalesce interleaved with bulk malloc_many: bulk rounds allocate
+    fresh watermark space over merged tables, random frees punch holes,
+    explicit coalesce passes run BETWEEN bulk rounds — live blocks never
+    move, lookups agree with the linear reference throughout, and the
+    final full-free coalesce restores the fresh arena."""
+    rng = random.Random(300 + seed)
+    s = SC.init(HEAP, cap=64)
+    live = {}
+    for _ in range(6):
+        k = rng.randint(1, 5)
+        sizes = [rng.randint(1, 24) for _ in range(k)]
+        s, ptrs = SC.malloc_many(s, jnp.asarray(sizes, jnp.int32))
+        for p, sz in zip(np.asarray(ptrs).tolist(), sizes):
+            if p >= 0:
+                assert p not in live
+                live[p] = sz
+        for victim in [p for p in sorted(live) if rng.random() < 0.4]:
+            s = SC.free(s, victim)
+            del live[victim]
+        s = SC.coalesce(s)
+        # coalesce must not move or resize any LIVE block
+        for p, sz in live.items():
+            found, base, size = SC.find_obj(s, p)
+            assert bool(found) and int(base) == p and int(size) == sz
+        _check_no_overlap(live, HEAP)
+        _check_watermark_covers_live(live, int(s.watermark))
+        _check_lookup_matches_linear(SC, s, live,
+                                     list(range(0, HEAP, 13)))
+    for p in sorted(live):
+        s = SC.free(s, p)
+    s = SC.coalesce(s)
+    assert int(s.count) == 0 and int(s.watermark) == 0
+    assert (np.asarray(s.free_bits) == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # Grid group/ungroup bijection
 # ---------------------------------------------------------------------------

@@ -1,0 +1,447 @@
+"""Differential fuzz suite for the batched RPC transport (ISSUE 5).
+
+A pure-Python **reference model** of :class:`repro.core.rpc.RpcQueue` —
+record ring, payload arena, reply arena, tickets — re-implements the
+transport's documented semantics in ~100 lines of plain dicts and lists:
+
+  * ring overwrite: more than ``capacity`` enqueues between flushes
+    overwrite the oldest records (counted at flush);
+  * ATOMIC arena drops: a record whose payloads don't fit reserves
+    nothing, advances nothing, and returns ticket ``-1``;
+  * conditional enqueue: ``where=False`` is a no-op (ticket ``-1``);
+  * two-phase flush: records replay in enqueue order — ``(device, slot)``
+    order across shards — and result-bearing records pack their callee's
+    return value into the reply arena in replay order; when it fills, the
+    overflowing record is dropped ATOMICALLY at drain (callee not run,
+    mirroring the request arena's enqueue-side atomic drop);
+  * ticket reads: tickets are GLOBAL sequence numbers and the reply table
+    is stamped with its epoch's ``(rbase, rcount)`` window — ``result``
+    returns the reply iff the ticket falls inside the window and its slot
+    holds a reply of exactly the expected length, zeros otherwise
+    (cross-epoch reads always die; the surviving deliberate alias is an
+    overwritten ticket onto the survivor in its slot, within one epoch).
+
+Random interleavings of enqueue / flush / result are then run through BOTH
+implementations and compared **bit-for-bit**: the host-visible replay
+sequence (callee + every argument, scalars and arrays), the device-visible
+reply of every ticket ever issued, the pre-flush ``head``/``phead``/
+``adrops`` counters, and the drop accounting in ``flush_stats()``.  Single
+queue and 2-device sharded queue variants.
+
+Drives the device queue EAGERLY (no jit) so each generated interleaving
+costs milliseconds, not a fresh trace+compile.  Prefers ``hypothesis``;
+falls back to seeded pseudo-random plans (same generator) so the suite
+runs from a clean environment — the pattern of
+``test_allocator_properties.py``.  The CI differential job raises the
+example count to the acceptance bar (>= 200 interleavings) via
+``RPC_DIFF_EXAMPLES``; the default keeps the tier-1 run quick.
+"""
+import os
+import random
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.rpc import (REGISTRY, RpcQueue, ShardedRpcQueue, flush_stats,
+                            reset_rpc_stats)
+
+# Small geometry so ring overwrite, arena drops and reply drops all actually
+# happen inside short plans.
+CAP, WIDTH, PC, RC = 5, 3, 14, 9
+#: Examples per hypothesis test / seeds in the fallback corpus.  The CI
+#: differential matrix job sets RPC_DIFF_EXAMPLES=100 -> 100 (single) + 100
+#: (sharded) >= 200 generated interleavings; the tier-1 default stays small.
+N_EXAMPLES = int(os.environ.get("RPC_DIFF_EXAMPLES", "30"))
+
+_SEEN = []        # what the device implementation's callees actually saw
+
+
+def _record(kind, tag, nrep, arr):
+    _SEEN.append((kind, int(tag),
+                  None if arr is None else np.asarray(arr).tolist()))
+
+
+def _echo_int(tag, nrep, arr=None):
+    """Deterministic int reply: nrep words derived from tag (+ payload)."""
+    _record("i", tag, nrep, arr)
+    bump = 0 if arr is None else int(np.asarray(arr, np.int64).sum()) % 17
+    return np.arange(int(nrep), dtype=np.int32) * 3 + int(tag) + bump
+
+
+def _echo_float(tag, nrep, arr=None):
+    """Deterministic f32 reply (half-integer values: exact in float32)."""
+    _record("f", tag, nrep, arr)
+    return np.arange(int(nrep), dtype=np.float32) * 0.5 + np.float32(tag)
+
+
+REGISTRY.register("diff.int", _echo_int)
+REGISTRY.register("diff.float", _echo_float)
+
+
+# ---------------------------------------------------------------------------
+# Reference model
+# ---------------------------------------------------------------------------
+
+class RefQueue:
+    """The transport semantics in plain python (one shard)."""
+
+    def __init__(self, cap=CAP, pc=PC, rc=RC):
+        self.cap, self.pc, self.rc = cap, pc, rc
+        self.slots = [None] * cap        # (kind, tag, nrep, payload|None)
+        self.head = 0
+        self.phead = 0
+        self.adrops = 0
+        self.gbase = 0                   # global seq no. of epoch start
+        self.rbase = 0                   # epoch window of the last flush's
+        self.rcount = 0                  # reply table
+        self.reply = {}                  # slot -> reply value list
+
+    def enqueue(self, kind, tag, nrep, payload, where=None):
+        """Mirror of ``enqueue_ticketed``: returns the GLOBAL ticket or
+        -1."""
+        npay = 0 if payload is None else len(payload)
+        keep = where is None or where
+        if npay and self.phead + npay > self.pc:
+            self.adrops += int(keep)     # atomic drop: nothing reserved
+            return -1
+        if not keep:
+            return -1
+        if payload is not None and kind == "f":
+            payload = [float(np.float32(x)) for x in payload]
+        t = self.gbase + self.head
+        self.slots[self.head % self.cap] = (kind, int(tag), int(nrep),
+                                            payload)
+        self.head += 1
+        self.phead += npay
+        return t
+
+    def flush(self):
+        """Returns (host-visible replay list, overwrite drops, arena drops,
+        reply drops) and installs the epoch's reply table."""
+        n = self.head
+        lo = max(0, n - self.cap)
+        seen, rtab = [], {}
+        rhead = rdrops = 0
+        for j in range(lo, n):
+            k = j % self.cap
+            kind, tag, nrep, payload = self.slots[k]
+            if nrep > 0 and rhead + nrep > self.rc:
+                rdrops += 1              # atomic drain drop: callee not run
+                continue
+            seen.append((kind, tag, payload))
+            if nrep > 0:
+                rtab[k] = _MODEL_HOSTS[kind](tag, nrep, payload)
+                rhead += nrep
+        adrops, self.adrops = self.adrops, 0
+        self.reply = rtab
+        self.rbase, self.rcount = self.gbase, n
+        self.gbase += n
+        self.head = self.phead = 0
+        return seen, lo, adrops, rdrops
+
+    def result(self, ticket, nrep, kind):
+        zero = [0] * nrep if kind == "i" else [0.0] * nrep
+        local = ticket - self.rbase
+        if ticket < 0 or local < 0 or local >= self.rcount:
+            return zero                  # dropped / cross-epoch: dead
+        r = self.reply.get(local % self.cap)
+        return r if r is not None and len(r) == nrep else zero
+
+
+def _model_int(tag, nrep, payload):
+    bump = 0 if payload is None else int(sum(payload)) % 17
+    return [i * 3 + tag + bump for i in range(nrep)]
+
+
+def _model_float(tag, nrep, payload):
+    return [float(np.float32(i * 0.5 + np.float32(tag))) for i in range(nrep)]
+
+
+_MODEL_HOSTS = {"i": _model_int, "f": _model_float}
+
+
+# ---------------------------------------------------------------------------
+# Plan generation (shared by hypothesis and the seeded fallback)
+# ---------------------------------------------------------------------------
+
+def _random_plan(rng: random.Random, max_ops=16):
+    """One interleaving: [('flush',) | ('enq', kind, tag, plen, nrep, where)]
+    with plen -1 = scalar-only record and where in {None, True, False}."""
+    plan = []
+    for _ in range(rng.randint(1, max_ops)):
+        if rng.random() < 0.22:
+            plan.append(("flush",))
+        else:
+            plan.append(("enq",
+                         rng.choice(["i", "f"]),
+                         rng.randint(0, 99),
+                         rng.choice([-1, 0, 1, 2, 3, 5, 7]),
+                         rng.choice([0, 0, 1, 2, 3, 4]),
+                         rng.choice([None, None, True, False])))
+    return plan
+
+
+if HAVE_HYPOTHESIS:
+    _OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("flush")),
+            st.tuples(st.just("enq"), st.sampled_from(["i", "f"]),
+                      st.integers(0, 99),
+                      st.sampled_from([-1, 0, 1, 2, 3, 5, 7]),
+                      st.integers(0, 4),
+                      st.sampled_from([None, True, False]))),
+        min_size=1, max_size=16)
+
+
+def _payload_for(kind, plen, tag):
+    """Deterministic payload values (exact in f32 for the float kind)."""
+    if plen < 0:
+        return None
+    if kind == "i":
+        return [(tag * 7 + i) % 101 - 50 for i in range(plen)]
+    return [(tag % 13) + i * 0.5 for i in range(plen)]
+
+
+# ---------------------------------------------------------------------------
+# Drivers: run one plan through device + model, compare bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _dev_enqueue(q, kind, tag, nrep, payload, where):
+    name = "diff.int" if kind == "i" else "diff.float"
+    args = [jnp.int32(tag), jnp.int32(nrep)]
+    if payload is not None:
+        args.append(jnp.asarray(
+            payload, jnp.int32 if kind == "i" else jnp.float32))
+    returns = (jax.ShapeDtypeStruct(
+        (nrep,), jnp.int32 if kind == "i" else jnp.float32)
+        if nrep > 0 else None)
+    w = None if where is None else jnp.bool_(where)
+    q, t = q.enqueue_ticketed(name, *args, returns=returns, where=w)
+    return q, int(t)
+
+
+def _dev_result(q, ticket, nrep, kind):
+    dt = jnp.int32 if kind == "i" else jnp.float32
+    vals = np.asarray(q.result(ticket, (nrep,), dt))
+    return [int(v) for v in vals] if kind == "i" else \
+        [float(v) for v in vals]
+
+
+def _check_single(plan):
+    """One interleaving, single queue: drive device + model, compare the
+    host replay stream, every ticket's reply, counters, and drop stats."""
+    reset_rpc_stats()
+    _SEEN.clear()
+    q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                        reply_capacity=RC)
+    ref = RefQueue()
+    expect_seen = []
+    drops = adrops = rdrops = 0
+    pending = []                      # (dev ticket, ref ticket, nrep, kind)
+
+    def do_flush(q):
+        nonlocal drops, adrops, rdrops
+        # pre-flush counters must agree exactly
+        assert int(q.head) == ref.head
+        assert int(q.phead) == ref.phead
+        assert int(q.adrops) == ref.adrops
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            q = q.flush()
+        seen, d, a, r = ref.flush()
+        expect_seen.extend(seen)
+        drops += d
+        adrops += a
+        rdrops += r
+        jax.effects_barrier()
+        # every ticket issued this epoch reads bit-identically (zeros for
+        # dropped / reply-overflow / no-reply; survivor data for aliased
+        # overwritten tickets)
+        for dt_, rt_, nrep, kind in pending:
+            assert dt_ == rt_                     # same ticket numbering
+            if nrep > 0:
+                assert _dev_result(q, dt_, nrep, kind) == \
+                    ref.result(rt_, nrep, kind), (dt_, nrep, kind)
+        pending.clear()
+        return q
+
+    for op in plan:
+        if op[0] == "flush":
+            q = do_flush(q)
+        else:
+            _, kind, tag, plen, nrep, where = op
+            payload = _payload_for(kind, plen, tag)
+            q, t_dev = _dev_enqueue(q, kind, tag, nrep, payload, where)
+            t_ref = ref.enqueue(kind, tag, nrep, payload, where)
+            pending.append((t_dev, t_ref, nrep, kind))
+    q = do_flush(q)                   # drain the tail epoch
+
+    # host-visible stream: same callees, same scalars, same array bytes
+    got = [(k, t, a) for k, t, a in _SEEN]
+    assert got == expect_seen
+    stats = flush_stats()
+    assert stats["drops"] == drops
+    assert stats["arena_drops"] == adrops
+    assert stats["reply_drops"] == rdrops
+
+
+def _check_sharded(plans):
+    """Per-device interleavings on a sharded queue: enqueues stay shard-
+    local, ONE stacked flush replays (device, slot) order, and each
+    device's tickets resolve against ITS reply arena."""
+    D = len(plans)
+    reset_rpc_stats()
+    _SEEN.clear()
+    sq = ShardedRpcQueue.create(D, CAP, width=WIDTH, payload_capacity=PC,
+                                reply_capacity=RC)
+    locals_ = [sq.local(d) for d in range(D)]
+    refs = [RefQueue() for _ in range(D)]
+    expect_seen = []
+    drops = adrops = rdrops = 0
+    pending = [[] for _ in range(D)]
+
+    def do_flush():
+        nonlocal drops, adrops, rdrops, locals_
+        stacked = ShardedRpcQueue(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
+        for d in range(D):
+            assert int(stacked.q.head[d]) == refs[d].head
+            assert int(stacked.q.adrops[d]) == refs[d].adrops
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            stacked = stacked.flush()
+        jax.effects_barrier()
+        for d in range(D):           # (device, slot): device-major replay
+            seen, dd, aa, rr = refs[d].flush()
+            expect_seen.extend(seen)
+            drops += dd
+            adrops += aa
+            rdrops += rr
+        for d in range(D):
+            lq = stacked.local(d)
+            for dt_, rt_, nrep, kind in pending[d]:
+                assert dt_ == rt_
+                if nrep > 0:
+                    assert _dev_result(lq, dt_, nrep, kind) == \
+                        refs[d].result(rt_, nrep, kind), (d, dt_, nrep)
+            pending[d].clear()
+        locals_ = [stacked.local(d) for d in range(D)]
+
+    # interleave devices op-by-op (round-robin) so shard-local state and
+    # the gathered flush genuinely interleave; flush ops are global
+    maxlen = max(len(p) for p in plans)
+    for i in range(maxlen):
+        flush_now = False
+        for d, plan in enumerate(plans):
+            if i >= len(plan):
+                continue
+            op = plan[i]
+            if op[0] == "flush":
+                flush_now = True
+                continue
+            _, kind, tag, plen, nrep, where = op
+            payload = _payload_for(kind, plen, tag)
+            locals_[d], t_dev = _dev_enqueue(locals_[d], kind, tag, nrep,
+                                             payload, where)
+            t_ref = refs[d].enqueue(kind, tag, nrep, payload, where)
+            pending[d].append((t_dev, t_ref, nrep, kind))
+        if flush_now:
+            do_flush()
+    do_flush()
+
+    assert [(k, t, a) for k, t, a in _SEEN] == expect_seen
+    stats = flush_stats()
+    assert stats["drops"] == drops
+    assert stats["arena_drops"] == adrops
+    assert stats["reply_drops"] == rdrops
+
+
+# ---------------------------------------------------------------------------
+# Directed regression interleavings (always run, fast)
+# ---------------------------------------------------------------------------
+
+def test_directed_ring_overwrite_aliases_survivor():
+    """cap+2 result-bearing enqueues: overwritten tickets alias the
+    survivors in their slots — model and device must agree on the alias."""
+    plan = [("enq", "i", t, -1, 2, None) for t in range(CAP + 2)] + \
+        [("flush",)]
+    _check_single(plan)
+
+
+def test_directed_arena_and_reply_overflow():
+    """Payloads that overflow the request arena (atomic drop) interleaved
+    with replies that overflow the reply arena (reply drop)."""
+    plan = [("enq", "i", 1, 7, 4, None),       # 7 payload words, 4 reply
+            ("enq", "f", 2, 7, 4, None),       # 14/14 payload: fits
+            ("enq", "i", 3, 5, 2, None),       # 19 > 14: ATOMIC drop
+            ("enq", "i", 4, -1, 4, None),      # 12/9 reply words: dropped
+            ("flush",),
+            ("enq", "i", 5, 3, 1, False),      # conditional no-op
+            ("enq", "f", 6, 3, 1, None),
+            ("flush",)]
+    _check_single(plan)
+
+
+def test_directed_stale_ticket_never_reads_next_epoch():
+    """A ticket held across a LATER flush must read zeros even when the
+    next epoch put a same-length reply in the same slot (global tickets +
+    the (rbase, rcount) window kill cross-epoch aliasing)."""
+    REGISTRY.register("diff.int", _echo_int)
+    q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                        reply_capacity=RC)
+    q, t_old = q.enqueue_ticketed(
+        "diff.int", jnp.int32(111), jnp.int32(2),
+        returns=jax.ShapeDtypeStruct((2,), jnp.int32))
+    q = q.flush()
+    assert _dev_result(q, int(t_old), 2, "i") == [111, 114]   # fresh: live
+    # epoch 2: same slot (slot 0), same reply width, different value
+    q, t_new = q.enqueue_ticketed(
+        "diff.int", jnp.int32(222), jnp.int32(2),
+        returns=jax.ShapeDtypeStruct((2,), jnp.int32))
+    q = q.flush()
+    jax.effects_barrier()
+    assert int(t_new) == int(t_old) + 1            # global, never resets
+    assert _dev_result(q, int(t_new), 2, "i") == [222, 225]
+    v, ok = q.result_ok(jnp.int32(int(t_old)), (2,), jnp.int32)
+    assert not bool(ok) and np.asarray(v).tolist() == [0, 0]
+
+
+def test_directed_sharded_minimal():
+    _check_sharded([[("enq", "i", 1, 2, 2, None), ("flush",),
+                     ("enq", "f", 2, -1, 1, None)],
+                    [("enq", "f", 3, 0, 3, None),
+                     ("enq", "i", 4, 9, 2, None)]])
+
+
+# ---------------------------------------------------------------------------
+# Generated interleavings: hypothesis when present, seeded corpus otherwise
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(_OPS)
+    def test_differential_single_queue(plan):
+        _check_single(plan)
+
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    @given(_OPS, _OPS)
+    def test_differential_sharded_queue(plan_a, plan_b):
+        _check_sharded([plan_a, plan_b])
+else:
+    @pytest.mark.parametrize("seed", range(N_EXAMPLES))
+    def test_differential_single_queue(seed):
+        _check_single(_random_plan(random.Random(1000 + seed)))
+
+    @pytest.mark.parametrize("seed", range(N_EXAMPLES))
+    def test_differential_sharded_queue(seed):
+        rng = random.Random(2000 + seed)
+        _check_sharded([_random_plan(rng, 10), _random_plan(rng, 10)])

@@ -15,9 +15,9 @@ import pytest
 from repro.core.allocator import GenericAllocator as GA
 from repro.core.device_main import HostHook, device_run
 from repro.core.rpc import (
-    READ, READWRITE, REGISTRY, ArenaRef, Ref, RpcQueue, flush_stats,
-    host_rpc, pad_stats, pad_table, queue_drops, reset_rpc_stats, rpc_call,
-    rpc_stats)
+    READ, READWRITE, REGISTRY, ArenaRef, Ref, RpcQueue, ShardedRpcQueue,
+    flush_stats, host_rpc, pad_stats, pad_table, queue_drops,
+    reset_rpc_stats, rpc_call, rpc_stats)
 
 I32 = jax.ShapeDtypeStruct((), jnp.int32)
 F32 = jax.ShapeDtypeStruct((), jnp.float32)
@@ -314,7 +314,8 @@ def test_queue_overflow_surfaced_at_flush():
     assert seen == list(range(k, cap + k))      # order preserved, k lost
     st = flush_stats()
     assert st == {"flushes": 1, "drops": k, "last_drops": k,
-                  "arena_drops": 0, "last_arena_drops": 0}
+                  "arena_drops": 0, "last_arena_drops": 0,
+                  "reply_drops": 0, "last_reply_drops": 0}
 
     @jax.jit
     def clean():
@@ -327,7 +328,8 @@ def test_queue_overflow_surfaced_at_flush():
     jax.effects_barrier()
     st = flush_stats()
     assert st == {"flushes": 2, "drops": k, "last_drops": 0,
-                  "arena_drops": 0, "last_arena_drops": 0}
+                  "arena_drops": 0, "last_arena_drops": 0,
+                  "reply_drops": 0, "last_reply_drops": 0}
 
 
 def test_queue_rejects_overwidth_unregistered_and_armless_arrays():
@@ -588,7 +590,7 @@ def test_rpc_call_batched_path():
     assert seen == [(3, [4.0, 5.0])]
 
     q = RpcQueue.create(8, width=2, payload_capacity=32)
-    with pytest.raises(ValueError, match="fire-and-forget"):
+    with pytest.raises(ValueError, match="value args"):
         rpc_call("p.batched", jnp.int32(0),
                  Ref(jnp.zeros(2, jnp.float32)), batched=True, queue=q)
     with pytest.raises(ValueError, match="queue"):
@@ -608,20 +610,26 @@ def test_remote_malloc_rides_arena():
 
     @jax.jit
     def prog():
-        q = RpcQueue.create(8, width=2, payload_capacity=32)
-        q = remote_malloc_enqueue(q, "heap.t",
-                                  jnp.asarray([8, 16, 8], jnp.int32))
-        q = remote_malloc_enqueue(q, "heap.t", jnp.asarray([4], jnp.int32))
+        q = RpcQueue.create(8, width=3, payload_capacity=32,
+                            reply_capacity=16)
+        q, t0 = remote_malloc_enqueue(q, "heap.t",
+                                      jnp.asarray([8, 16, 8], jnp.int32))
+        q, t1 = remote_malloc_enqueue(q, "heap.t",
+                                      jnp.asarray([4], jnp.int32))
         q = q.flush()
-        return q.head
+        return q.head, q.result(t0, (3,), jnp.int32), \
+            q.result(t1, (1,), jnp.int32)
 
-    prog()
+    _, r0, r1 = prog()
     jax.effects_barrier()
     state, ptr_batches = remote_malloc_results("heap.t")
     assert [p.tolist() for p in ptr_batches] == [[0, 8, 24], [32]]
     assert int(state.watermark) == 36
+    # v4: the same pointers came back through the reply arena
+    assert np.asarray(r0).tolist() == [0, 8, 24]
+    assert np.asarray(r1).tolist() == [32]
 
-    q = RpcQueue.create(8, width=2, payload_capacity=32)
+    q = RpcQueue.create(8, width=3, payload_capacity=32)
     with pytest.raises(KeyError, match="remote heap"):
         remote_malloc_enqueue(q, "heap.unknown", jnp.asarray([1], jnp.int32))
 
@@ -672,6 +680,352 @@ def test_logring_payload_records():
     assert lines[0] == (1, 0.5)
     tag, val, arr = lines[1]
     assert (tag, val) == (2, 1.5) and arr.tolist() == [9.0, 8.0]
+
+
+# ---------------------------------------------------------------------------
+# Transport v4: reply arena (device-visible results)
+# ---------------------------------------------------------------------------
+
+def test_reply_roundtrip_dtypes_and_validity():
+    """Ticketed records read back int and float replies bit-exactly; a
+    dropped (where=False) ticket and a no-reply slot read zeros with
+    ok=False; stale tickets die at the next flush."""
+    REGISTRY.register("r.int", lambda k: np.arange(int(k), dtype=np.int32))
+    REGISTRY.register("r.flt", lambda x: np.float32(x) * 0.5)
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, reply_capacity=16)
+        q, t0 = q.enqueue_ticketed(
+            "r.int", jnp.int32(3),
+            returns=jax.ShapeDtypeStruct((3,), jnp.int32))
+        q, t1 = q.enqueue_ticketed(
+            "r.flt", jnp.float32(7.0),
+            returns=jax.ShapeDtypeStruct((), jnp.float32))
+        q, t2 = q.enqueue_ticketed(
+            "r.flt", jnp.float32(1.0),
+            returns=jax.ShapeDtypeStruct((), jnp.float32),
+            where=jnp.bool_(False))
+        q = q.flush()
+        v0, ok0 = q.result_ok(t0, (3,), jnp.int32)
+        v1, ok1 = q.result_ok(t1, (), jnp.float32)
+        v2, ok2 = q.result_ok(t2, (), jnp.float32)
+        # a second flush starts a new epoch: t0 goes stale
+        q = q.flush()
+        v0b, ok0b = q.result_ok(t0, (3,), jnp.int32)
+        return v0, ok0, v1, ok1, v2, ok2, v0b, ok0b
+
+    v0, ok0, v1, ok1, v2, ok2, v0b, ok0b = prog()
+    jax.effects_barrier()
+    assert np.asarray(v0).tolist() == [0, 1, 2] and bool(ok0)
+    assert float(v1) == 3.5 and bool(ok1)
+    assert float(v2) == 0.0 and not bool(ok2)      # conditional: no record
+    assert np.asarray(v0b).tolist() == [0, 0, 0] and not bool(ok0b)
+
+
+def test_reply_arena_overflow_drops_whole_reply():
+    """Replies pack in replay order; a record whose reply does not fit is
+    dropped ATOMICALLY at drain — its callee never runs (effectful callees
+    must not consume input for a result that cannot be delivered), the
+    reader sees zeros + ok False — later smaller replies still land, and
+    the drop is surfaced via flush_stats."""
+    jax.effects_barrier()
+    reset_rpc_stats()
+    ran = []
+    REGISTRY.register(
+        "r.fill",
+        lambda k: (ran.append(int(k)), np.full(int(k), int(k), np.int32))[1])
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, reply_capacity=6)
+        q, t0 = q.enqueue_ticketed(
+            "r.fill", jnp.int32(4),
+            returns=jax.ShapeDtypeStruct((4,), jnp.int32))    # 4/6
+        q, t1 = q.enqueue_ticketed(
+            "r.fill", jnp.int32(3),
+            returns=jax.ShapeDtypeStruct((3,), jnp.int32))    # 7 > 6: drop
+        q, t2 = q.enqueue_ticketed(
+            "r.fill", jnp.int32(2),
+            returns=jax.ShapeDtypeStruct((2,), jnp.int32))    # 6/6: lands
+        q = q.flush()
+        return (q.result(t0, (4,), jnp.int32),
+                q.result_ok(t1, (3,), jnp.int32)[1],
+                q.result(t2, (2,), jnp.int32))
+
+    with pytest.warns(RuntimeWarning, match="reply"):
+        r0, ok1, r2 = prog()
+        jax.effects_barrier()
+    assert np.asarray(r0).tolist() == [4, 4, 4, 4]
+    assert not bool(ok1)
+    assert np.asarray(r2).tolist() == [2, 2]
+    assert ran == [4, 2]                 # the dropped record NEVER ran
+    st = flush_stats()
+    assert st["reply_drops"] == 1 and st["last_reply_drops"] == 1
+    assert st["drops"] == 0 and st["arena_drops"] == 0
+
+
+def test_reply_rejected_without_reply_arena():
+    REGISTRY.register("r.none", lambda: np.int32(0))
+    q = RpcQueue.create(4, width=1)                # reply_capacity=0
+    with pytest.raises(ValueError, match="reply arena"):
+        q.enqueue_ticketed("r.none",
+                           returns=jax.ShapeDtypeStruct((), jnp.int32))
+    with pytest.raises(ValueError, match="result"):
+        q.result(jnp.int32(0))
+    q1 = RpcQueue.create(4, width=1, reply_capacity=2)
+    with pytest.raises(ValueError, match="reply words"):
+        q1.enqueue_ticketed("r.none",
+                            returns=jax.ShapeDtypeStruct((3,), jnp.int32))
+    with pytest.raises(ValueError, match="returns"):
+        rpc_call("r.none", result_shape=I32,
+                 returns=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def test_remote_malloc_roundtrip_find_obj_arena_ref():
+    """ISSUE 5 acceptance (single device): a pointer produced by
+    remote_malloc_enqueue, read back ON DEVICE through the reply arena, is
+    accepted by find_obj and usable as an ArenaRef in a subsequent RPC."""
+    from repro.core.allocator import GenericAllocator as GAlloc, find_obj
+    from repro.core.libc import remote_heap_register, remote_malloc_results
+    from repro.core.libc import remote_malloc_enqueue
+    remote_heap_register("heap.rt", GAlloc.init(128, cap=16))
+
+    @jax.jit
+    def acquire():
+        q = RpcQueue.create(8, width=3, payload_capacity=16, reply_capacity=8)
+        q, t = remote_malloc_enqueue(q, "heap.rt",
+                                     jnp.asarray([24, 8], jnp.int32))
+        q = q.flush()
+        return q.result(t, (2,), jnp.int32)
+
+    ptrs = acquire()
+    jax.effects_barrier()
+    assert np.asarray(ptrs).tolist() == [0, 24]
+    state, _ = remote_malloc_results("heap.rt")
+
+    # the reply pointer resolves through the tracking table on device
+    f, b, s = jax.jit(lambda st, p: find_obj(st, p))(state, ptrs[0] + 5)
+    assert (int(f), int(b), int(s)) == (1, 0, 24)
+
+    # ...and marshals as an ArenaRef in a subsequent RPC
+    seen = {}
+    REGISTRY.register(
+        "rt.probe",
+        lambda ptr, base, size, found, arena: seen.update(
+            ptr=int(ptr), base=int(base), size=int(size), found=int(found))
+        or np.int32(0))
+
+    @jax.jit
+    def probe(state, arena, ptr):
+        r, _ = rpc_call("rt.probe", ArenaRef(arena, ptr, state, access=READ),
+                        result_shape=I32)
+        return r
+
+    probe(state, jnp.zeros(128, jnp.float32), ptrs[1] + 3)
+    jax.effects_barrier()
+    assert seen == {"ptr": 27, "base": 24, "size": 8, "found": 1}
+
+
+def test_fread_fgets_input_through_reply_arena():
+    """libc input path: fgets stops AFTER the first newline (zero-pad
+    doubles as the NUL), fread pops exact element counts with zero-padded
+    short reads, float streams round-trip bitcast, and the parsed codes
+    feed atoi directly."""
+    from repro.core.libc import atoi, fgets, fread, fread_feed
+    fread_feed(61, "42 x\nrest", reset=True)
+    fread_feed(62, np.asarray([1.5, -2.5, 3.0], np.float32), reset=True)
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(16, width=2, reply_capacity=64)
+        q, t_line = fgets(q, 8, stream=61)          # "42 x\n" + 0-pad
+        q, t_rest = fgets(q, 8, stream=61)          # "rest" (no newline)
+        q, t_f = fread(q, 2, stream=62, dtype=jnp.float32)
+        q, t_short = fread(q, 4, stream=62, dtype=jnp.float32)  # 1 left
+        q, t_empty = fgets(q, 4, stream=61)         # exhausted: zeros
+        q = q.flush()
+        return (q.result(t_line, (8,), jnp.int32),
+                q.result(t_rest, (8,), jnp.int32),
+                q.result(t_f, (2,), jnp.float32),
+                q.result(t_short, (4,), jnp.float32),
+                q.result(t_empty, (4,), jnp.int32),
+                atoi(q.result(t_line, (8,), jnp.int32).astype(jnp.uint8)))
+
+    line, rest, fl, short, empty, parsed = prog()
+    jax.effects_barrier()
+    assert bytes(np.asarray(line, np.uint8)) == b"42 x\n\0\0\0"
+    assert bytes(np.asarray(rest, np.uint8)) == b"rest\0\0\0\0"
+    assert np.asarray(fl).tolist() == [1.5, -2.5]
+    assert np.asarray(short).tolist() == [3.0, 0.0, 0.0, 0.0]  # short read
+    assert np.asarray(empty).tolist() == [0, 0, 0, 0]
+    assert int(parsed) == 42
+
+    # per-stream dtype rule mirrors fwrite's
+    with pytest.raises(ValueError, match="one stream per dtype"):
+        fread_feed(62, np.asarray([1, 2], np.int32))
+
+
+def test_device_run_thread_queue_midloop_flush():
+    """Non-mesh thread_queue contract: the step flushes MID-LOOP and
+    consumes the reply on the SAME step, threading the queue through the
+    while_loop carry; return_queue hands back the last flushed queue."""
+    REGISTRY.register("dr.twice", lambda x: np.int32(x) * 2)
+
+    def step(i, s, q):
+        q, t = q.enqueue_ticketed(
+            "dr.twice", s.astype(jnp.int32),
+            returns=jax.ShapeDtypeStruct((), jnp.int32))
+        q = q.flush()
+        return q.result(t).astype(jnp.float32) + 1.0, q
+
+    final, q = device_run(step, jnp.float32(1.0), 4, thread_queue=True,
+                          return_queue=True, queue_reply=8, donate=False)
+    jax.effects_barrier()
+    assert float(final) == 31.0            # 1 -> 3 -> 7 -> 15 -> 31
+    assert q.reply_capacity == 8 and int(q.head) == 0
+
+
+# ---------------------------------------------------------------------------
+# Cross-transport conformance: immediate == batched == sharded
+# ---------------------------------------------------------------------------
+
+def _issue_fprintf(transport):
+    from repro.core import libc
+    fmt = "conf %d %.1f"
+    fid = libc._intern_fmt(fmt)
+    calls = [(3, 1.5), (4, -0.5)]
+    if transport == "immediate":
+        @jax.jit
+        def prog():
+            for a, b in calls:
+                rpc_call("libc.fprintf", jnp.int32(fid), jnp.int32(a),
+                         jnp.float32(b), result_shape=())
+            return jnp.int32(0)
+        prog()
+    elif transport == "batched":
+        @jax.jit
+        def prog():
+            q = RpcQueue.create(8, width=4, payload_capacity=16)
+            for a, b in calls:
+                q = libc.fprintf(q, fmt, jnp.int32(a), jnp.float32(b))
+            return q.flush().head
+        prog()
+    else:
+        q = ShardedRpcQueue.create(2, 8, width=4, payload_capacity=16)
+        locals_ = [q.local(d) for d in range(2)]
+        for d, (a, b) in enumerate(calls):          # one call per device
+            locals_[d] = libc.fprintf(locals_[d], fmt, jnp.int32(a),
+                                      jnp.float32(b))
+        ShardedRpcQueue(jax.tree.map(
+            lambda *xs: jnp.stack(xs), *locals_)).flush()
+    jax.effects_barrier()
+    return libc.drain_printf(), None
+
+
+def _issue_fwrite(transport):
+    from repro.core import libc
+    stream = {"immediate": 31, "batched": 32, "sharded": 33}[transport]
+    chunks = [[10, 20, 30], [40]]
+    if transport == "immediate":
+        @jax.jit
+        def prog():
+            for c in chunks:
+                rpc_call("libc.fwrite", jnp.int32(stream),
+                         jnp.asarray(c, jnp.int32), result_shape=())
+            return jnp.int32(0)
+        prog()
+    elif transport == "batched":
+        @jax.jit
+        def prog():
+            q = RpcQueue.create(8, width=2, payload_capacity=16)
+            for c in chunks:
+                q = libc.fwrite(q, jnp.asarray(c, jnp.int32), stream=stream)
+            return q.flush().head
+        prog()
+    else:
+        q = ShardedRpcQueue.create(2, 8, width=2, payload_capacity=16)
+        locals_ = [q.local(d) for d in range(2)]
+        for d, c in enumerate(chunks):
+            locals_[d] = libc.fwrite(locals_[d], jnp.asarray(c, jnp.int32),
+                                     stream=stream)
+        ShardedRpcQueue(jax.tree.map(
+            lambda *xs: jnp.stack(xs), *locals_)).flush()
+    jax.effects_barrier()
+    return libc.drain_fwrite(stream).tolist(), None
+
+
+def _issue_remote_malloc(transport):
+    from repro.core.allocator import GenericAllocator as GAlloc
+    from repro.core import libc
+    name = f"heap.conf.{transport}"
+    libc.remote_heap_register(name, GAlloc.init(256, cap=16))
+    batches = [[8, 16], [4]]
+    nid = libc._intern_fmt(name)
+    if transport == "immediate":
+        @jax.jit
+        def prog():
+            outs = []
+            for sizes in batches:
+                r, _ = rpc_call(
+                    "libc.remote_malloc", jnp.int32(nid), jnp.int32(0),
+                    jnp.asarray(sizes, jnp.int32),
+                    result_shape=jax.ShapeDtypeStruct((len(sizes),),
+                                                      jnp.int32))
+                outs.append(r)
+            return outs
+        device_ptrs = [np.asarray(o).tolist() for o in prog()]
+    elif transport == "batched":
+        @jax.jit
+        def prog():
+            q = RpcQueue.create(8, width=3, payload_capacity=16,
+                                reply_capacity=8)
+            tks = []
+            for sizes in batches:
+                q, t = libc.remote_malloc_enqueue(
+                    q, name, jnp.asarray(sizes, jnp.int32))
+                tks.append((t, len(sizes)))
+            q = q.flush()
+            return [q.result(t, (k,), jnp.int32) for t, k in tks]
+        device_ptrs = [np.asarray(o).tolist() for o in prog()]
+    else:
+        q = ShardedRpcQueue.create(2, 8, width=3, payload_capacity=16,
+                                   reply_capacity=8)
+        locals_ = [q.local(d) for d in range(2)]
+        tks = []
+        for d, sizes in enumerate(batches):
+            locals_[d], t = libc.remote_malloc_enqueue(
+                locals_[d], name, jnp.asarray(sizes, jnp.int32))
+            tks.append((d, t, len(sizes)))
+        sq = ShardedRpcQueue(jax.tree.map(
+            lambda *xs: jnp.stack(xs), *locals_)).flush()
+        device_ptrs = [np.asarray(sq.result(d, t, (k,), jnp.int32)).tolist()
+                       for d, t, k in tks]
+    jax.effects_barrier()
+    state, host_ptrs = libc.remote_malloc_results(name)
+    effect = ([p.tolist() for p in host_ptrs], int(state.watermark))
+    return effect, device_ptrs
+
+
+_ISSUERS = {"fprintf": _issue_fprintf, "fwrite": _issue_fwrite,
+            "remote_malloc": _issue_remote_malloc}
+
+
+@pytest.mark.parametrize("call", sorted(_ISSUERS))
+def test_cross_transport_conformance(call):
+    """ISSUE 5 satellite: the same libc call issued via immediate ordered
+    RPC, batched queue, and sharded queue produces identical host-visible
+    effects AND identical device-visible results — one sweep, not three
+    test copies.  (Replay order makes this meaningful: batched replays in
+    enqueue order, sharded in (device, slot) order; the call sequences are
+    laid out so all three coincide.)"""
+    effects, results = {}, {}
+    for transport in ("immediate", "batched", "sharded"):
+        effects[transport], results[transport] = _ISSUERS[call](transport)
+    assert effects["batched"] == effects["immediate"], call
+    assert effects["sharded"] == effects["immediate"], call
+    assert results["batched"] == results["immediate"], call
+    assert results["sharded"] == results["immediate"], call
 
 
 def test_batched_hook_array_payload():

@@ -86,6 +86,40 @@ def test_engine_spill_sink_receives_page_ids(dense_model):
     assert by_rid[r1][0] == 9 and len(by_rid[r1][1]) == 2
     # r2: 2 prompt + 13 generated -> 14 written tokens -> 2 pages
     assert by_rid[r2][0] == 14 and len(by_rid[r2][1]) == 2
+    # v4: every spill is ACKED through the reply arena — the sink returned
+    # None, so the ack defaults to the page count it was handed
+    assert eng.spill_acks == {rid: len(pages)
+                              for rid, (_, pages) in by_rid.items()}
+
+
+def test_engine_spill_ack_carries_sink_return(dense_model):
+    """A spill sink that RETURNS a value sees that value come back as the
+    ack (the reply arena round-trip through the engine's flush)."""
+    cfg, model, params = dense_model
+
+    def sink(rid, n_tokens, pages):
+        return 1000 + int(rid)
+
+    eng = ServingEngine(model, params, batch_slots=1, max_len=32,
+                        page_size=8, spill_sink=sink)
+    r1 = eng.submit([4, 2], max_new=3)
+    eng.run_until_drained()
+    assert eng.spill_acks == {r1: 1000 + r1}
+
+    # a sink written against the pre-ack contract may return non-scalars
+    # (here: the page list itself) — the flush must not crash, and the ack
+    # is the drain's 1-word coercion (first element)
+    spilled = []
+
+    def page_sink(rid, n_tokens, pages):
+        spilled.append(pages.tolist())
+        return pages
+
+    eng2 = ServingEngine(model, params, batch_slots=1, max_len=32,
+                         page_size=8, spill_sink=page_sink)
+    r2 = eng2.submit([4, 2], max_new=3)
+    eng2.run_until_drained()
+    assert spilled and eng2.spill_acks == {r2: spilled[0][0]}
 
 
 def test_engine_spill_disabled_by_default(dense_model):

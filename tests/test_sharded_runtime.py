@@ -374,6 +374,127 @@ def test_place_sharded_state_single_device():
 
 
 # ---------------------------------------------------------------------------
+# Transport v4: sharded reply arena
+# ---------------------------------------------------------------------------
+
+def test_sharded_remote_malloc_reply_roundtrip():
+    """ISSUE 5 acceptance (2-device sharded queue): each device's
+    remote-malloc ticket reads back global (device, offset) pointers
+    through ITS reply arena in deterministic (flush-order, device, slot)
+    order; the pointers pass find_obj and marshal as ArenaRefs."""
+    from repro.core.libc import (remote_heap_register, remote_malloc_enqueue,
+                                 remote_malloc_results)
+    remote_heap_register("heap.sh_rt", shard_heap(GA.init(SPAN, cap=CAP), 2))
+
+    def one_run():
+        sq = ShardedRpcQueue.create(2, 8, width=3, payload_capacity=16,
+                                    reply_capacity=8)
+
+        def fill(lq, dev):
+            # each device asks the host heap's shard `dev` for two blocks
+            lq, t = remote_malloc_enqueue(
+                lq, "heap.sh_rt", (dev + 1) * jnp.asarray([8, 4], jnp.int32),
+                device=dev)
+            return lq, t
+
+        qq, tks = jax.vmap(fill)(sq.q, jnp.arange(2))
+        sq = ShardedRpcQueue(qq).flush()    # concrete: host-side drain
+        return [np.asarray(sq.result(d, tks[d], (2,), jnp.int32)).tolist()
+                for d in range(2)]
+
+    run1 = one_run()
+    # device d's pointers live in device d's span of the global encoding
+    assert run1[0] == [0, 8]                        # dev 0: sizes 8, 4
+    assert run1[1] == [SPAN, SPAN + 16]             # dev 1: sizes 16, 8
+    state, _ = remote_malloc_results("heap.sh_rt")
+    for d, ptrs in enumerate(run1):
+        for p, size in zip(ptrs, [(d + 1) * 8, (d + 1) * 4]):
+            fo, b, s = find_obj(state, jnp.int32(p))
+            assert (int(fo), int(b), int(s)) == (1, p, size)
+
+    # ...and the reply pointer marshals as an ArenaRef in a subsequent RPC
+    seen = {}
+    REGISTRY.register(
+        "sh_rt.probe",
+        lambda ptr, base, size, found, arena: seen.update(
+            ptr=int(ptr), base=int(base), size=int(size), found=int(found))
+        or np.int32(0))
+
+    @jax.jit
+    def probe(state, arena, ptr):
+        r, _ = rpc_call("sh_rt.probe",
+                        ArenaRef(arena, ptr, state, access=READ),
+                        result_shape=I32S)
+        return r
+
+    probe(state, jnp.zeros(2 * SPAN, jnp.float32), jnp.int32(run1[1][0] + 3))
+    jax.effects_barrier()
+    assert seen == {"ptr": SPAN + 3, "base": SPAN, "size": 16, "found": 1}
+
+    # deterministic replay: a second identical run on a fresh heap yields
+    # the identical pointer streams
+    remote_heap_register("heap.sh_rt", shard_heap(GA.init(SPAN, cap=CAP), 2))
+    assert one_run() == run1
+
+
+def test_sharded_reply_traced_flush_inside_jit():
+    """The traced (in-jit) sharded two-phase flush ships stacked reply
+    buffers back through the one ordered io_callback; each shard's tickets
+    resolve against its own reply slice."""
+    REGISTRY.register("shq.rep", lambda x: np.arange(int(x), int(x) + 2,
+                                                     dtype=np.int32))
+
+    @jax.jit
+    def prog():
+        q = ShardedRpcQueue.create(2, 4, width=2, reply_capacity=8)
+
+        def fill(lq, dev):
+            return lq.enqueue_ticketed(
+                "shq.rep", dev * 10,
+                returns=jax.ShapeDtypeStruct((2,), jnp.int32))
+
+        qq, tks = jax.vmap(fill)(q.q, jnp.arange(2))
+        q = ShardedRpcQueue(qq).flush()
+        return q.result(0, tks[0], (2,), jnp.int32), \
+            q.result(1, tks[1], (2,), jnp.int32)
+
+    r0, r1 = prog()
+    jax.effects_barrier()
+    assert np.asarray(r0).tolist() == [0, 1]
+    assert np.asarray(r1).tolist() == [10, 11]
+
+
+def test_device_run_mesh_thread_queue_replies():
+    """device_run(mesh=, thread_queue=, return_queue=): each device's step
+    enqueues a ticketed RPC into its shard; the boundary flush returns the
+    sharded queue with per-device reply tables the host can read."""
+    out = run_child(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.device_main import device_run
+from repro.core.expand import team_id
+from repro.core.rpc import REGISTRY
+
+mesh = jax.make_mesh((2,), ("dev",))
+REGISTRY.register("mesh.sq", lambda x: np.int32(x) * np.int32(x))
+
+def step(i, s, lq):
+    lq, t = lq.enqueue_ticketed("mesh.sq",
+                                (s[0] + team_id()).astype(jnp.int32),
+                                returns=jax.ShapeDtypeStruct((), jnp.int32))
+    return s + 1.0, lq
+
+final, q = device_run(step, jnp.zeros((1,), jnp.float32), 3, mesh=mesh,
+                      thread_queue=True, return_queue=True, queue_reply=16)
+assert float(final[0]) == 3.0
+# step i on device d enqueued (i + d)^2; tickets are the epoch order 0..2
+got = [[int(q.result(d, t)) for t in range(3)] for d in range(2)]
+assert got == [[0, 1, 4], [1, 4, 9]], got
+print("MESH_REPLY_OK")
+""", devices=2)
+    assert "MESH_REPLY_OK" in out
+
+
+# ---------------------------------------------------------------------------
 # Sharded paged KV cache (serving conversion)
 # ---------------------------------------------------------------------------
 
