@@ -1,0 +1,26 @@
+"""GPU-First Sanitizer: static hazard analysis + runtime shadow checks.
+
+Two complementary halves of the §5.3 porting-advisor direction:
+
+* the STATIC half (:func:`analyze`, :mod:`repro.analysis.lint`) runs a
+  program under an event capture — optionally re-tracing it for the jaxpr
+  walker — and reports transport/heap hazards before you trust a run:
+  ticket lifecycle, capacity proofs, pointer safety, performance lints
+  (see :mod:`repro.analysis.model` for the taxonomy);
+* the RUNTIME half (``expand(sanitize=True)`` / ``RpcQueue(
+  sanitize=True)``, surfaced here via :mod:`repro.analysis.sanitize`)
+  plants canaries and poison patterns in the live transport and counts
+  violations in :func:`repro.core.rpc.sanitize_stats`.
+"""
+from repro.analysis.capture import Capture, analyze, capture
+from repro.analysis.model import (ALL_CODES, Hazard, HazardReport,
+                                  CAPACITY_CODES, PERF_CODES,
+                                  POINTER_CODES, TICKET_CODES)
+from repro.analysis.rules import analyze_events
+from repro.analysis.walker import analyze_jaxpr, walk_jaxpr
+
+__all__ = [
+    "ALL_CODES", "CAPACITY_CODES", "Capture", "Hazard", "HazardReport",
+    "PERF_CODES", "POINTER_CODES", "TICKET_CODES", "analyze",
+    "analyze_events", "analyze_jaxpr", "capture", "walk_jaxpr",
+]

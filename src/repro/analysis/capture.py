@@ -1,0 +1,110 @@
+"""Event capture: run a program, record what the runtime emitted, judge it.
+
+:func:`capture` subscribes to :mod:`repro.core.events` AND patches the
+public JAX loop combinators (``jax.lax.scan`` / ``fori_loop`` / ``map``)
+so every runtime event traced inside a loop body carries that loop's trip
+count in its scope stack — the capacity model's multiplier.
+``lax.while_loop`` is deliberately NOT patched: a general while loop has
+no static trip count, and the runtime's own loops (``device_run``) already
+declare theirs through ``events.loop_scope``; an unscoped while body
+degrades to under-counting (missed multiplication), never to a false
+positive.
+
+:func:`analyze` is the one-call entry point: run the program under a
+capture, feed the events through the rules, optionally re-trace it for
+the jaxpr walker.  The program RUNS — this is trace-time analysis of real
+Python control flow, which is exactly what makes queue/pointer object
+identities concrete.  Programs already jitted-and-cached before the
+capture may emit nothing (JAX will not re-trace them); analyze in a fresh
+process (the CLI does) for full coverage.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+
+from repro.core import events
+from repro.analysis.model import HazardReport
+from repro.analysis.rules import analyze_events
+from repro.analysis.walker import analyze_jaxpr
+
+
+@dataclasses.dataclass
+class Capture:
+    events: List[dict] = dataclasses.field(default_factory=list)
+
+    def report(self) -> HazardReport:
+        return analyze_events(self.events)
+
+
+def _static_len(xs, length) -> Optional[int]:
+    if length is not None:
+        try:
+            return int(length)
+        except Exception:
+            return None
+    for leaf in jax.tree.leaves(xs):
+        try:
+            return int(leaf.shape[0])
+        except Exception:
+            continue
+    return None
+
+
+@contextlib.contextmanager
+def capture():
+    """Record runtime events (and scope loop combinators) for the body."""
+    orig_scan = jax.lax.scan
+    orig_fori = jax.lax.fori_loop
+    orig_map = jax.lax.map
+
+    def scan(f, init, xs=None, length=None, **kw):
+        with events.loop_scope(_static_len(xs, length)):
+            return orig_scan(f, init, xs, length=length, **kw)
+
+    def fori_loop(lower, upper, body_fun, init_val, **kw):
+        try:
+            trips = max(int(upper) - int(lower), 0)
+        except Exception:
+            trips = None
+        with events.loop_scope(trips):
+            return orig_fori(lower, upper, body_fun, init_val, **kw)
+
+    def lax_map(f, xs, **kw):
+        with events.loop_scope(_static_len(xs, None)):
+            return orig_map(f, xs, **kw)
+
+    cap = Capture()
+    jax.lax.scan, jax.lax.fori_loop, jax.lax.map = scan, fori_loop, lax_map
+    try:
+        with events.record(cap.events):
+            yield cap
+    finally:
+        jax.lax.scan, jax.lax.fori_loop, jax.lax.map = \
+            orig_scan, orig_fori, orig_map
+
+
+def analyze(fn: Callable, *args: Any, jaxpr: Optional[bool] = None,
+            **kwargs: Any) -> HazardReport:
+    """Run ``fn(*args, **kwargs)`` under a capture and report hazards.
+
+    ``jaxpr`` controls the walker pass (callback-placement lints on the
+    traced program): ``True`` requires it, ``False`` skips it, ``None``
+    (default) attempts it and silently skips programs that cannot be
+    re-traced abstractly (host-side branching on outputs, etc.).
+    """
+    with capture() as cap:
+        fn(*args, **kwargs)
+    report = cap.report()
+    if jaxpr is not False:
+        try:
+            walked = analyze_jaxpr(fn, *args, **kwargs)
+        except Exception:
+            if jaxpr:
+                raise
+        else:
+            report = report.merged(walked)
+    return report.deduped()

@@ -1,0 +1,324 @@
+"""Seeded hazard corpus: one tiny program per hazard class, buggy + fixed.
+
+Each :class:`Case` is a self-contained program small enough to run eagerly
+on CPU in milliseconds.  The buggy variants are the analyzer's POSITIVE
+tests (the expected hazard codes are pinned here and in the CI golden
+file ``tests/data/hazard_corpus.json``); every ``*_fixed`` variant is the
+corrected program and must report ZERO hazards — the false-positive
+fence.
+
+This module's own frames are deliberately visible to
+``events._user_site`` (the rest of ``repro/analysis`` is filtered): the
+corpus programs are the linted subject, so hazard sites point INTO this
+file — tests assert the flagged line is the offending enqueue/free/read.
+
+Run modes: ``run`` feeds the event rules only; ``both`` additionally
+re-traces for the jaxpr walker; ``trace`` runs ONLY the walker (used for
+the partitioned-callback case, which must not execute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import allocator
+from repro.core.allocator import SizeClassAllocator
+from repro.core.device_main import HostHook, device_run
+from repro.core.expand import expand
+from repro.core.rpc import REGISTRY, RpcQueue, rpc_call
+
+_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def _echo(x):
+    return np.int32(x)
+
+
+def _note(*args):
+    return None
+
+
+REGISTRY.register("corpus.echo", _echo)
+REGISTRY.register("corpus.note", _note)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    name: str
+    fn: Callable
+    expect: Tuple[str, ...]        # sorted hazard codes the analyzer must find
+    mode: str = "run"              # "run" | "both" | "trace"
+
+
+# -- ticket lifecycle -------------------------------------------------------
+
+def result_before_flush():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(7), returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")      # the runtime warns here too
+        q.result(t, _I32)                    # BUG: no flush yet
+
+
+def result_before_flush_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(7), returns=_I32)
+    q = q.flush()
+    q.result(t, _I32)
+
+
+def never_flushed():
+    q = RpcQueue.create(8, 4, 64)
+    q = q.enqueue("corpus.note", jnp.int32(1))   # BUG: dropped, no flush
+
+
+def never_flushed_fixed():
+    q = RpcQueue.create(8, 4, 64)
+    q = q.enqueue("corpus.note", jnp.int32(1))
+    q.flush()
+
+
+def stale_ticket():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(3), returns=_I32)
+    q = q.flush()
+    q = q.enqueue("corpus.note", jnp.int32(0))
+    q = q.flush()                 # second flush slides the reply window
+    q.result_ok(t, _I32)          # BUG: epoch-0 ticket read after epoch 1
+
+
+def stale_ticket_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(3), returns=_I32)
+    q = q.flush()
+    q.result_ok(t, _I32)          # read inside the ticket's window
+    q = q.enqueue("corpus.note", jnp.int32(0))
+    q.flush()
+
+
+def unguarded_result():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(9), returns=_I32,
+                              where=jnp.array(True))
+    q = q.flush()
+    q.result(t, _I32)             # BUG: dropped record reads as zero
+
+
+def unguarded_result_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(9), returns=_I32,
+                              where=jnp.array(True))
+    q = q.flush()
+    q.result_ok(t, _I32)          # validity mask guards the read
+
+
+# -- capacity proofs --------------------------------------------------------
+
+def capacity_records():
+    q = RpcQueue.create(4, 4, 64)            # 4 records per epoch
+
+    def body(q, x):
+        return q.enqueue("corpus.note", x), x
+
+    q, _ = jax.lax.scan(body, q, jnp.arange(10))   # BUG: 10 > 4
+    q.flush()
+
+
+def capacity_records_fixed():
+    q = RpcQueue.create(16, 4, 64)
+
+    def body(q, x):
+        return q.enqueue("corpus.note", x), x
+
+    q, _ = jax.lax.scan(body, q, jnp.arange(10))
+    q.flush()
+
+
+def capacity_payload():
+    q = RpcQueue.create(64, 4, 32)           # 32 payload words per epoch
+
+    def body(q, x):
+        return q.enqueue("corpus.note", x), jnp.int32(0)
+
+    q, _ = jax.lax.scan(body, q, jnp.zeros((10, 8), jnp.int32))  # BUG: 80
+    q.flush()
+
+
+def capacity_payload_fixed():
+    q = RpcQueue.create(64, 4, 1024)
+
+    def body(q, x):
+        return q.enqueue("corpus.note", x), jnp.int32(0)
+
+    q, _ = jax.lax.scan(body, q, jnp.zeros((10, 8), jnp.int32))
+    q.flush()
+
+
+def capacity_reply():
+    q = RpcQueue.create(64, 4, 64, reply_capacity=4)
+
+    def body(q, x):
+        q, _t = q.enqueue_ticketed("corpus.echo", x, returns=_I32)
+        return q, jnp.int32(0)
+
+    q, _ = jax.lax.scan(body, q, jnp.arange(10))   # BUG: 10 reply words
+    q.flush()
+
+
+def capacity_reply_fixed():
+    q = RpcQueue.create(64, 4, 64, reply_capacity=16)
+
+    def body(q, x):
+        q, _t = q.enqueue_ticketed("corpus.echo", x, returns=_I32)
+        return q, jnp.int32(0)
+
+    q, _ = jax.lax.scan(body, q, jnp.arange(10))
+    q.flush()
+
+
+# -- pointer safety ---------------------------------------------------------
+
+def use_after_free():
+    st = SizeClassAllocator.init(1024)
+    st, p = SizeClassAllocator.malloc(st, jnp.int32(8))
+    st = SizeClassAllocator.free(st, p)
+    allocator.find_obj(st, p)     # BUG: lookup through a freed pointer
+
+
+def use_after_free_fixed():
+    st = SizeClassAllocator.init(1024)
+    st, p = SizeClassAllocator.malloc(st, jnp.int32(8))
+    allocator.find_obj(st, p)
+    SizeClassAllocator.free(st, p)
+
+
+def double_free():
+    st = SizeClassAllocator.init(1024)
+    st, p = SizeClassAllocator.malloc(st, jnp.int32(8))
+    st = SizeClassAllocator.free(st, p)
+    SizeClassAllocator.free(st, p)   # BUG: block may be handed out again
+
+
+def double_free_fixed():
+    st = SizeClassAllocator.init(1024)
+    st, p = SizeClassAllocator.malloc(st, jnp.int32(8))
+    SizeClassAllocator.free(st, p)
+
+
+def oob_ptr():
+    st = SizeClassAllocator.init(1024)
+    allocator.find_obj(st, jnp.int32(4096))   # BUG: outside the arena
+
+
+def oob_ptr_fixed():
+    st = SizeClassAllocator.init(1024)
+    st, p = SizeClassAllocator.malloc(st, jnp.int32(8))
+    allocator.find_obj(st, p)
+
+
+# -- performance lints ------------------------------------------------------
+
+def rpc_in_loop():
+    def body(c, x):
+        r, _ = rpc_call("corpus.echo", x, result_shape=_I32)  # BUG
+        return c + r, x
+
+    jax.lax.scan(body, jnp.int32(0), jnp.arange(5))
+
+
+def rpc_in_loop_fixed():
+    q = RpcQueue.create(8, 4, 64)
+
+    def body(q, x):
+        return q.enqueue("corpus.note", x), x
+
+    q, _ = jax.lax.scan(body, q, jnp.arange(5))
+    q.flush()
+
+
+def callback_in_loop():
+    # same pathology, judged from the traced jaxpr as well ("both" mode)
+    def body(c, x):
+        r, _ = rpc_call("corpus.echo", x, result_shape=_I32)  # BUG
+        return c + r, x
+
+    jax.lax.scan(body, jnp.int32(0), jnp.arange(5))
+
+
+def callback_in_mesh():
+    # walker-only ("trace"): never executed — this placement is the
+    # known XLA abort on real multi-device meshes
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("d",))
+
+    def region(x):
+        r, _ = rpc_call("corpus.echo", x[0], result_shape=_I32)  # BUG
+        return x + r
+
+    return expand(region, mesh, (P("d"),), P("d"))(
+        jnp.zeros((1,), jnp.int32))
+
+
+def hook_never_fires():
+    h = HostHook(extract=lambda step, s: s, host_fn=lambda step, v: None,
+                 every=50)                    # BUG: run is 3 steps
+    device_run(lambda i, s: s + 1.0, jnp.float32(0), 3, hooks=[h])
+
+
+def hook_never_fires_fixed():
+    h = HostHook(extract=lambda step, s: s, host_fn=lambda step, v: None,
+                 every=1)
+    device_run(lambda i, s: s + 1.0, jnp.float32(0), 3, hooks=[h])
+
+
+CASES = (
+    Case("result_before_flush", result_before_flush,
+         ("NEVER_FLUSHED", "RESULT_BEFORE_FLUSH")),
+    Case("result_before_flush_fixed", result_before_flush_fixed, ()),
+    Case("never_flushed", never_flushed, ("NEVER_FLUSHED",)),
+    Case("never_flushed_fixed", never_flushed_fixed, ()),
+    Case("stale_ticket", stale_ticket, ("STALE_TICKET",)),
+    Case("stale_ticket_fixed", stale_ticket_fixed, ()),
+    Case("unguarded_result", unguarded_result, ("UNGUARDED_RESULT",)),
+    Case("unguarded_result_fixed", unguarded_result_fixed, ()),
+    Case("capacity_records", capacity_records, ("CAPACITY_RECORDS",)),
+    Case("capacity_records_fixed", capacity_records_fixed, ()),
+    Case("capacity_payload", capacity_payload, ("CAPACITY_PAYLOAD",)),
+    Case("capacity_payload_fixed", capacity_payload_fixed, ()),
+    Case("capacity_reply", capacity_reply, ("CAPACITY_REPLY",)),
+    Case("capacity_reply_fixed", capacity_reply_fixed, ()),
+    Case("use_after_free", use_after_free, ("USE_AFTER_FREE",)),
+    Case("use_after_free_fixed", use_after_free_fixed, ()),
+    Case("double_free", double_free, ("DOUBLE_FREE",)),
+    Case("double_free_fixed", double_free_fixed, ()),
+    Case("oob_ptr", oob_ptr, ("OOB_PTR",)),
+    Case("oob_ptr_fixed", oob_ptr_fixed, ()),
+    Case("rpc_in_loop", rpc_in_loop, ("RPC_IN_LOOP",)),
+    Case("rpc_in_loop_fixed", rpc_in_loop_fixed, ()),
+    Case("callback_in_loop", callback_in_loop,
+         ("CALLBACK_IN_LOOP", "RPC_IN_LOOP"), mode="both"),
+    Case("callback_in_mesh", callback_in_mesh,
+         ("CALLBACK_IN_MESH",), mode="trace"),
+    Case("hook_never_fires", hook_never_fires, ("HOOK_NEVER_FIRES",)),
+    Case("hook_never_fires_fixed", hook_never_fires_fixed, ()),
+)
+
+
+def run_case(case: Case):
+    """Analyze one corpus case in its declared mode -> HazardReport.
+
+    The buggy programs really do drop records when they run — their
+    RuntimeWarnings are the seeded defect, not noise worth surfacing."""
+    from repro.analysis.capture import analyze
+    from repro.analysis.walker import analyze_jaxpr
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        if case.mode == "trace":
+            return analyze_jaxpr(case.fn)
+        return analyze(case.fn,
+                       jaxpr=(True if case.mode == "both" else False))

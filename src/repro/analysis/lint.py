@@ -1,0 +1,137 @@
+"""Hazard linter CLI.
+
+Usage::
+
+    python -m repro.analysis.lint <module:fn | path/to/file.py[:fn]>
+    python -m repro.analysis.lint --corpus [--golden tests/data/...json]
+
+The first form imports the target (dotted module or a ``.py`` path;
+``fn`` defaults to ``main``), runs it under the event capture and prints
+the hazard report — exit 1 when hazards are found, 0 when clean, 2 on a
+load/run error.  Run it under ``JAX_PLATFORMS=cpu`` for a hermetic lint.
+
+``--corpus`` runs the builtin seeded-hazard corpus
+(:mod:`repro.analysis.corpus`) and checks every case against its pinned
+expectation; ``--golden FILE`` checks against a JSON golden file instead
+(CI pins ``tests/data/hazard_corpus.json``), and ``--write-golden FILE``
+regenerates it.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import json
+import sys
+from typing import Callable
+
+from repro.analysis.capture import analyze
+from repro.analysis.model import HazardReport
+
+
+def _load_target(target: str) -> Callable:
+    mod_name, _, fn_name = target.partition(":")
+    fn_name = fn_name or "main"
+    if mod_name.endswith(".py") or "/" in mod_name:
+        spec = importlib.util.spec_from_file_location("_lint_target",
+                                                      mod_name)
+        if spec is None or spec.loader is None:
+            raise ImportError(f"cannot load {mod_name!r}")
+        module = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(module)
+    else:
+        module = importlib.import_module(mod_name)
+    fn = getattr(module, fn_name, None)
+    if not callable(fn):
+        raise ImportError(f"{target!r} is not a callable "
+                          f"({mod_name}:{fn_name})")
+    return fn
+
+
+def _run_corpus(golden: str, write_golden: str, as_json: bool) -> int:
+    from repro.analysis import corpus
+    actual = {}
+    for case in corpus.CASES:
+        actual[case.name] = corpus.run_case(case).codes
+    if write_golden:
+        with open(write_golden, "w") as f:
+            json.dump({"cases": actual}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {write_golden} ({len(actual)} cases)")
+        return 0
+    if golden:
+        with open(golden) as f:
+            expected = json.load(f)["cases"]
+    else:
+        expected = {c.name: sorted(c.expect) for c in corpus.CASES}
+    failures = []
+    for name, codes in sorted(actual.items()):
+        want = sorted(expected.get(name, []))
+        if codes != want:
+            failures.append((name, want, codes))
+    if as_json:
+        print(json.dumps({"cases": actual,
+                          "failures": [list(f) for f in failures]},
+                         indent=2, sort_keys=True))
+    else:
+        for name, want, got in failures:
+            print(f"MISMATCH {name}: expected {want}, found {got}")
+        print(f"corpus: {len(actual) - len(failures)}/{len(actual)} "
+              "cases match")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="GPU-First hazard linter")
+    parser.add_argument("target", nargs="?",
+                        help="module:fn or path/to/file.py[:fn] "
+                             "(fn defaults to main)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit the report as JSON")
+    parser.add_argument("--jaxpr", action="store_true",
+                        help="require the jaxpr walker pass")
+    parser.add_argument("--no-jaxpr", action="store_true",
+                        help="skip the jaxpr walker pass")
+    parser.add_argument("--corpus", action="store_true",
+                        help="lint the builtin seeded-hazard corpus")
+    parser.add_argument("--golden", default="",
+                        help="with --corpus: JSON golden file to check")
+    parser.add_argument("--write-golden", default="",
+                        help="with --corpus: regenerate the golden file")
+    args = parser.parse_args(argv)
+
+    if args.corpus:
+        return _run_corpus(args.golden, args.write_golden, args.as_json)
+    if not args.target:
+        parser.print_usage(sys.stderr)
+        return 2
+
+    try:
+        fn = _load_target(args.target)
+    except Exception as exc:
+        print(f"error: cannot load {args.target!r}: {exc}",
+              file=sys.stderr)
+        return 2
+    jaxpr = True if args.jaxpr else (False if args.no_jaxpr else None)
+    try:
+        report = analyze(fn, jaxpr=jaxpr)
+    except Exception as exc:
+        print(f"error: {args.target!r} failed under analysis: {exc!r}",
+              file=sys.stderr)
+        return 2
+    _print_report(args.target, report, args.as_json)
+    return 1 if report else 0
+
+
+def _print_report(target: str, report: HazardReport,
+                  as_json: bool) -> None:
+    if as_json:
+        print(report.to_json())
+    else:
+        print(f"{target}: {report.summary()}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

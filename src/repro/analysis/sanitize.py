@@ -1,0 +1,52 @@
+"""Runtime-sanitizer helpers riding the transport's shadow checks.
+
+The heavy lifting lives in :mod:`repro.core.rpc` (canary words around
+payload reservations, poison scans at flush, the ``_SAN`` counters) and is
+switched on per-queue (``RpcQueue.create(..., sanitize=True)``) or
+per-region (``expand(..., sanitize=True)``).  This module adds the heap
+side — :func:`poison_free`, a drop-in ``free`` that stamps the freed
+block's words with the poison pattern inside a device buffer, so a record
+that marshals the stale bytes later is caught by the flush-time scan —
+and re-exports the counters so analysis-layer users never import the
+transport internals.
+
+Counters (``sanitize_stats()``):
+
+``canary_stomps``       — payload reservation over/underran its bracket.
+``poison_hits``         — freed-pattern words delivered in a payload.
+``uaf_marshals``        — ``ArenaRef`` resolved against a freed/unknown
+                          block at dispatch time.
+``stale_ticket_reads``  — host-side reply read outside the live window.
+``epochs``              — per-flush record/payload audit trail.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.rpc import (CANARY, POISON, reset_sanitize_stats,
+                            sanitize_stats)
+
+__all__ = ["CANARY", "POISON", "poison_free", "reset_sanitize_stats",
+           "sanitize_stats"]
+
+
+def poison_free(allocator_cls, state, buf, ptr):
+    """Free ``ptr`` in ``state`` AND stamp its words in ``buf`` with the
+    poison pattern.
+
+    ``buf`` is the device buffer the heap offsets index (the arena the
+    program marshals payloads from).  Returns ``(state', buf')``.  A
+    use-after-free that copies the stale region into an RPC payload then
+    trips ``poison_hits`` at the sanitized flush — the runtime twin of the
+    analyzer's static ``USE_AFTER_FREE``.
+
+    The block's extent comes from ``find_obj`` BEFORE the free; an unknown
+    pointer poisons nothing (the free itself is still attempted, so the
+    allocator's own validity handling applies).
+    """
+    found, base, size = allocator_cls.find_obj(state, ptr)
+    state = allocator_cls.free(state, ptr)
+    idx = jnp.arange(buf.shape[0])
+    inside = found & (idx >= base) & (idx < base + size)
+    buf = jnp.where(inside, jnp.asarray(POISON, buf.dtype), buf)
+    return state, buf

@@ -1,0 +1,128 @@
+"""Recursive jaxpr descent: host-callback placement lints.
+
+The event rules see what the runtime EMITS; the walker sees what the traced
+program actually CONTAINS — every ``io_callback``/``pure_callback``
+primitive, wherever jit/scan/while/cond/shard_map nesting put it.  It
+flags the two placements the paper's architecture exists to avoid:
+
+* ``CALLBACK_IN_LOOP`` — a callback inside a ``scan``/``while`` body that
+  is NOT confined to a ``cond`` branch: it synchronizes with the host
+  every iteration (the Fig. 7 pathology, jaxpr edition).  A callback in a
+  taken branch (``device_run``'s immediate hooks) is exempt — firing is
+  data-dependent, the analyzer cannot bound it better than the declared
+  hook period.
+* ``CALLBACK_IN_MESH`` — a callback inside a ``shard_map``-partitioned
+  subprogram: XLA refuses to lower the gathered operand (the known abort
+  case); the runtime's answer is per-device queue shards drained at the
+  program boundary.
+
+Sites come from the equation's ``source_info`` (the first frame outside
+JAX), so a finding points at the user line that planted the callback.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.extend.core import ClosedJaxpr, Jaxpr
+
+from repro.analysis.model import Hazard, HazardReport
+
+CALLBACK_PRIMS = frozenset({
+    "io_callback", "pure_callback", "python_callback", "callback"})
+LOOP_PRIMS = frozenset({"scan", "while"})
+MESH_PRIMS = frozenset({"shard_map", "pmap", "xla_pmap"})
+COND_PRIMS = frozenset({"cond"})
+
+
+def _eqn_site(eqn) -> str:
+    """``file:line`` of the frame that planted this equation — the first
+    frame outside BOTH the JAX internals (jax's own filtering) and this
+    runtime (``repro/core``), so the lint blames user code, not the
+    ``rpc_call`` implementation."""
+    try:
+        from jax._src import source_info_util
+        first = None
+        for frame in source_info_util.user_frames(eqn.source_info):
+            site = f"{frame.file_name}:{frame.start_line}"
+            if first is None:
+                first = site
+            fn = (frame.file_name or "").replace("\\", "/")
+            if "/repro/core/" in fn:
+                continue
+            return site
+        if first is not None:
+            return first
+    except Exception:
+        pass
+    return "<unknown>"
+
+
+def _callback_name(eqn) -> str:
+    cb = eqn.params.get("callback")
+    for attr in ("__name__", "func"):
+        cb = getattr(cb, attr, cb)
+    name = getattr(cb, "__name__", None)
+    return name if isinstance(name, str) else str(eqn.primitive.name)
+
+
+def _sub_jaxprs(eqn):
+    """Every (Closed)Jaxpr reachable from this equation's params."""
+    for val in eqn.params.values():
+        stack = [val]
+        while stack:
+            v = stack.pop()
+            if isinstance(v, (tuple, list)):
+                stack.extend(v)
+            elif isinstance(v, ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, Jaxpr):
+                yield v
+
+
+def walk_jaxpr(jaxpr, report: Optional[HazardReport] = None, *,
+               in_loop: bool = False, in_cond: bool = False,
+               in_mesh: bool = False) -> HazardReport:
+    """Collect callback-placement hazards from ``jaxpr`` (a ``Jaxpr`` or
+    ``ClosedJaxpr``) and every subprogram under it."""
+    if report is None:
+        report = HazardReport()
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        prim = eqn.primitive.name
+        if prim in CALLBACK_PRIMS:
+            site = _eqn_site(eqn)
+            name = _callback_name(eqn)
+            if in_mesh:
+                report.add(Hazard.make(
+                    "CALLBACK_IN_MESH",
+                    f"host callback {name!r} inside a partitioned "
+                    "(shard_map) program — XLA cannot lower the gathered "
+                    "operand; drain a per-device queue at the program "
+                    "boundary instead",
+                    site, callback=name))
+            if in_loop and not in_cond:
+                report.add(Hazard.make(
+                    "CALLBACK_IN_LOOP",
+                    f"host callback {name!r} runs every iteration of an "
+                    "enclosing loop — batch through an RpcQueue and "
+                    "flush once",
+                    site, callback=name))
+            continue
+        child_loop = in_loop or prim in LOOP_PRIMS
+        if prim in LOOP_PRIMS:
+            # a cond OUTSIDE the loop does not confine what's INSIDE it
+            child_cond = False
+        else:
+            child_cond = in_cond or prim in COND_PRIMS
+        child_mesh = in_mesh or prim in MESH_PRIMS
+        for sub in _sub_jaxprs(eqn):
+            walk_jaxpr(sub, report, in_loop=child_loop,
+                       in_cond=child_cond, in_mesh=child_mesh)
+    return report
+
+
+def analyze_jaxpr(fn, *args, **kwargs) -> HazardReport:
+    """Trace ``fn(*args, **kwargs)`` (no execution) and walk the result."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return walk_jaxpr(closed).deduped()

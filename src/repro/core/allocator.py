@@ -92,6 +92,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import events
+
 I32 = jnp.int32
 U32 = jnp.uint32
 FAIL = jnp.int32(-1)
@@ -107,6 +109,22 @@ NCLASSES = 32
 # ---------------------------------------------------------------------------
 # Vectorized primitives shared by all allocators
 # ---------------------------------------------------------------------------
+
+def _concrete_int(x):
+    """``int(x)`` when ``x`` is a concrete scalar, else None (tracers,
+    non-scalars) — the analyzer keys pointer identity on the value when it
+    has one and on object identity otherwise."""
+    try:
+        return int(x)
+    except Exception:
+        return None
+
+
+def _emit_heap(kind: str, st, ptr, **data) -> None:
+    """Trace-time heap event for :mod:`repro.core.events` subscribers."""
+    events.emit(kind, ptr_id=id(ptr), ptr=_concrete_int(ptr),
+                heap=getattr(st, "heap_size", None), _refs=(ptr,), **data)
+
 
 def _ceil_log2(x: jax.Array) -> jax.Array:
     """Smallest c with 2**c >= x (x >= 1)."""
@@ -308,10 +326,15 @@ class GenericAllocator:
 
             return lax.cond(can_bump, bump, lambda st: (st, FAIL), st)
 
-        return lax.cond(any_reuse, do_reuse, do_bump, st)
+        st2, ptr = lax.cond(any_reuse, do_reuse, do_bump, st)
+        if events.active():
+            _emit_heap("heap_malloc", st, ptr, size=_concrete_int(size))
+        return st2, ptr
 
     @staticmethod
     def free(st: GenericState, ptr) -> GenericState:
+        if events.active():
+            _emit_heap("heap_free", st, ptr)
         ptr = jnp.asarray(ptr, I32)
         valid = (ptr >= 0) & (ptr < st.heap_size)
         hit, idx = _sorted_exact(st.offsets, st.in_use, st.count, ptr)
@@ -414,8 +437,13 @@ class SizeClassAllocator:
     fragmented heap stops failing allocations whose bytes exist but sit in
     adjacent holes.  A merged run that ends at the watermark is reclaimed
     entirely (so freeing EVERYTHING restores the fresh-arena state: one
-    full-capacity heap, count 0, watermark 0).  Reuse still hands out the
-    whole hole (no splitting — bounded internal fragmentation, as before).
+    full-capacity heap, count 0, watermark 0).
+
+    **Splitting** (v4): reuse of an oversized hole no longer hands out the
+    whole block — :meth:`_take_entry` keeps at most one size class above
+    the request and re-bins the remainder as a fresh free entry, so
+    internal fragmentation on the reuse path is bounded by one size class
+    (coalescing merges the split halves back when both free).
     """
 
     @staticmethod
@@ -498,7 +526,10 @@ class SizeClassAllocator:
         Dispatched through a module-level ``jax.jit`` (inlined when already
         under jit): an EAGER ``lax.cond`` re-traces its branches every
         call, and the retry branch carries the whole coalesce pass."""
-        return _sizeclass_malloc_jit(st, jnp.asarray(size, I32))
+        st2, ptr = _sizeclass_malloc_jit(st, jnp.asarray(size, I32))
+        if events.active():
+            _emit_heap("heap_malloc", st, ptr, size=_concrete_int(size))
+        return st2, ptr
 
     @staticmethod
     def _malloc_with_retry(st: SizeClassState, size
@@ -510,6 +541,64 @@ class SizeClassAllocator:
             lambda s: SizeClassAllocator._malloc_fallback(
                 SizeClassAllocator.coalesce(s), size),
             lambda s: (st1, ptr), st)
+
+    @staticmethod
+    def _take_entry(st: SizeClassState, e, size
+                    ) -> Tuple[SizeClassState, jax.Array]:
+        """Claim free entry ``e`` for a ``size``-word request, SPLITTING the
+        block when its capacity overshoots the request's size class: the
+        caller keeps ``min(cap_e, 2^ceil_log2(size))`` words (internal
+        fragmentation bounded by one size class) and the remainder becomes
+        a fresh free entry at ``e + 1`` — the table stays offset-sorted
+        because the remainder starts inside the old block — re-binned under
+        its own (smaller) class.  Splitting is skipped when the table is
+        full; the whole hole is handed out, as before."""
+        size = jnp.asarray(size, I32)
+        cap = st.offsets.shape[0]
+        e = jnp.asarray(e, I32)
+        blk = st.caps[e]
+        keep = jnp.minimum(
+            blk, jnp.maximum(size, I32(1) << _ceil_log2(size)))
+        rem = blk - keep
+        do_split = (rem > 0) & (st.count < cap)
+
+        def plain(st):
+            c = _floor_log2(jnp.maximum(st.caps[e], 1))
+            w, b = e // 32, e % 32
+            word = st.free_bits[c, w] & ~(U32(1) << b.astype(U32))
+            return dataclasses.replace(
+                st,
+                sizes=st.sizes.at[e].set(size),
+                in_use=st.in_use.at[e].set(1),
+                free_bits=st.free_bits.at[c, w].set(word))
+
+        def split(st):
+            idx = jnp.arange(cap)
+            up = idx > e + 1
+            new = idx == e + 1
+            src = jnp.clip(idx - 1, 0, cap - 1)
+
+            def shifted(a, ins):
+                return jnp.where(up, a[src], jnp.where(new, ins, a))
+
+            offsets = shifted(st.offsets, st.offsets[e] + keep)
+            sizes = shifted(st.sizes, 0).at[e].set(size)
+            caps = shifted(st.caps.at[e].set(keep), rem)
+            in_use = shifted(st.in_use, 0).at[e].set(1)
+            count = st.count + 1
+            # every bit index >= e+1 moved, so rebuild the bins wholesale
+            # (coalesce-style: each entry owns one bit of its class cell)
+            is_free = (idx < count) & (in_use == 0)
+            c_e = _floor_log2(jnp.maximum(caps, 1))
+            contrib = jnp.where(is_free, U32(1) << (idx % 32).astype(U32),
+                                U32(0))
+            free_bits = jnp.zeros_like(st.free_bits).at[
+                c_e, idx // 32].add(contrib)
+            return dataclasses.replace(
+                st, offsets=offsets, sizes=sizes, caps=caps, in_use=in_use,
+                free_bits=free_bits, count=count)
+
+        return lax.cond(do_split, split, plain, st), st.offsets[e]
 
     @staticmethod
     def _malloc_fallback(st: SizeClassState, size
@@ -525,18 +614,9 @@ class SizeClassAllocator:
         has_fit = jnp.any(ok)
         ei = jnp.argmax(ok).astype(I32)
 
-        def take(st):
-            c = _floor_log2(jnp.maximum(st.caps[ei], 1))
-            w, b = ei // 32, ei % 32
-            word = st.free_bits[c, w] & ~(U32(1) << b.astype(U32))
-            return dataclasses.replace(
-                st,
-                sizes=st.sizes.at[ei].set(size),
-                in_use=st.in_use.at[ei].set(1),
-                free_bits=st.free_bits.at[c, w].set(word)), st.offsets[ei]
-
         return lax.cond(
-            has_fit, take,
+            has_fit,
+            lambda s: SizeClassAllocator._take_entry(s, ei, size),
             lambda s: SizeClassAllocator._malloc_once(s, size), st)
 
     @staticmethod
@@ -560,12 +640,7 @@ class SizeClassAllocator:
             (st.count < cap)
 
         def reuse(st):
-            return dataclasses.replace(
-                st,
-                sizes=st.sizes.at[e].set(size),
-                in_use=st.in_use.at[e].set(1),
-                free_bits=st.free_bits.at[c, w].set(word ^ low)), \
-                st.offsets[e]
+            return SizeClassAllocator._take_entry(st, e, size)
 
         def bump_path(st):
             def bump(st):
@@ -585,6 +660,8 @@ class SizeClassAllocator:
 
     @staticmethod
     def free(st: SizeClassState, ptr) -> SizeClassState:
+        if events.active():
+            _emit_heap("heap_free", st, ptr)
         ptr = jnp.asarray(ptr, I32)
         valid = (ptr >= 0) & (ptr < st.heap_size)
         hit, idx = _sorted_exact(st.offsets, st.in_use, st.count, ptr)
@@ -1238,6 +1315,8 @@ _ALLOCATORS[ShardedHeap] = ShardedAllocator
 def find_obj(state, ptr) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """The paper's ``_FindObj`` over any allocator state — the O(log cap)
     sorted-index path the RPC ``ArenaRef`` marshalling rides."""
+    if events.active():
+        _emit_heap("ptr_lookup", state, ptr)
     return allocator_for(state).find_obj(state, ptr)
 
 

@@ -57,6 +57,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import events
 from repro.core.expand import _team_env
 from repro.core.jax_compat import shard_map
 from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue, rpc_call
@@ -122,7 +123,11 @@ def _fire(hook: HostHook, hname: str, step, state):
         return r
 
     should = (step % hook.every == 0) & (step > 0)
-    return lax.cond(should, yes, lambda _: jnp.int32(0), 0)
+    # cond_scope declares the RPC fires once per `every` loop iterations —
+    # the analyzer's capacity model divides through it, and the
+    # RPC-in-loop lint exempts the taken-branch-only callback
+    with events.cond_scope(int(hook.every)):
+        return lax.cond(should, yes, lambda _: jnp.int32(0), 0)
 
 
 def _fire_batched(hook: HostHook, hname: str, step, state,
@@ -131,7 +136,8 @@ def _fire_batched(hook: HostHook, hname: str, step, state,
     payload = hook.extract(step, state)
     leaves = jax.tree.leaves(payload)
     should = (step % hook.every == 0) & (step > 0)
-    return q.enqueue(hname, step, *leaves, where=should)
+    with events.cond_scope(int(hook.every)):
+        return q.enqueue(hname, step, *leaves, where=should)
 
 
 def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
@@ -183,6 +189,11 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
     live in the queue shards, not the carry).
     """
     named = [(h, _register_hook(h)) for h in hooks]
+    if events.active():
+        for h, hname in named:
+            events.emit("hook_decl", name=hname, every=int(h.every),
+                        n_steps=int(n_steps), batched=bool(h.batched),
+                        mesh=mesh is not None)
     try:
         if mesh is not None:
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
@@ -217,8 +228,9 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
 
                 q0 = RpcQueue.create(queue_capacity, queue_width,
                                      queue_payload, queue_reply)
-                _, final, q = lax.while_loop(
-                    cond, body, (jnp.zeros((), jnp.int32), state, q0))
+                with events.loop_scope(int(n_steps)):
+                    _, final, q = lax.while_loop(
+                        cond, body, (jnp.zeros((), jnp.int32), state, q0))
                 q = q.flush()
                 if return_queue:
                     return final, q
@@ -230,8 +242,9 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                         _fire(h, hname, step + 1, state)
                     return (step + 1, state)
 
-                _, final = lax.while_loop(
-                    cond, body, (jnp.zeros((), jnp.int32), state))
+                with events.loop_scope(int(n_steps)):
+                    _, final = lax.while_loop(
+                        cond, body, (jnp.zeros((), jnp.int32), state))
             return final
 
         return program(state)
@@ -270,8 +283,9 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
                     lq = _fire_batched(h, hname, step + 1, st, lq)
                 return (step + 1, st, lq)
 
-            _, final, lq = lax.while_loop(
-                cond, body, (jnp.zeros((), jnp.int32), state, lq))
+            with events.loop_scope(int(n_steps)):
+                _, final, lq = lax.while_loop(
+                    cond, body, (jnp.zeros((), jnp.int32), state, lq))
         return final, q.with_local(lq)
 
     program = jax.jit(shard_map(

@@ -1,0 +1,146 @@
+"""Trace-time instrumentation seam for the static analyzer (§5.3 tooling).
+
+The runtime (``rpc``, ``allocator``, ``device_main``, ``expand``) emits
+lightweight EVENTS at trace/dispatch time — enqueues, flushes, ticket reads,
+heap ops, immediate RPC issues — and the analysis layer
+(:mod:`repro.analysis`) subscribes to them while it traces a program.  The
+dependency points one way only: core emits through this module and never
+imports ``repro.analysis``; when nothing subscribes, :func:`emit` is a
+single attribute check and the runtime pays nothing.
+
+Events carry three things the rules need and the jaxpr alone cannot give:
+
+* **call sites** — the innermost stack frame OUTSIDE the runtime (user code,
+  or the driver layer that issued the RPC), so a hazard points at the
+  offending enqueue/free, not at ``rpc.py``;
+* **scope context** — the stack of enclosing loop/conditional regions at
+  emit time.  ``loop_scope(trips)`` marks a trace region whose emissions
+  execute ``trips`` times per outer execution (``device_run`` wraps its
+  step loop, the analyzer's capture patches ``lax.scan``/``lax.fori_loop``);
+  ``cond_scope(period)`` marks a conditionally-executed region (a
+  ``lax.cond`` branch, or a ``where=`` enqueue that statistically fires
+  every ``period`` iterations).  The capacity model multiplies/divides
+  through this stack to bound worst-case records per epoch, and the
+  RPC-in-loop lint exempts callbacks that only live in a taken branch;
+* **object identity** — ``id()`` of the queue/ticket/pointer objects
+  flowing through the program, so lineages (queue -> enqueue -> flush)
+  and pointer lifetimes (malloc -> free -> marshal) chain across pure
+  functional updates.  Captures hold strong references to every object an
+  event names (``_refs``), so a recycled ``id()`` can never alias two
+  distinct objects within one capture.
+
+Scope frames are ``(kind, uid, value)`` tuples: ``("loop", n, trips)`` with
+``trips`` an int or None (statically unbounded), and ``("cond", n, period)``
+with ``period`` an int >= 1 or None (plain conditional).  ``uid`` makes
+frames identity-comparable so a flush and an enqueue sharing the same
+enclosing loop instance can be recognized (per-iteration epochs).
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import threading
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+ScopeFrame = Tuple[str, int, Optional[int]]
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.sinks: List[list] = []
+        self.stack: List[ScopeFrame] = []
+        self.uids = itertools.count()
+
+
+_S = _State()
+
+
+def active() -> bool:
+    """True iff at least one capture is recording on this thread."""
+    return bool(_S.sinks)
+
+
+def _user_site() -> str:
+    """Innermost stack frame outside the runtime and JAX internals.
+
+    The analyzer's seeded-hazard corpus (``repro/analysis/corpus.py``) is
+    deliberately NOT filtered — its programs are the linted subject, so
+    their frames are the hazard sites the golden file pins down.
+    """
+    for fr in reversed(traceback.extract_stack()):
+        fn = (fr.filename or "").replace("\\", "/")
+        if not fn or fn.startswith("<"):
+            continue
+        if "/repro/analysis/" in fn and not fn.endswith("corpus.py"):
+            continue
+        if "/repro/core/" in fn:
+            continue
+        if "/jax/" in fn or "/jaxlib/" in fn:
+            continue
+        if fn.endswith(("/contextlib.py", "/functools.py", "/threading.py",
+                        "/runpy.py")):
+            continue
+        return f"{fn}:{fr.lineno}"
+    return "<unknown>"
+
+
+def emit(kind: str, _refs: Tuple = (), **data: Any) -> None:
+    """Record one event on every active capture (no-op when none).
+
+    ``_refs`` are objects the event names by ``id()`` — the capture keeps
+    them alive so identities stay unique for the capture's lifetime.
+    """
+    if not _S.sinks:
+        return
+    ev: Dict[str, Any] = {"kind": kind, "site": _user_site(),
+                          "scopes": tuple(_S.stack)}
+    ev.update(data)
+    if _refs:
+        ev["_refs"] = tuple(_refs)
+    for sink in _S.sinks:
+        sink.append(ev)
+
+
+@contextlib.contextmanager
+def record(sink: list):
+    """Subscribe ``sink`` (a plain list) to this thread's events."""
+    _S.sinks.append(sink)
+    try:
+        yield sink
+    finally:
+        _S.sinks.remove(sink)
+
+
+@contextlib.contextmanager
+def loop_scope(trips: Optional[int]):
+    """Mark a trace region whose body executes ``trips`` times per outer
+    execution (None = statically unbounded)."""
+    frame = ("loop", next(_S.uids),
+             None if trips is None else max(int(trips), 0))
+    _S.stack.append(frame)
+    try:
+        yield
+    finally:
+        _S.stack.pop()
+
+
+@contextlib.contextmanager
+def cond_scope(period: Optional[int] = None):
+    """Mark a conditionally-executed trace region.  ``period`` (optional)
+    declares the region fires at most once every ``period`` iterations of
+    the innermost enclosing loop — ``device_run`` hooks pass their
+    ``every`` so the capacity model divides instead of assuming
+    fires-every-step."""
+    frame = ("cond", next(_S.uids),
+             None if period is None else max(int(period), 1))
+    _S.stack.append(frame)
+    try:
+        yield
+    finally:
+        _S.stack.pop()
+
+
+def scopes() -> Tuple[ScopeFrame, ...]:
+    """Snapshot of the current scope stack (innermost last)."""
+    return tuple(_S.stack)

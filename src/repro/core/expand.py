@@ -51,6 +51,7 @@ result flowing back is the host-RPC completion of Fig. 4.
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import functools
 import threading
 from typing import Callable, Optional, Sequence, Tuple
@@ -69,20 +70,24 @@ class _Env(threading.local):
         self.heap = None                     # this device's allocator shard
         self.queue = None                    # this device's RPC queue shard
         self.span: Optional[int] = None      # global-pointer stride
+        self.sanitize: bool = False          # region runs sanitized transport
 
 
 _ENV = _Env()
 
 
 @contextlib.contextmanager
-def _team_env(axes: Tuple[str, ...], lanes: int):
-    old = (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span)
+def _team_env(axes: Tuple[str, ...], lanes: int, sanitize: bool = False):
+    old = (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span,
+           _ENV.sanitize)
     _ENV.axes, _ENV.lanes = axes, lanes
     _ENV.heap = _ENV.queue = _ENV.span = None
+    _ENV.sanitize = sanitize
     try:
         yield
     finally:
-        (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span) = old
+        (_ENV.axes, _ENV.lanes, _ENV.heap, _ENV.queue, _ENV.span,
+         _ENV.sanitize) = old
 
 
 # ---------------------------------------------------------------------------
@@ -194,9 +199,30 @@ def team_ptr(local_ptr):
 # Expansion
 # ---------------------------------------------------------------------------
 
+def _with_sanitize(q):
+    """The sharded queue object with its transport ``sanitize`` flag set.
+
+    Understands a :class:`~repro.core.rpc.ShardedRpcQueue` (flag lives on
+    the inner ``RpcQueue``) or a bare ``RpcQueue``; anything else (e.g. a
+    sharded ``LogRing``) is returned unchanged — it has no sanitized path.
+    Flip the flag only on queues that have NOT enqueued yet: the sanitized
+    payload layout brackets every reservation with canary words, so records
+    enqueued before the flip would be checked against canaries they never
+    wrote.
+    """
+    inner = getattr(q, "q", None)
+    if inner is not None and hasattr(inner, "sanitize"):
+        return dataclasses.replace(
+            q, q=dataclasses.replace(inner, sanitize=True))
+    if hasattr(q, "sanitize"):
+        return dataclasses.replace(q, sanitize=True)
+    return q
+
+
 def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
            lanes: int = 1, check_vma: bool = False,
-           heap: bool = False, queue: bool = False) -> Callable:
+           heap: bool = False, queue: bool = False,
+           sanitize: bool = False) -> Callable:
     """Rewrite single-team ``fn`` for multi-team execution over ``mesh``.
 
     Inside ``fn`` the single-team primitives report *global* coordinates.
@@ -212,6 +238,16 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
     ``LogRing``) are partitioned one shard per device; inside ``fn``,
     :func:`team_heap` / :func:`team_queue` read this device's shard and
     :func:`set_team_heap` / :func:`set_team_queue` write it back.
+
+    ``sanitize=True`` turns on the runtime sanitizer for the region: the
+    incoming RPC queue (when ``queue=True``) is switched to the sanitized
+    transport — canary words bracket every payload reservation and freed-
+    pattern scans run at flush — and misuse shows up in named
+    :func:`repro.core.rpc.sanitize_stats` counters.  On hazard-free
+    programs the region's outputs and delivered host records are
+    bit-identical to ``sanitize=False``; only queue-internal arena layout
+    differs.  Pass a queue that has not enqueued yet (see
+    :func:`_with_sanitize`).
     """
     axes = tuple(mesh.axis_names)
     n_extra = int(heap) + int(queue)
@@ -220,7 +256,7 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
         @functools.wraps(fn)
         def wrapped(*args):
             def body(*shard_args):
-                with _team_env(axes, lanes):
+                with _team_env(axes, lanes, sanitize):
                     return fn(*shard_args)
             return shard_map(body, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=check_vma)(*args)
@@ -236,10 +272,14 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
         assert len(call_args) >= n_extra, \
             f"expand(heap={heap}, queue={queue}) expects the sharded " \
             f"state as the leading {n_extra} argument(s)"
+        if queue and sanitize:
+            qi = int(heap)
+            call_args = call_args[:qi] + \
+                (_with_sanitize(call_args[qi]),) + call_args[qi + 1:]
 
         def body(*shard_args):
             extra, rest = shard_args[:n_extra], shard_args[n_extra:]
-            with _team_env(axes, lanes):
+            with _team_env(axes, lanes, sanitize):
                 i = 0
                 if heap:
                     _ENV.heap = extra[i].local_view()

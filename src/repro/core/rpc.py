@@ -165,6 +165,57 @@ from jax import lax
 from jax.experimental import io_callback
 
 from repro.core import allocator as alloc_mod
+from repro.core import events
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer state (transport side of the GPU-First sanitizer)
+# ---------------------------------------------------------------------------
+
+#: Canary word written immediately before and after every payload-arena
+#: reservation by a ``sanitize=True`` queue; verified at flush.
+CANARY = np.int32(0x7FC0FFEE)
+#: Poison pattern :func:`repro.analysis.sanitize.poison_free` stamps over a
+#: freed heap block's words; a sanitized flush scans payloads for it, so a
+#: freed block marshalled into the transport is caught AT FLUSH even though
+#: the enqueue itself was a pure array copy.
+POISON = np.int32(0x5A5A5A5A)
+
+
+def _zero_san() -> Dict[str, Any]:
+    return {"canary_stomps": 0,     # payload reservations with damaged canaries
+            "poison_hits": 0,       # payloads carrying freed-block POISON words
+            "uaf_marshals": 0,      # ArenaRef marshals whose lookup found no
+            #                         live object (found == 0 at the pad)
+            "stale_ticket_reads": 0,  # results_host reads outside the epoch
+            #                           window on a sanitized queue
+            "epochs": []}           # per-sanitized-flush ticket shadow records
+
+
+_SAN: Dict[str, Any] = _zero_san()
+_SAN_LOCK = threading.Lock()
+
+
+def sanitize_stats() -> Dict[str, Any]:
+    """Snapshot of the runtime sanitizer counters (``sanitize=True`` queues:
+    canary/poison checks at flush, UAF marshal counts, stale ticket reads,
+    and the per-epoch ticket shadow records)."""
+    with _SAN_LOCK:
+        out = dict(_SAN)
+        out["epochs"] = list(out["epochs"])
+        return out
+
+
+def reset_sanitize_stats() -> None:
+    with _SAN_LOCK:
+        _SAN.clear()
+        _SAN.update(_zero_san())
+
+
+def _san_bump(key: str, n: int = 1) -> None:
+    if n:
+        with _SAN_LOCK:
+            _SAN[key] += n
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +485,13 @@ def _make_pad_wrapper(name: str, pad_id: int, sig: Tuple):
                                           for x in flat[pos:pos + 4])
                 arena = flat[pos + 4]
                 pos += 5
+                if int(found) == 0:
+                    # the runtime lookup found no live object under this
+                    # pointer: a freed (or wild) pointer was marshalled.
+                    # Counted unconditionally — the counter is only read
+                    # through sanitize_stats(), so the hot path stays a
+                    # single int compare.
+                    _san_bump("uaf_marshals")
                 copy = np.asarray(arena).copy()
                 call_args.extend([ptr, base, size, found, copy])
                 ref_outs.append((entry[3], arena, copy))
@@ -475,6 +533,12 @@ def _marshal(args) -> Tuple[Tuple, List, List]:
             # runtime object lookup via the allocator tracking table: ship the
             # underlying object as (ptr, base, size, found, arena) — a single
             # level of indirection (§4.1)
+            if events.active():
+                pv = (None if isinstance(a.ptr, jax.core.Tracer)
+                      else int(np.asarray(a.ptr)))
+                events.emit("arena_marshal", _refs=(a.ptr,),
+                            ptr_id=id(a.ptr), ptr=pv,
+                            heap=getattr(a.state, "heap_size", None))
             found, base, size = _find_obj(a.state, a.ptr)
             sig.append((ARENA, tuple(np.shape(a.arena)),
                         str(jnp.result_type(a.arena)), a.access))
@@ -564,6 +628,12 @@ def rpc_call(name: str, *args, result_shape=None, ordered: bool = True,
         raise TypeError("rpc_call() missing required keyword argument "
                         "'result_shape' (only batched=True may omit it)")
 
+    if events.active():
+        # lazy: expand imports nothing from rpc, but keep the one-way import
+        # discipline symmetric with flush's guard below
+        from repro.core.expand import _ENV as _team_env_state
+        events.emit("rpc_immediate", name=name, ordered=ordered, pure=pure,
+                    in_mesh=bool(_team_env_state.axes))
     sig, operands, ref_shapes = _marshal(args)
     if pure:
         writeback = [e for e in sig if e[0] in (REF, ARENA)
@@ -872,6 +942,123 @@ def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
     return rwords, roff, rlen
 
 
+def _san_scan_shard(cap: int, n: int, pmask, ivals, plens, pbuf
+                    ) -> Tuple[int, int, int]:
+    """Verify one shard's surviving payload reservations: canaries intact on
+    both sides of every payload, no freed-block POISON words inside.
+    Returns ``(canary_stomps, poison_hits, payloads_checked)``."""
+    lo = max(0, n - cap)
+    w = ivals.shape[1]
+    stomps = poisons = checked = 0
+    pc = pbuf.shape[0]
+    can = int(CANARY)
+    for j in range(lo, n):
+        k = j % cap
+        pm = int(pmask[k])
+        for t in range(w):
+            if not (pm >> t) & 1:
+                continue
+            off, ln = int(ivals[k, t]), int(plens[k, t])
+            checked += 1
+            if off < 1 or off + ln >= pc:
+                # a sanitized reservation always leaves room for both
+                # canaries; a descriptor outside that shape IS a stomp
+                stomps += 1
+                continue
+            if int(pbuf[off - 1]) != can or int(pbuf[off + ln]) != can:
+                stomps += 1
+            if bool(np.any(pbuf[off:off + ln] == POISON)):
+                poisons += 1
+    return stomps, poisons, checked
+
+
+def _san_record_epoch(records: int, declared: int, stomps: int, poisons: int,
+                      checked: int, sharded: bool) -> None:
+    """Publish one sanitized flush's shadow record + counters."""
+    with _SAN_LOCK:
+        _SAN["canary_stomps"] += stomps
+        _SAN["poison_hits"] += poisons
+        _SAN["epochs"].append({
+            "records": records, "declared_replies": declared,
+            "canary_stomps": stomps, "poison_hits": poisons,
+            "payloads_checked": checked, "sharded": sharded})
+
+
+def _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=None,
+                  sharded: bool = False) -> None:
+    """Host-side sanitizer pass run by the ``_san`` drain variants BEFORE the
+    replay, on the same materialized operands."""
+    pmask, ivals, plens, pbuf = (np.asarray(x)
+                                 for x in (pmask, ivals, plens, pbuf))
+    callee = np.asarray(callee)
+    head = np.asarray(head)
+    stomps = poisons = checked = records = declared = 0
+    if sharded:
+        cap = callee.shape[1]
+        for d in range(callee.shape[0]):
+            n = int(head[d])
+            s, p, c = _san_scan_shard(cap, n, pmask[d], ivals[d], plens[d],
+                                      pbuf[d])
+            stomps += s
+            poisons += p
+            checked += c
+            records += min(n, cap)
+            if rwant is not None:
+                rw = np.asarray(rwant[d])
+                lo = max(0, n - cap)
+                declared += sum(int(rw[j % cap] != 0) for j in range(lo, n))
+    else:
+        cap = callee.shape[0]
+        n = int(head)
+        stomps, poisons, checked = _san_scan_shard(cap, n, pmask, ivals,
+                                                   plens, pbuf)
+        records = min(n, cap)
+        if rwant is not None:
+            rw = np.asarray(rwant)
+            lo = max(0, n - cap)
+            declared = sum(int(rw[j % cap] != 0) for j in range(lo, n))
+    _san_record_epoch(records, declared, stomps, poisons, checked, sharded)
+
+
+def _drain_queue_san(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
+                     head, phead, adrops, overrides=None):
+    """Sanitized variant of :func:`_drain_queue` — same replay, preceded by
+    the canary/poison pass.  A distinct module-level callable so sanitized
+    and plain queues each hand ``io_callback`` ONE stable object."""
+    _san_precheck(callee, pmask, ivals, plens, pbuf, head)
+    return _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens,
+                        pbuf, head, phead, adrops, overrides=overrides)
+
+
+def _drain_queue_replies_san(callee, nargs, imask, pmask, ivals, fvals,
+                             plens, pbuf, rwant, head, phead, adrops, rc,
+                             overrides=None):
+    _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=rwant)
+    return _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf, rwant, head, phead, adrops, rc,
+                                overrides=overrides)
+
+
+def _drain_queue_sharded_san(callee, nargs, imask, pmask, ivals, fvals,
+                             plens, pbuf, head, phead, adrops,
+                             overrides=None):
+    _san_precheck(callee, pmask, ivals, plens, pbuf, head, sharded=True)
+    return _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals,
+                                plens, pbuf, head, phead, adrops,
+                                overrides=overrides)
+
+
+def _drain_queue_sharded_replies_san(callee, nargs, imask, pmask, ivals,
+                                     fvals, plens, pbuf, rwant, head, phead,
+                                     adrops, rc, overrides=None):
+    _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=rwant,
+                  sharded=True)
+    return _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals,
+                                        fvals, plens, pbuf, rwant, head,
+                                        phead, adrops, rc,
+                                        overrides=overrides)
+
+
 def _payload_words(a: jax.Array) -> Tuple[jax.Array, bool]:
     """Flatten an array argument to int32 arena words + its dtype tag
     (True = integer payload, False = float32 payload bitcast to i32)."""
@@ -944,16 +1131,22 @@ class RpcQueue:
     rbase: jax.Array     # () int32 — base of the epoch the reply table
     #                       corresponds to (stamped at flush)
     rcount: jax.Array    # () int32 — records serviced by that flush
+    fonce: jax.Array     # () int32 — 1 once this queue's lineage has flushed
+    #                       (a device leaf, NOT static aux: a mid-loop flush
+    #                       must not change the while_loop carry's treedef)
+    sanitize: bool = False  # static: canary-wrapped payload reservations +
+    #                         sanitized drains (see sanitize_stats())
 
     def tree_flatten(self):
         return ((self.callee, self.nargs, self.imask, self.pmask, self.ivals,
                  self.fvals, self.plens, self.pbuf, self.head, self.phead,
                  self.adrops, self.rwant, self.rbuf, self.roff, self.rlen,
-                 self.base, self.rbase, self.rcount), None)
+                 self.base, self.rbase, self.rcount, self.fonce),
+                bool(self.sanitize))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves)
+        return cls(*leaves, sanitize=bool(aux))
 
     @property
     def capacity(self) -> int:
@@ -974,20 +1167,30 @@ class RpcQueue:
     @staticmethod
     def create(capacity: int = 1024, width: int = 4,
                payload_capacity: int = 1024,
-               reply_capacity: int = 0) -> "RpcQueue":
+               reply_capacity: int = 0,
+               sanitize: bool = False) -> "RpcQueue":
         """``payload_capacity`` is the arena size in 4-byte words shared by
         every payload between two flushes (0 = scalar-only queue: array
         args are rejected at trace time).  ``reply_capacity`` is the REPLY
         arena size in words (0 = fire-and-forget queue: ``returns=`` is
         rejected at trace time, ``flush`` keeps the single-output callback
         of the v3 transport, and the per-slot reply state is sized (0,) so
-        the v3 enqueue/flush hot paths carry no dead weight)."""
+        the v3 enqueue/flush hot paths carry no dead weight).
+
+        ``sanitize=True`` turns on the runtime sanitizer for this queue:
+        every payload reservation is bracketed by :data:`CANARY` words
+        (costing 2 extra arena words per payload — size the arena
+        accordingly) and every flush verifies the canaries and scans
+        payloads for the freed-block :data:`POISON` pattern, publishing
+        findings through :func:`sanitize_stats`.  Delivered records,
+        replies, and program results are bit-identical to an unsanitized
+        queue as long as nothing stomps the arena."""
         if not 0 < width <= 31:
             raise ValueError(
                 f"width must be in [1, 31] to fit the int32 interleave "
                 f"mask; got {width}")
         rslots = capacity if reply_capacity else 0
-        return RpcQueue(
+        q = RpcQueue(
             jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity,), jnp.int32),
             jnp.zeros((capacity,), jnp.int32),
@@ -1005,7 +1208,14 @@ class RpcQueue:
             jnp.zeros((rslots,), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
-            jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            sanitize=bool(sanitize))
+        events.emit("queue_create", _refs=(q,), qid=id(q),
+                    capacity=capacity, width=width,
+                    payload_capacity=payload_capacity,
+                    reply_capacity=reply_capacity, sanitize=bool(sanitize))
+        return q
 
     def enqueue(self, name: str, *args, where=None) -> "RpcQueue":
         """Queue one fire-and-forget RPC to host function ``name`` (pure
@@ -1098,9 +1308,17 @@ class RpcQueue:
                 pm |= 1 << j
                 # descriptor: offset rides the int lane, length in plens —
                 # offsets are the prefix sums of this record's payloads
-                # (one watermark bump reserves them all)
-                iv = iv.at[j].set(self.phead + npay)
+                # (one watermark bump reserves them all).  Under sanitize
+                # each reservation is [CANARY][words][CANARY]: the
+                # descriptor still points at the words (the host decode is
+                # unchanged) and plens stays the true length, so the only
+                # cost is 2 arena words per payload.
+                iv = iv.at[j].set(self.phead + npay +
+                                  (1 if self.sanitize else 0))
                 pl = pl.at[j].set(words.shape[0])
+                if self.sanitize:
+                    cw = jnp.full((1,), CANARY, jnp.int32)
+                    words = jnp.concatenate([cw, words, cw])
                 payloads.append((words, npay))
                 npay += words.shape[0]
             elif jnp.issubdtype(s.dtype, jnp.integer) or \
@@ -1150,7 +1368,7 @@ class RpcQueue:
             pl = jnp.where(keep, pl, self.plens[i])
             step = keep.astype(jnp.int32)
             ticket = jnp.where(keep, self.base + self.head, jnp.int32(-1))
-        return dataclasses.replace(
+        out = dataclasses.replace(
             self,
             callee=self.callee.at[i].set(cid_v),
             nargs=self.nargs.at[i].set(na_v),
@@ -1167,7 +1385,16 @@ class RpcQueue:
             # reply-less queues carry (0,) reply state: no dead scatter on
             # the v3 enqueue hot path
             rwant=(self.rwant.at[i].set(rw_v) if self.rwant.shape[0]
-                   else self.rwant)), ticket
+                   else self.rwant))
+        if events.active():
+            events.emit("rpc_enqueue", _refs=(self, out, ticket),
+                        qid=id(self), qid_out=id(out), name=name,
+                        payload_words=npay, reply_words=abs(rw),
+                        ticketed=returns is not None, ticket_id=id(ticket),
+                        conditional=where is not None, capacity=cap,
+                        payload_capacity=pc,
+                        reply_capacity=self.reply_capacity)
+        return out, ticket
 
     def flush(self, handlers: Optional[Dict[str, Callable]] = None
               ) -> "RpcQueue":
@@ -1213,24 +1440,36 @@ class RpcQueue:
                     "device_run(mesh=) and ShardedRpcQueue.flush on "
                     "concrete shards do.")
         z = jnp.zeros((), jnp.int32)
+        one = jnp.ones_like(self.fonce)
         rc = self.reply_capacity
         if rc:
             cap = self.capacity
             shapes = (jax.ShapeDtypeStruct((rc,), jnp.int32),
                       jax.ShapeDtypeStruct((cap,), jnp.int32),
                       jax.ShapeDtypeStruct((cap,), jnp.int32))
+            drain_fn = (_drain_queue_replies_san if self.sanitize
+                        else _drain_queue_replies)
             rbuf, roff, rlen = io_callback(
-                _bind_drain(_drain_queue_replies, handlers), shapes,
+                _bind_drain(drain_fn, handlers), shapes,
                 *records, self.rwant, *heads, jnp.int32(rc), ordered=True)
-            return dataclasses.replace(self, head=z, phead=z, adrops=z,
-                                       rbuf=rbuf, roff=roff, rlen=rlen,
-                                       base=self.base + self.head,
-                                       rbase=self.base, rcount=self.head)
-        io_callback(_bind_drain(_drain_queue, handlers),
-                    jax.ShapeDtypeStruct((), jnp.int32),
-                    *records, *heads, ordered=True)
-        return dataclasses.replace(self, head=z, phead=z, adrops=z,
-                                   base=self.base + self.head)
+            out = dataclasses.replace(self, head=z, phead=z, adrops=z,
+                                      rbuf=rbuf, roff=roff, rlen=rlen,
+                                      base=self.base + self.head,
+                                      rbase=self.base, rcount=self.head,
+                                      fonce=one)
+        else:
+            drain_fn = _drain_queue_san if self.sanitize else _drain_queue
+            io_callback(_bind_drain(drain_fn, handlers),
+                        jax.ShapeDtypeStruct((), jnp.int32),
+                        *records, *heads, ordered=True)
+            out = dataclasses.replace(self, head=z, phead=z, adrops=z,
+                                      base=self.base + self.head, fonce=one)
+        if events.active():
+            events.emit("rpc_flush", _refs=(self, out), qid=id(self),
+                        qid_out=id(out), capacity=self.capacity,
+                        payload_capacity=self.payload_capacity,
+                        reply_capacity=rc)
+        return out
 
     def result(self, ticket, shape=(), dtype=None) -> jax.Array:
         """Read ticket ``ticket``'s reply from the LAST flush.
@@ -1242,14 +1481,30 @@ class RpcQueue:
         arena overflow, stale ticket from an earlier epoch, or a length
         mismatch — reads as zeros.  Use :meth:`result_ok` for the validity
         mask.  O(1): one dynamic slice of the reply buffer."""
-        return self.result_ok(ticket, shape, dtype)[0]
+        return self.result_ok(ticket, shape, dtype, _via_result=True)[0]
 
-    def result_ok(self, ticket, shape=(), dtype=None
+    def result_ok(self, ticket, shape=(), dtype=None, *, _via_result=False
                   ) -> Tuple[jax.Array, jax.Array]:
         """:meth:`result` plus its validity mask: ``(value, ok)`` where
         ``ok`` is a traced bool — True iff the ticket's slot holds a reply
         of exactly the expected length from the last flush."""
         shape, dtype, nw = self._reply_spec(shape, dtype)
+        never_flushed = None
+        if not isinstance(self.fonce, jax.core.Tracer):
+            f = np.asarray(self.fonce)
+            never_flushed = bool(f.size) and not bool(f.any())
+        if events.active():
+            events.emit("rpc_result", _refs=(self, ticket), qid=id(self),
+                        ticket_id=id(ticket), via_result=_via_result,
+                        never_flushed=never_flushed)
+        if never_flushed:
+            warnings.warn(
+                "RpcQueue.result() on a queue that has NEVER flushed: the "
+                "reply table has never been written, so this read returns "
+                "all-zeros indistinguishable from a real zero reply.  "
+                "Flush the queue before reading tickets (the analyzer "
+                "reports this as RESULT_BEFORE_FLUSH).",
+                RuntimeWarning, stacklevel=3)
         rc = self.reply_capacity
         t = jnp.asarray(ticket, jnp.int32)
         # global ticket -> this reply table's epoch window: a ticket from
@@ -1316,6 +1571,10 @@ class RpcQueue:
             local = t - rbase
             slot = local % self.capacity if local >= 0 else 0
             ok = t >= 0 and 0 <= local < rcount and int(rlen[slot]) == nw
+            if self.sanitize and t >= 0 and not 0 <= local < rcount:
+                # ticket shadow: a live ticket read outside the serviced
+                # epoch's window is a stale (or dropped-epoch) read
+                _san_bump("stale_ticket_reads")
             if ok:
                 words = rbuf[int(roff[slot]):int(roff[slot]) + nw]
                 vals = (words.view(np.float32).astype(np_dtype)
@@ -1386,9 +1645,10 @@ class ShardedRpcQueue:
     @staticmethod
     def create(n_devices: int, capacity: int = 1024, width: int = 4,
                payload_capacity: int = 1024,
-               reply_capacity: int = 0) -> "ShardedRpcQueue":
+               reply_capacity: int = 0,
+               sanitize: bool = False) -> "ShardedRpcQueue":
         q = RpcQueue.create(capacity, width, payload_capacity,
-                            reply_capacity)
+                            reply_capacity, sanitize=sanitize)
         return ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
 
@@ -1399,7 +1659,14 @@ class ShardedRpcQueue:
         assert self.q.callee.shape[0] == 1, \
             "local_view() is only meaningful on a single-device shard " \
             "(inside shard_map); use local(dev) outside"
-        return jax.tree.map(lambda a: a[0], self.q)
+        view = jax.tree.map(lambda a: a[0], self.q)
+        if events.active():
+            events.emit("queue_view", _refs=(view,), qid=id(view),
+                        capacity=view.capacity, width=view.width,
+                        payload_capacity=view.payload_capacity,
+                        reply_capacity=view.reply_capacity,
+                        sanitize=view.sanitize)
+        return view
 
     def with_local(self, local: RpcQueue) -> "ShardedRpcQueue":
         """Inverse of :meth:`local_view`: re-wrap an updated local shard so
@@ -1423,9 +1690,12 @@ class ShardedRpcQueue:
         rc = self.reply_capacity
         D, cap = self.n_devices, self.capacity
         z = jnp.zeros((D,), jnp.int32)
+        one = jnp.ones_like(self.q.fonce)
         traced = any(isinstance(x, jax.core.Tracer) for x in records + heads)
         if rc:
-            drain = _bind_drain(_drain_queue_sharded_replies, handlers)
+            drain_fn = (_drain_queue_sharded_replies_san if self.q.sanitize
+                        else _drain_queue_sharded_replies)
+            drain = _bind_drain(drain_fn, handlers)
             operands = records + (self.q.rwant,) + heads
             if traced:
                 shapes = (jax.ShapeDtypeStruct((D, rc), jnp.int32),
@@ -1436,22 +1706,32 @@ class ShardedRpcQueue:
             else:
                 rbuf, roff, rlen = (jnp.asarray(a) for a in drain(
                     *operands, np.int32(rc)))
-            return dataclasses.replace(self, q=dataclasses.replace(
+            out = dataclasses.replace(self, q=dataclasses.replace(
                 self.q, head=z, phead=z, adrops=z,
                 rbuf=rbuf, roff=roff, rlen=rlen,
                 base=self.q.base + self.q.head,
-                rbase=self.q.base, rcount=self.q.head))
-        drain = _bind_drain(_drain_queue_sharded, handlers)
-        if traced:
-            io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                        *records, *heads, ordered=True)
+                rbase=self.q.base, rcount=self.q.head, fonce=one))
         else:
-            # concrete shards (program boundary): drain directly — this also
-            # works when the shards live on a real multi-device mesh
-            drain(*records, *heads)
-        return dataclasses.replace(
-            self, q=dataclasses.replace(self.q, head=z, phead=z, adrops=z,
-                                        base=self.q.base + self.q.head))
+            drain_fn = (_drain_queue_sharded_san if self.q.sanitize
+                        else _drain_queue_sharded)
+            drain = _bind_drain(drain_fn, handlers)
+            if traced:
+                io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
+                            *records, *heads, ordered=True)
+            else:
+                # concrete shards (program boundary): drain directly — this
+                # also works when the shards live on a real multi-device mesh
+                drain(*records, *heads)
+            out = dataclasses.replace(
+                self, q=dataclasses.replace(
+                    self.q, head=z, phead=z, adrops=z,
+                    base=self.q.base + self.q.head, fonce=one))
+        if events.active():
+            events.emit("rpc_flush", _refs=(self, out), qid=id(self.q),
+                        qid_out=id(out.q), capacity=cap,
+                        payload_capacity=self.payload_capacity,
+                        reply_capacity=rc, sharded=True)
+        return out
 
     def result(self, dev, ticket, shape=(), dtype=None) -> jax.Array:
         """Device ``dev``'s reply for ``ticket`` from the last flush (the

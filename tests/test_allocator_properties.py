@@ -248,6 +248,89 @@ def test_sizeclass_fragmented_malloc_recovers(seed):
     _check_lookup_matches_linear(SC, s, live, list(range(0, HEAP, 5)))
 
 
+# ---------------------------------------------------------------------------
+# Size-class splitting (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+def _ceil_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _check_split_bound(s, live):
+    """Internal fragmentation <= one size class, after EVERY op: each
+    in-use entry's capacity is at most ``2^ceil_log2(size)`` — the bound
+    ``_take_entry`` guarantees whenever the table has room to split
+    (table cap 64 is never reached by these op sequences).  Also checks
+    the table stays a sorted, disjoint tiling below the watermark."""
+    count = int(s.count)
+    offsets = np.asarray(s.offsets)[:count]
+    caps = np.asarray(s.caps)[:count]
+    sizes = np.asarray(s.sizes)[:count]
+    in_use = np.asarray(s.in_use)[:count]
+    ends = offsets + caps
+    assert (ends[:-1] <= offsets[1:]).all(), (offsets, caps)
+    if count:
+        assert 0 <= int(offsets[0]) and int(ends[-1]) <= int(s.watermark)
+    assert int(s.watermark) <= s.heap_size
+    for e in range(count):
+        if in_use[e]:
+            assert int(caps[e]) <= _ceil_pow2(int(sizes[e])), \
+                (e, int(sizes[e]), int(caps[e]))
+    # live blocks seen by the driver are exactly the in-use entries
+    assert sorted(live) == [int(offsets[e]) for e in range(count)
+                            if in_use[e]]
+
+
+def _splitting_property(ops):
+    """Drive malloc/free through the size-class allocator, checking the
+    one-size-class fragmentation bound and table tiling after each op."""
+    s = SC.init(HEAP, cap=64)
+    live = {}
+    for kind, size, idx in ops:
+        if kind == "malloc":
+            s, p = SC.malloc(s, size)
+            if int(p) >= 0:
+                assert int(p) not in live
+                live[int(p)] = size
+        elif live:
+            victim = sorted(live)[idx % len(live)]
+            s = SC.free(s, victim)
+            del live[victim]
+        _check_split_bound(s, live)
+    _check_no_overlap(live, HEAP)
+    _check_lookup_matches_linear(SC, s, live, list(range(0, HEAP, 7)))
+
+
+def test_sizeclass_split_reuse_keeps_one_class_and_rebins_rest():
+    """Deterministic split chain: a 60-cap hole reused for a size-5
+    request hands out an 8-cap block (one class above 5) and re-bins the
+    52-word remainder, which a later size-30 request reuses and splits
+    again — pointers prove the remainder stayed allocatable in place."""
+    s = SC.init(HEAP, cap=64)
+    s, big = SC.malloc(s, 60)
+    s, guard = SC.malloc(s, 8)          # pin the watermark above the hole
+    s = SC.free(s, big)
+    s, p = SC.malloc(s, 5)              # reuse the 60-cap hole -> split
+    assert int(p) == int(big) == 0
+    found, base, size = SC.find_obj(s, 0)
+    assert bool(found) and int(base) == 0 and int(size) == 5
+    offsets = np.asarray(s.offsets)
+    caps = np.asarray(s.caps)
+    assert int(caps[0]) == 8            # kept exactly 2^ceil_log2(5)
+    assert int(offsets[1]) == 8 and int(caps[1]) == 52   # rebinned rest
+    assert int(np.asarray(s.in_use)[1]) == 0
+    s, p2 = SC.malloc(s, 30)            # class-5 bin serves the remainder
+    assert int(p2) == 8
+    assert int(np.asarray(s.caps)[1]) == 32              # split again
+    _check_split_bound(s, {0: 5, 8: 30, int(guard): 8})
+    # free everything: coalesce must fuse the split halves back
+    for ptr in (0, 8, int(guard)):
+        s = SC.free(s, ptr)
+    s = SC.coalesce(s)
+    s, whole = SC.malloc(s, HEAP)
+    assert int(whole) == 0
+
+
 def _state_snapshot(s):
     return {f: np.asarray(getattr(s, f)).copy()
             for f in ("offsets", "sizes", "caps", "in_use", "free_bits",
@@ -378,6 +461,11 @@ if HAVE_HYPOTHESIS:
     def test_sizeclass_invariants_property(ops):
         _flat_property(SC, ops)
 
+    @settings(max_examples=25, deadline=None)
+    @given(_FLAT_OPS)
+    def test_sizeclass_splitting_property(ops):
+        _splitting_property(ops)
+
     @settings(max_examples=20, deadline=None)
     @given(st.lists(
         st.tuples(st.sampled_from(["malloc", "free"]),
@@ -400,6 +488,10 @@ else:
     @pytest.mark.parametrize("seed", range(10))
     def test_sizeclass_invariants_property(seed):
         _flat_property(SC, _random_flat_ops(seed))
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_sizeclass_splitting_property(seed):
+        _splitting_property(_random_flat_ops(seed))
 
     @pytest.mark.parametrize("seed", range(8))
     def test_balanced_invariants_property(seed):

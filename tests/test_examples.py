@@ -1,0 +1,33 @@
+"""Examples as the linter's negative corpus (ISSUE 6 satellite).
+
+Both ``examples/`` scripts run end-to-end under ``JAX_PLATFORMS=cpu``
+(conftest pins it) inside the analyzer's event capture and must report
+ZERO hazards — the standing false-positive fence for every rule the
+analyzer grows.
+"""
+import importlib.util
+import os
+
+import pytest
+
+from repro.analysis import analyze
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXAMPLES = os.path.join(ROOT, "examples")
+
+
+def _load_main(filename):
+    path = os.path.join(EXAMPLES, filename)
+    name = f"_example_{filename.removesuffix('.py')}"
+    spec = importlib.util.spec_from_file_location(name, path)
+    module = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(module)
+    return module.main
+
+
+@pytest.mark.parametrize("filename", ["quickstart.py",
+                                      "gpu_first_port.py"])
+def test_example_reports_zero_hazards(filename, capsys):
+    main = _load_main(filename)
+    report = analyze(main, jaxpr=False)
+    assert not report, f"{filename}:\n{report.summary()}"

@@ -1,0 +1,167 @@
+"""Runtime sanitizer (ISSUE 6 tentpole, runtime half).
+
+Seeded defects must trip NAMED counters at flush: a payload canary stomp,
+a use-after-free marshalling poisoned heap words, an ``ArenaRef`` resolved
+against a freed block, a stale host-side reply read.  And the whole mode
+must be free: on hazard-free programs ``sanitize=True`` delivers
+bit-identical outputs and host records — only the queue-internal arena
+layout (canary brackets) differs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis.sanitize import POISON, poison_free
+from repro.core.expand import expand, set_team_queue, team_queue
+from repro.core.rpc import (ArenaRef, READ, REGISTRY, RpcQueue,
+                            ShardedRpcQueue, reset_sanitize_stats,
+                            rpc_call, sanitize_stats)
+
+I32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+RECS = []
+
+
+def _rec(*args):
+    RECS.append(tuple(np.asarray(a).tolist() for a in args))
+
+
+def _probe(ptr, base, size, found, arena):
+    return np.int32(found)
+
+
+REGISTRY.register("san.rec", _rec)
+REGISTRY.register("san.probe", _probe)
+REGISTRY.register("san.echo", lambda x: np.int32(x))
+
+
+@pytest.fixture(autouse=True)
+def _fresh():
+    RECS.clear()
+    reset_sanitize_stats()
+    yield
+
+
+def test_sanitized_flush_clean_and_transparent():
+    """Hazard-free program: zero counters, records identical to plain."""
+    def run(sanitize):
+        RECS.clear()
+        q = RpcQueue.create(8, 4, 64, sanitize=sanitize)
+        q = q.enqueue("san.rec", jnp.int32(3), jnp.arange(5))
+        q = q.enqueue("san.rec", jnp.float32(1.5))
+        q.flush()
+        return list(RECS)
+
+    plain = run(False)
+    sanitized = run(True)
+    assert sanitized == plain and len(plain) == 2
+    st = sanitize_stats()
+    assert st["canary_stomps"] == 0 and st["poison_hits"] == 0
+    assert len(st["epochs"]) == 1
+    assert st["epochs"][0]["records"] == 2
+
+
+def test_canary_stomp_detected_at_flush():
+    q = RpcQueue.create(8, 4, 64, sanitize=True)
+    q = q.enqueue("san.rec", jnp.arange(6))
+    # payload layout: [canary, 6 words, canary] — stomp the leading canary
+    q = dataclasses.replace(q, pbuf=q.pbuf.at[0].set(jnp.int32(0)))
+    q.flush()
+    assert sanitize_stats()["canary_stomps"] >= 1
+
+
+def test_overrun_into_trailing_canary_detected():
+    q = RpcQueue.create(8, 4, 64, sanitize=True)
+    q = q.enqueue("san.rec", jnp.arange(4))
+    # a 4-word reservation sits at words 1..4; word 5 is its canary
+    q = dataclasses.replace(q, pbuf=q.pbuf.at[5].set(jnp.int32(7)))
+    q.flush()
+    assert sanitize_stats()["canary_stomps"] >= 1
+
+
+def test_poison_free_uaf_hits_at_flush():
+    """The seeded use-after-free: free a block, marshal its stale bytes."""
+    from repro.core.allocator import GenericAllocator as GA
+    st = GA.init(64)
+    buf = jnp.arange(64, dtype=jnp.int32)
+    st, p = GA.malloc(st, 8)
+    st, buf = poison_free(GA, st, buf, p)
+    assert int(buf[int(p)]) == int(np.int32(POISON))
+    stale = jax.lax.dynamic_slice(buf, (p,), (8,))
+    q = RpcQueue.create(8, 4, 64, sanitize=True)
+    q = q.enqueue("san.rec", stale)           # BUG: freed bytes in payload
+    q.flush()
+    assert sanitize_stats()["poison_hits"] >= 1
+    # the same program with a LIVE block is silent
+    reset_sanitize_stats()
+    st2, p2 = GA.malloc(st, 8)
+    live = jax.lax.dynamic_slice(buf, (p2,), (8,))
+    q2 = RpcQueue.create(8, 4, 64, sanitize=True)
+    q2.enqueue("san.rec", jnp.zeros_like(live)).flush()
+    assert sanitize_stats()["poison_hits"] == 0
+
+
+def test_uaf_marshal_counter_on_freed_arena_ref():
+    from repro.core.allocator import GenericAllocator as GA
+    st = GA.init(64)
+    arena = jnp.zeros((64,), jnp.int32)
+    st, p = GA.malloc(st, 8)
+    st = GA.free(st, p)
+    before = sanitize_stats()["uaf_marshals"]
+    rpc_call("san.probe", ArenaRef(arena, p, st, access=READ),
+             result_shape=I32)
+    assert sanitize_stats()["uaf_marshals"] == before + 1
+
+
+def test_stale_ticket_read_counter():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8, sanitize=True)
+    q, t = q.enqueue_ticketed("san.echo", jnp.int32(5), returns=I32)
+    q = q.flush()
+    (val, ok), = q.results_host([int(t)], I32)
+    assert ok and int(val) == 5
+    q = q.enqueue("san.rec", jnp.int32(0))
+    q = q.flush()                              # window slides
+    before = sanitize_stats()["stale_ticket_reads"]
+    (_v, ok2), = q.results_host([int(t)], I32)   # BUG: epoch-0 ticket
+    assert not ok2
+    assert sanitize_stats()["stale_ticket_reads"] == before + 1
+
+
+def test_expand_sanitize_bit_identical_on_hazard_free_program():
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("d",))
+
+    def region(x):
+        q = team_queue()
+        q = q.enqueue("san.rec", x * 2)
+        q = q.enqueue("san.rec", jnp.float32(0.5))
+        set_team_queue(q)
+        return jnp.cumsum(x) + 1
+
+    def run(sanitize):
+        RECS.clear()
+        f = expand(region, mesh, (P("d"),), P("d"), queue=True,
+                   sanitize=sanitize)
+        sq = ShardedRpcQueue.create(1, 8, 4, 64)
+        sq2, out = f(sq, jnp.arange(4, dtype=jnp.int32))
+        sq2.flush()
+        return np.asarray(out), list(RECS)
+
+    out_plain, recs_plain = run(False)
+    reset_sanitize_stats()
+    out_san, recs_san = run(True)
+    np.testing.assert_array_equal(out_san, out_plain)
+    assert recs_san == recs_plain and len(recs_plain) == 2
+    st = sanitize_stats()
+    assert st["canary_stomps"] == 0 and st["poison_hits"] == 0
+    assert len(st["epochs"]) == 1 and st["epochs"][0]["sharded"]
+
+
+def test_plain_queue_records_no_epochs():
+    q = RpcQueue.create(8, 4, 64)
+    q = q.enqueue("san.rec", jnp.arange(3))
+    q.flush()
+    assert sanitize_stats()["epochs"] == []
