@@ -19,6 +19,7 @@ the partitioned-callback case, which must not execute).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Callable, Tuple
 
@@ -276,6 +277,26 @@ def hook_never_fires_fixed():
     device_run(lambda i, s: s + 1.0, jnp.float32(0), 3, hooks=[h])
 
 
+def _sink(tag, step, v):
+    return None
+
+
+def unstable_pad_name():
+    # BUG: functools.partial has no code object, so the auto-name falls
+    # back to id() — a different landing pad every process; an exported
+    # manifest of this program cannot round-trip.
+    h = HostHook(extract=lambda step, s: s,
+                 host_fn=functools.partial(_sink, "metrics"), every=1)
+    device_run(lambda i, s: s + 1.0, jnp.float32(0), 3, hooks=[h])
+
+
+def unstable_pad_name_fixed():
+    h = HostHook(extract=lambda step, s: s,
+                 host_fn=functools.partial(_sink, "metrics"), every=1,
+                 name="corpus.metrics")       # explicit durable name
+    device_run(lambda i, s: s + 1.0, jnp.float32(0), 3, hooks=[h])
+
+
 CASES = (
     Case("result_before_flush", result_before_flush,
          ("NEVER_FLUSHED", "RESULT_BEFORE_FLUSH")),
@@ -306,6 +327,8 @@ CASES = (
          ("CALLBACK_IN_MESH",), mode="trace"),
     Case("hook_never_fires", hook_never_fires, ("HOOK_NEVER_FIRES",)),
     Case("hook_never_fires_fixed", hook_never_fires_fixed, ()),
+    Case("unstable_pad_name", unstable_pad_name, ("UNSTABLE_PAD_NAME",)),
+    Case("unstable_pad_name_fixed", unstable_pad_name_fixed, ()),
 )
 
 

@@ -44,6 +44,13 @@ Performance lints
   known abort case); drain at the program boundary instead.
   ``HOOK_NEVER_FIRES`` — immediate/batched hook whose ``every`` exceeds
   the run's ``n_steps``: it can never fire.
+
+Durable identity
+  ``UNSTABLE_PAD_NAME`` — hook landing pad auto-named from ``id()``
+  (its callable carries no code object — e.g. ``functools.partial``),
+  so the pad id changes every process: an exported ``RpcManifest``
+  cannot round-trip and a cold-started replica binds a DIFFERENT pad.
+  Pass ``HostHook(name=...)`` explicitly.
 """
 from __future__ import annotations
 
@@ -57,7 +64,9 @@ CAPACITY_CODES = ("CAPACITY_RECORDS", "CAPACITY_PAYLOAD", "CAPACITY_REPLY")
 POINTER_CODES = ("USE_AFTER_FREE", "DOUBLE_FREE", "OOB_PTR")
 PERF_CODES = ("RPC_IN_LOOP", "CALLBACK_IN_LOOP", "CALLBACK_IN_MESH",
               "HOOK_NEVER_FIRES")
-ALL_CODES = TICKET_CODES + CAPACITY_CODES + POINTER_CODES + PERF_CODES
+IDENTITY_CODES = ("UNSTABLE_PAD_NAME",)
+ALL_CODES = TICKET_CODES + CAPACITY_CODES + POINTER_CODES + PERF_CODES \
+    + IDENTITY_CODES
 
 
 @dataclasses.dataclass(frozen=True)

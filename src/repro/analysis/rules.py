@@ -204,6 +204,14 @@ def analyze_events(events: List[dict]) -> HazardReport:
                     f"run is only {n_steps} step(s) — it can never fire",
                     ev["site"], name=ev.get("name"), every=every,
                     n_steps=n_steps))
+            if ev.get("unstable"):
+                report.add(Hazard.make(
+                    "UNSTABLE_PAD_NAME",
+                    f"hook {ev.get('name')!r} is auto-named from id() — "
+                    "its callable has no code object to hash, so the "
+                    "landing-pad id changes every process and an exported "
+                    "RpcManifest cannot round-trip; pass HostHook(name=...)",
+                    ev["site"], name=ev.get("name")))
 
         elif kind == "heap_malloc":
             ptr_state[ptr_key(ev)] = "live"

@@ -23,6 +23,7 @@ Design for 1000+ nodes:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import queue
@@ -34,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
+
+from repro.core.rpc import RpcManifest
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -54,18 +57,34 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> None:
-    """Synchronous sharded save with an atomic manifest."""
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    transport: Optional[RpcManifest] = None) -> None:
+    """Synchronous sharded save with an atomic manifest.
+
+    ``transport`` (an :class:`repro.core.rpc.RpcManifest`) embeds the RPC
+    transport's durable identity — pad/callee ids, signatures, interned
+    format strings, queue geometry — as a ``"transport"`` section of the
+    checkpoint manifest, so a checkpoint of a serving/training program is
+    a complete cold-start artifact: :func:`load_transport` +
+    ``adopt_manifest()`` restore the binding table in a fresh process.
+
+    Data-file names are content hashes of the leaf's tree path (sha256,
+    not python ``hash`` — stable across processes and hash
+    randomization), so re-saving the same step from any process produces
+    the same file set."""
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
     entries = {}
     for key, leaf in flat.items():
         arr = np.asarray(leaf)
-        fname = f"step{step}-{abs(hash(key)) % (1 << 60):x}.npy"
+        digest = hashlib.sha256(key.encode("utf-8")).hexdigest()[:15]
+        fname = f"step{step}-{digest}.npy"
         np.save(os.path.join(directory, fname), arr)
         entries[key] = {"file": fname, "shape": list(arr.shape),
                         "dtype": str(arr.dtype)}
     manifest = {"step": step, "entries": entries, "time": time.time()}
+    if transport is not None:
+        manifest["transport"] = json.loads(transport.to_json())
     tmp = os.path.join(directory, f".manifest-{step}.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
@@ -83,6 +102,23 @@ def latest_step(directory: str) -> Optional[int]:
             except ValueError:
                 pass
     return max(steps) if steps else None
+
+
+def load_transport(directory: str,
+                   step: Optional[int] = None) -> Optional[RpcManifest]:
+    """The checkpoint's transport section as an
+    :class:`repro.core.rpc.RpcManifest`, or None when the checkpoint was
+    written without one.  Pass it to ``adopt_manifest()`` before serving
+    records produced by the checkpointed program's trace."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    with open(os.path.join(directory, f"manifest-{step}.json")) as f:
+        manifest = json.load(f)
+    section = manifest.get("transport")
+    if section is None:
+        return None
+    return RpcManifest.from_json(json.dumps(section))
 
 
 def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,

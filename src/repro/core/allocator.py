@@ -86,6 +86,7 @@ for benchmarks and property cross-checks.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Tuple
 
 import jax
@@ -232,24 +233,37 @@ def _sorted_lookup(offsets, sizes, in_use, count, ptr):
     return found, offsets[idx], sizes[idx]
 
 
-def _sorted_exact(offsets, in_use, count, ptr):
+def _sorted_exact(offsets, in_use, count, ptr, method=None):
     """O(log cap) exact-base lookup: ``(hit, idx)`` of the live entry whose
-    offset equals ``ptr``."""
+    offset equals ``ptr``.  ``method`` forwards to ``jnp.searchsorted``:
+    under ``vmap`` the default ``"scan"`` lowers to one XLA variadic sort
+    per search — ``"compare_all"`` (one broadcast compare + reduce) is far
+    cheaper for the small tables allocator rows actually carry."""
     n = offsets.shape[0]
-    j = jnp.searchsorted(offsets, ptr, side="left").astype(I32)
+    j = jnp.searchsorted(offsets, ptr, side="left",
+                         method=method or "scan").astype(I32)
     idx = jnp.clip(j, 0, n - 1)
     hit = (j < count) & (offsets[idx] == ptr) & (in_use[idx] == 1)
     return hit, idx
 
 
+#: Above this table length the O(n*k) broadcast compare stops beating the
+#: batched binary search (small-grid dispatch overhead vs asymptotics).
+_COMPARE_ALL_MAX = 1024
+
+
 def _bulk_freed_mask(offsets, in_use, count, limit, ptrs):
     """Per-entry freed mask for a batch of pointers: k sorted exact lookups
-    (O(k log cap)) scattered back to entry space — not a (cap x k)
-    comparison matrix.  Invalid / unmatched pointers contribute nothing."""
+    scattered back to entry space — not a (cap x k) comparison matrix of
+    live ranges.  Invalid / unmatched pointers contribute nothing.  Small
+    tables take the ``compare_all`` lookup: the vmapped binary search
+    lowers to an XLA sort per pointer, which dominates small-grid bulk
+    frees (the BENCH_allocator small-grid regression)."""
     n = offsets.shape[0]
+    method = "compare_all" if n <= _COMPARE_ALL_MAX else None
     valid = (ptrs >= 0) & (ptrs < limit)
     hit, idx = jax.vmap(
-        lambda p: _sorted_exact(offsets, in_use, count, p))(ptrs)
+        lambda p: _sorted_exact(offsets, in_use, count, p, method))(ptrs)
     hit = hit & valid
     return jnp.zeros((n,), jnp.bool_).at[
         jnp.where(hit, idx, n)].set(True, mode="drop")
@@ -1371,3 +1385,32 @@ def _ungroup_grid(grouped: jax.Array, T: int, G: int, N: int, M: int
     g = grouped.reshape(N, M, a, b)
     g = jnp.transpose(g, (2, 0, 3, 1))    # (a, N, b, M)
     return g.reshape(T, G)
+
+
+# ---------------------------------------------------------------------------
+# jax.export serialization — allocator states ride exported serve artifacts
+# (their treedefs are part of the exported calling convention, so the aux
+# data must round-trip through bytes; deserialize restores tuples so the
+# reloaded treedef compares equal to a freshly flattened one)
+# ---------------------------------------------------------------------------
+
+def _register_export_serialization():
+    from jax import export as _export
+
+    def _ser(aux) -> bytes:
+        return json.dumps(aux).encode("utf-8")
+
+    def _de_int(b: bytes):
+        return int(json.loads(b.decode("utf-8")))
+
+    def _de_tuple(b: bytes):
+        return tuple(json.loads(b.decode("utf-8")))
+
+    for cls, de in ((GenericState, _de_int), (SizeClassState, _de_int),
+                    (BalancedState, _de_tuple), (ShardedHeap, _de_tuple)):
+        _export.register_pytree_node_serialization(
+            cls, serialized_name=f"repro.core.allocator.{cls.__name__}",
+            serialize_auxdata=_ser, deserialize_auxdata=de)
+
+
+_register_export_serialization()

@@ -58,6 +58,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import events
+from repro.core import rpc as rpc_mod
 from repro.core.expand import _team_env
 from repro.core.jax_compat import shard_map
 from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue, rpc_call
@@ -72,35 +73,103 @@ class HostHook:
     every:    fire on steps where step % every == 0 (and step > 0)
     extract:  (step, state) -> pytree of arrays shipped to the host
     host_fn:  host callback receiving (step, *leaves); return value ignored
-    name:     RPC name for the pad table / stats.  Defaults to a per-instance
-              derived name; long-lived drivers that construct hooks
-              repeatedly should pass a stable name so registry entries are
-              rebound instead of accumulating.
+              unless ``returns`` declares one
+    name:     RPC name for the pad table / stats.  Defaults to a derived
+              name under the MANIFEST scheme — a stable content hash of
+              the host_fn's (module, qualname, firstlineno) and ``every``
+              — so a re-trace of the same program (even in another
+              process, against an adopted :class:`~repro.core.rpc.
+              RpcManifest`) binds the same RPC ids.  Only a host_fn with
+              no code object (e.g. ``functools.partial``) falls back to a
+              process-local ``id()`` name, which cannot round-trip a
+              manifest — the analyzer flags it (``UNSTABLE_PAD_NAME``).
     batched:  queue firings on device; ONE flush at end of run replays them
               (scalar extract leaves reach host_fn as plain python
               ints/floats; array leaves ride the payload arena and arrive
               as 1-D numpy arrays)
+    returns:  (batched only) ``jax.ShapeDtypeStruct`` declaring that
+              host_fn RETURNS a value the device consumes: the firing
+              step enqueues a ticketed record, flushes the queue mid-loop,
+              and threads the reply into the next step's state via
+              ``consume`` — no manual ``thread_queue`` plumbing.  Not
+              available under ``mesh=`` (no mid-loop flush in a
+              partitioned program).
+    consume:  ``(step, state, value, ok) -> state`` — folds the reply into
+              the carried state on firing steps (``ok`` is the v4
+              validity mask: False when the record or its reply was
+              dropped).  Required with ``returns``.
     """
     every: int
     extract: Callable[[jax.Array, Any], Any]
     host_fn: Callable
     name: Optional[str] = None
     batched: bool = False
+    returns: Optional[jax.ShapeDtypeStruct] = None
+    consume: Optional[Callable] = None
+
+
+def _hook_key(hook: HostHook) -> Optional[str]:
+    """The hook's durable identity under the manifest naming scheme, or
+    None when host_fn has no code object to anchor one (a process-local
+    ``id()`` name is the only fallback — and it cannot round-trip)."""
+    code = getattr(hook.host_fn, "__code__", None)
+    if code is None:
+        return None
+    mod = getattr(hook.host_fn, "__module__", "") or ""
+    qual = getattr(hook.host_fn, "__qualname__",
+                   getattr(hook.host_fn, "__name__", "fn"))
+    return f"{mod}:{qual}:{code.co_firstlineno}:{int(hook.every)}"
 
 
 def _hook_name(hook: HostHook) -> str:
+    """Auto-name under the manifest scheme: ``hook.<fn>.<hash31 hex>``.
+    Stable across processes — any trace of the same program derives the
+    same name, hence (content-hashed) the same pad/callee ids."""
+    if hook.name:
+        return hook.name
     fn_name = getattr(hook.host_fn, "__name__", "fn")
-    return hook.name or f"hook.{fn_name}.{id(hook):x}"
+    key = _hook_key(hook)
+    if key is None:
+        return f"hook.{fn_name}.{id(hook):x}"
+    return f"hook.{fn_name}.{rpc_mod.stable_hook_id(key):08x}"
 
 
-def _register_hook(hook: HostHook) -> str:
+def _name_hooks(hooks: Sequence[HostHook]) -> list:
+    """Name every hook, disambiguating same-named duplicates by their
+    position in the hooks list (program order — deterministic, so a
+    re-trace binds the same ids).  Returns ``[(hook, hname), ...]``."""
+    named = []
+    seen: dict = {}
+    for h in hooks:
+        base = _hook_name(h)
+        occ = seen.get(base, 0)
+        seen[base] = occ + 1
+        named.append((h, base if occ == 0 else f"{base}.{occ + 1}"))
+    return named
+
+
+def _register_hook(hook: HostHook, hname: str) -> str:
     """Bind the hook's host_fn into the RPC registry (dispatch-time
     resolution: re-running device_run with a same-named hook rebinds)."""
-    hname = _hook_name(hook)
+    if hook.returns is not None:
+        if not hook.batched:
+            raise ValueError(
+                f"hook {hname!r}: returns= is the batched reply path — "
+                "construct it with batched=True (immediate hooks already "
+                "run synchronously; return plumbing is only needed across "
+                "the queue)")
+        if hook.consume is None:
+            raise ValueError(
+                f"hook {hname!r}: returns= declares a device-consumed "
+                "reply; pass consume=(step, state, value, ok) -> state "
+                "to fold it into the carry")
 
-    def adapter(step, *leaves):
-        hook.host_fn(int(step), *leaves)
-        return np.int32(0)
+        def adapter(step, *leaves):
+            return hook.host_fn(int(step), *leaves)
+    else:
+        def adapter(step, *leaves):
+            hook.host_fn(int(step), *leaves)
+            return np.int32(0)
 
     adapter.__name__ = hname
     REGISTRY.register(hname, adapter)
@@ -138,6 +207,27 @@ def _fire_batched(hook: HostHook, hname: str, step, state,
     should = (step % hook.every == 0) & (step > 0)
     with events.cond_scope(int(hook.every)):
         return q.enqueue(hname, step, *leaves, where=should)
+
+
+def _fire_returning(hook: HostHook, hname: str, step, state, q: RpcQueue):
+    """Reply-consuming batched hook: ticketed enqueue, mid-loop flush in
+    the firing branch, reply folded into the carried state via
+    ``hook.consume`` — the v4 blocking-at-flush path without the caller
+    threading the queue by hand.  Non-firing steps stay host-free (the
+    flush callback lives only in the taken cond branch).  Returns
+    ``(queue', state')``."""
+    payload = hook.extract(step, state)
+    leaves = jax.tree.leaves(payload)
+    should = (step % hook.every == 0) & (step > 0)
+    with events.cond_scope(int(hook.every)):
+        q, ticket = q.enqueue_ticketed(hname, step, *leaves,
+                                       returns=hook.returns, where=should)
+        q = lax.cond(should, lambda qq: qq.flush(), lambda qq: qq, q)
+        value, ok = q.result_ok(ticket, hook.returns)
+        state = lax.cond(should,
+                         lambda st: hook.consume(step, st, value, ok),
+                         lambda st: st, state)
+    return q, state
 
 
 def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
@@ -188,14 +278,25 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
     device's copy.  Per-device hook *payloads* are fine either way — they
     live in the queue shards, not the carry).
     """
-    named = [(h, _register_hook(h)) for h in hooks]
+    named = _name_hooks(hooks)
+    for h, hname in named:
+        _register_hook(h, hname)
     if events.active():
         for h, hname in named:
             events.emit("hook_decl", name=hname, every=int(h.every),
                         n_steps=int(n_steps), batched=bool(h.batched),
-                        mesh=mesh is not None)
+                        mesh=mesh is not None,
+                        unstable=h.name is None and _hook_key(h) is None)
     try:
+        returning = [hname for h, hname in named if h.returns is not None]
         if mesh is not None:
+            if returning:
+                raise ValueError(
+                    f"hook(s) {returning} use returns= under mesh=: the "
+                    "reply path needs a mid-loop flush, and XLA cannot "
+                    "lower the gathered drain inside the partitioned "
+                    "program — read replies after the boundary flush via "
+                    "thread_queue/return_queue instead")
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
                                     state_spec, queue_capacity, queue_width,
                                     queue_payload, queue_reply, thread_queue,
@@ -206,6 +307,13 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
             jit_kwargs.setdefault("donate_argnums", (0,))
         any_batched = any(h.batched for h in hooks)
         carries_queue = any_batched or thread_queue or return_queue
+        if returning:
+            # every reply-consuming hook flushes at its firing step, so one
+            # epoch never holds more than one round of declared replies —
+            # size the reply arena for all of them (plus caller's ask)
+            need = sum(int(np.prod(h.returns.shape) or 1)
+                       for h, _ in named if h.returns is not None)
+            queue_reply = max(queue_reply, need)
 
         @functools.partial(jax.jit, **jit_kwargs)
         def program(state):
@@ -220,7 +328,10 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                     else:
                         state = step_fn(step, state)
                     for h, hname in named:
-                        if h.batched:
+                        if h.returns is not None:
+                            q, state = _fire_returning(h, hname, step + 1,
+                                                       state, q)
+                        elif h.batched:
                             q = _fire_batched(h, hname, step + 1, state, q)
                         else:
                             _fire(h, hname, step + 1, state)

@@ -276,6 +276,18 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
             qi = int(heap)
             call_args = call_args[:qi] + \
                 (_with_sanitize(call_args[qi]),) + call_args[qi + 1:]
+        if queue:
+            # record the region's team-queue geometry for the manifest
+            # scheme: export_manifest() ships it so a cold-start process
+            # rebuilds compatible shards without re-tracing this region.
+            # Lazy import — expand must stay import-free of rpc (rpc
+            # imports expand lazily for the mesh guard).
+            from repro.core import rpc as _rpc
+            try:
+                _rpc.REGISTRY.note_queue_geometry(
+                    _rpc.queue_geometry(call_args[int(heap)]))
+            except (AttributeError, TypeError):
+                pass               # duck-typed queue (e.g. sharded LogRing)
 
         def body(*shard_args):
             extra, rest = shard_args[:n_extra], shard_args[n_extra:]

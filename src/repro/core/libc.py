@@ -65,6 +65,7 @@ from jax import lax
 from repro.core.allocator import (
     BalancedAllocator, BalancedState, GenericAllocator, GenericState,
     ShardedHeap, SizeClassAllocator, SizeClassState, allocator_for)
+from repro.core import rpc as rpc_mod
 from repro.core.rpc import REGISTRY, RpcQueue, ShardedRpcQueue
 
 
@@ -310,8 +311,11 @@ def drain_log_lines():
 
 #: Interned format strings: ``fprintf`` call sites register their (static,
 #: python) format string here at trace time and the RECORD carries only the
-#: small integer id — the string itself never touches the device.
-_FMT_TABLE: List[str] = []
+#: integer id — the string itself never touches the device.  Ids are the
+#: STABLE 31-bit content hash of the string (``rpc.stable_format_id``), so
+#: a program traced in one process resolves its format ids in any other —
+#: the table round-trips through :class:`repro.core.rpc.RpcManifest`.
+_FMT_TABLE: Dict[int, str] = {}
 _FMT_IDS: Dict[str, int] = {}
 
 _PRINTF_LINES: List[str] = []
@@ -321,14 +325,55 @@ _WRITE_STREAMS: Dict[int, List[np.ndarray]] = {}
 def _intern_fmt(fmt: str) -> int:
     fid = _FMT_IDS.get(fmt)
     if fid is None:
-        fid = len(_FMT_TABLE)
-        _FMT_TABLE.append(fmt)
+        fid = rpc_mod.stable_format_id(fmt)
+        other = _FMT_TABLE.get(fid)
+        if other is not None and other != fmt:
+            raise RuntimeError(
+                f"interned-string id collision: {fmt!r} and {other!r} both "
+                f"hash to {fid} — reword one of them")
+        _FMT_TABLE[fid] = fmt
         _FMT_IDS[fmt] = fid
     return fid
 
 
+def _resolve_fmt(fid: int) -> str:
+    fmt = _FMT_TABLE.get(int(fid))
+    if fmt is None:
+        raise KeyError(
+            f"unknown interned-string id {int(fid)}: this process never "
+            "interned it — a program traced elsewhere must ship its "
+            "RpcManifest (carrying the format table) and the server must "
+            "adopt_manifest() it before draining")
+    return fmt
+
+
+def _export_fmt_table() -> Dict[int, str]:
+    return dict(_FMT_TABLE)
+
+
+def _adopt_fmt_table(table: Dict[int, str]) -> None:
+    for fid, fmt in table.items():
+        fid = int(fid)
+        want = rpc_mod.stable_format_id(fmt)
+        if want != fid:
+            raise ValueError(
+                f"manifest format id {fid} ({fmt!r}) does not match its "
+                f"content hash {want}")
+        other = _FMT_TABLE.get(fid)
+        if other is not None and other != fmt:
+            raise ValueError(
+                f"manifest format id {fid} ({fmt!r}) is already interned "
+                f"as {other!r} in this process")
+    for fid, fmt in table.items():
+        _FMT_TABLE[int(fid)] = fmt
+        _FMT_IDS[fmt] = int(fid)
+
+
+rpc_mod.register_format_section(_export_fmt_table, _adopt_fmt_table)
+
+
 def _fprintf_sink(fid, *args):
-    fmt = _FMT_TABLE[int(fid)]
+    fmt = _resolve_fmt(fid)
     coerced = tuple(a if isinstance(a, (int, float)) else np.asarray(a)
                     for a in args)
     _PRINTF_LINES.append(fmt % coerced)      # zero args still resolves %%
@@ -501,7 +546,7 @@ def _remote_malloc_sink(name_id, dev, sizes):
     registered heap is a :class:`ShardedHeap`, the record's ``dev``
     selects the shard and the returned pointers are global ``(device,
     offset)`` pointers."""
-    name = _FMT_TABLE[int(name_id)]        # heap names intern like formats
+    name = _resolve_fmt(name_id)           # heap names intern like formats
     state = _REMOTE_HEAPS[name]
     sizes = jnp.asarray(np.asarray(sizes), jnp.int32)
     if isinstance(state, ShardedHeap):

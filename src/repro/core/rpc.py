@@ -154,6 +154,8 @@ Argument categories (paper Fig. 3):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import threading
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -250,6 +252,152 @@ class ArenaRef:
 
 
 # ---------------------------------------------------------------------------
+# Durable identity: content-hashed ids + the serializable manifest
+# ---------------------------------------------------------------------------
+#
+# Identity used to be an in-memory accident: pad ids and batch-callee ids
+# were handed out in arrival order (``_next_pad``), so a program traced in
+# one process could never be replayed in another — the compiled artifact
+# embedded ids that meant nothing outside the process that traced it.
+# Every id is now a STABLE CONTENT HASH of what it names:
+#
+#   * pad id        = hash63("pad", callee name + flattened signature)
+#   * batch callee  = hash31("callee", name)   — rides a device int32 lane
+#   * format id     = hash31("fmt", string)    — rides a device int32 lane
+#
+# Two traces of the same program — in the same process or across a
+# ``jax.export`` boundary — bind the same ids, and :class:`RpcManifest`
+# makes the whole binding table a versioned, JSON-serializable artifact
+# that a fresh process adopts before serving.
+
+MANIFEST_VERSION = 1
+
+
+def _stable_id(kind: str, key: str, bits: int) -> int:
+    """Deterministic ``bits``-wide nonzero id for ``key`` (domain-separated
+    by ``kind``).  sha256 prefix, so the id is stable across processes,
+    platforms and Python hash randomization."""
+    digest = hashlib.sha256(f"{kind}\x00{key}".encode("utf-8")).digest()
+    v = int.from_bytes(digest[:8], "big") % (1 << bits)
+    return v or 1         # 0 is reserved (empty ring slots read callee 0)
+
+
+def _sig_to_json(sig: Tuple) -> list:
+    """Canonical JSON form of a flattened signature (tuples -> lists)."""
+    return [[e[0], list(e[1])] + list(e[2:]) for e in sig]
+
+
+def _sig_from_json(obj) -> Tuple:
+    """Inverse of :func:`_sig_to_json` (shapes back to int tuples)."""
+    return tuple((e[0], tuple(int(d) for d in e[1])) + tuple(e[2:])
+                 for e in obj)
+
+
+def stable_pad_id(name: str, sig: Tuple) -> int:
+    """Content-hashed landing-pad id: 63-bit (pad ids live host-side only)."""
+    canon = json.dumps([name, _sig_to_json(sig)], separators=(",", ":"))
+    return _stable_id("pad", canon, 63)
+
+
+def stable_callee_id(name: str) -> int:
+    """Content-hashed batch-callee id.  31-bit: callee ids travel in the
+    queue's device-resident int32 ``callee`` lane."""
+    return _stable_id("callee", name, 31)
+
+
+def stable_format_id(text: str) -> int:
+    """Content-hashed interned-string id (fprintf formats, heap names).
+    31-bit: format ids travel in device int32 lanes too."""
+    return _stable_id("fmt", text, 31)
+
+
+def stable_hook_id(key: str) -> int:
+    """Content-hashed auto-name suffix for ``device_run`` hooks (the
+    manifest naming scheme for hooks without an explicit ``name=``)."""
+    return _stable_id("hook", key, 31)
+
+
+# libc registers these so the manifest can carry the interned format table
+# without rpc importing libc (the one-way import discipline): export returns
+# the current {fid: string} table, adopt restores one into a fresh process.
+_FORMAT_SECTION: List[Callable] = []      # [export_fn, adopt_fn] once set
+
+
+def register_format_section(export_fn: Callable[[], Dict[int, str]],
+                            adopt_fn: Callable[[Dict[int, str]], None]):
+    _FORMAT_SECTION[:] = [export_fn, adopt_fn]
+
+
+def queue_geometry(q) -> Dict[str, int]:
+    """The transport geometry of an :class:`RpcQueue` /
+    :class:`ShardedRpcQueue` as a plain dict — what a fresh process needs
+    to rebuild a compatible queue (ring/payload/reply capacities, record
+    width, shard count)."""
+    shards = q.n_devices if isinstance(q, ShardedRpcQueue) else 1
+    return {"capacity": int(q.capacity), "width": int(q.width),
+            "payload_capacity": int(q.payload_capacity),
+            "reply_capacity": int(q.reply_capacity),
+            "shards": int(shards)}
+
+
+@dataclasses.dataclass
+class RpcManifest:
+    """Versioned, JSON-serializable table of every durable transport id.
+
+    ``pads`` maps pad id -> ``{"callee": name, "signature": [...]}``;
+    ``callees`` maps batch-callee id -> name; ``formats`` is the interned
+    string table (fprintf formats + remote-heap names); ``queues`` records
+    the geometry of the queues the exporting program used.  The manifest is
+    the contract a ``jax.export``-serialized program ships next to its
+    bytes: :meth:`_Registry.adopt_manifest` restores the tables in a fresh
+    process so device-resident ids resolve without re-tracing."""
+    version: int = MANIFEST_VERSION
+    pads: Dict[int, dict] = dataclasses.field(default_factory=dict)
+    callees: Dict[int, str] = dataclasses.field(default_factory=dict)
+    formats: Dict[int, str] = dataclasses.field(default_factory=dict)
+    queues: List[dict] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"version": self.version,
+             "pads": {str(k): {"callee": v["callee"],
+                               "signature": v["signature"]}
+                      for k, v in sorted(self.pads.items())},
+             "callees": {str(k): v
+                         for k, v in sorted(self.callees.items())},
+             "formats": {str(k): v
+                         for k, v in sorted(self.formats.items())},
+             "queues": list(self.queues)},
+            indent=2, sort_keys=True) + "\n"
+
+    @staticmethod
+    def from_json(text: str) -> "RpcManifest":
+        obj = json.loads(text)
+        version = int(obj.get("version", -1))
+        if version != MANIFEST_VERSION:
+            raise ValueError(
+                f"RpcManifest version {version} is not supported "
+                f"(this runtime speaks version {MANIFEST_VERSION})")
+        return RpcManifest(
+            version=version,
+            pads={int(k): {"callee": v["callee"],
+                           "signature": v["signature"]}
+                  for k, v in obj.get("pads", {}).items()},
+            callees={int(k): v for k, v in obj.get("callees", {}).items()},
+            formats={int(k): v for k, v in obj.get("formats", {}).items()},
+            queues=list(obj.get("queues", [])))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path) -> "RpcManifest":
+        with open(path) as f:
+            return RpcManifest.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
 # Registry: host functions + per-signature landing pads + stats
 # ---------------------------------------------------------------------------
 
@@ -276,8 +424,8 @@ class _Registry:
         self.pad_stats: Dict[int, Dict[str, float]] = {}
         self.stats: Dict[str, Dict[str, float]] = {}
         self.batch_ids: Dict[str, int] = {}        # name -> queue callee id
-        self.batch_names: List[Optional[str]] = []  # queue callee id -> name
-        self.batch_free: List[int] = []            # reusable callee id slots
+        self.batch_names: Dict[int, str] = {}      # queue callee id -> name
+        self.queue_geoms: List[Dict[str, int]] = []  # geometries seen/adopted
         self.queue_drops = 0
         self.arena_drops = 0
         self.reply_drops = 0
@@ -285,7 +433,6 @@ class _Registry:
         self.last_flush_drops = 0
         self.last_flush_arena_drops = 0
         self.last_flush_reply_drops = 0
-        self._next_pad = 0                         # pad ids are never reused
 
     def register(self, name: str, fn: Callable):
         """(Re-)bind ``name`` to ``fn``.  Pads, pad wrappers and stats for
@@ -297,10 +444,11 @@ class _Registry:
 
     def unregister(self, name: str):
         """Remove every trace of ``name``: host binding, stats, landing pads
-        and (tombstoned, slot-recycled) batch callee id.  Used by
-        ``device_run`` to retire auto-named per-instance hooks so repeated
-        runs leave the registry the same size — only call once all pending
-        callbacks referencing the name have drained."""
+        and batch callee id.  Used by ``device_run`` to retire auto-named
+        per-instance hooks so repeated runs leave the registry the same
+        size — only call once all pending callbacks referencing the name
+        have drained.  (Ids are content hashes, so re-registering the same
+        name later re-derives the SAME ids — nothing to recycle.)"""
         with self.lock:
             self.hosts.pop(name, None)
             self.stats.pop(name, None)
@@ -311,20 +459,25 @@ class _Registry:
                 self.pad_stats.pop(pid, None)
             cid = self.batch_ids.pop(name, None)
             if cid is not None:
-                self.batch_names[cid] = None       # tombstone; id unreachable
-                self.batch_free.append(cid)        # ...until re-issued
+                self.batch_names.pop(cid, None)
 
     def landing_pad(self, name: str, sig: Tuple) -> Tuple[int, Callable]:
         """One pad — and one cached host wrapper — per (callee, flattened
         arg-type tuple): the variadic monomorphization of the paper.
         Returns ``(pad_id, wrapper)``; the wrapper object is identical for
-        every trace with this signature."""
+        every trace with this signature.  The pad id is the stable content
+        hash of ``(name, sig)`` — any process tracing this call site binds
+        the same id."""
         with self.lock:
             key = (name,) + sig
             pid = self.pads.get(key)
             if pid is None:
-                pid = self._next_pad
-                self._next_pad += 1
+                pid = stable_pad_id(name, sig)
+                other = self.pad_info.get(pid)
+                if other is not None and other != key:
+                    raise RuntimeError(
+                        f"landing-pad id collision: {key!r} and {other!r} "
+                        f"both hash to pad id {pid} — rename one callee")
                 self.pads[key] = pid
                 self.pad_info[pid] = key
                 self.pad_stats[pid] = _zero_stats()
@@ -333,22 +486,129 @@ class _Registry:
             return pid, self.pad_wrappers[pid]
 
     def batch_callee_id(self, name: str) -> int:
-        """Small integer id for addressing ``name`` from RpcQueue records.
-        Slots freed by :meth:`unregister` are recycled, so churning
-        per-instance names does not grow the id space."""
+        """Integer id addressing ``name`` from RpcQueue records — the
+        stable 31-bit content hash of the name (it rides the device int32
+        ``callee`` lane), so a re-trace in ANY process binds the same id.
+        A hash collision between two registered names is detected here and
+        is a hard error (rename one callee)."""
         with self.lock:
             if name not in self.hosts:
                 raise KeyError(f"no host function registered for RPC {name!r}")
             cid = self.batch_ids.get(name)
             if cid is None:
-                if self.batch_free:
-                    cid = self.batch_free.pop()
-                    self.batch_names[cid] = name
-                else:
-                    cid = len(self.batch_names)
-                    self.batch_names.append(name)
+                cid = stable_callee_id(name)
+                other = self.batch_names.get(cid)
+                if other is not None and other != name:
+                    raise RuntimeError(
+                        f"batch-callee id collision: {name!r} and {other!r} "
+                        f"both hash to callee id {cid} — rename one callee")
+                self.batch_names[cid] = name
                 self.batch_ids[name] = cid
             return cid
+
+    def note_queue_geometry(self, geom: Dict[str, int]) -> None:
+        """Record one transport geometry (deduplicated) for the manifest's
+        ``queues`` section.  Called by ``RpcQueue.create`` /
+        ``ShardedRpcQueue.create`` and by ``expand(queue=True)`` regions,
+        so export_manifest sees the geometry of queues built INSIDE
+        runtime layers (``device_run``'s hook queue, an expanded region's
+        team shards) that the exporting caller never held a handle to."""
+        with self.lock:
+            if geom not in self.queue_geoms:
+                self.queue_geoms.append(dict(geom))
+
+    def export_manifest(self, queues=()) -> RpcManifest:
+        """Snapshot the durable identity of everything registered so far as
+        an :class:`RpcManifest` — every landing pad (id + callee +
+        flattened signature), every batch callee id, the interned format
+        table, and the geometry of ``queues`` (RpcQueue / ShardedRpcQueue
+        instances the exported program uses)."""
+        with self.lock:
+            pads = {pid: {"callee": key[0],
+                          "signature": _sig_to_json(key[1:])}
+                    for pid, key in self.pad_info.items()}
+            callees = dict(self.batch_names)
+            geoms = [dict(g) for g in self.queue_geoms]
+        formats = _FORMAT_SECTION[0]() if _FORMAT_SECTION else {}
+        for q in queues:
+            g = queue_geometry(q)
+            if g not in geoms:
+                geoms.append(g)
+        return RpcManifest(version=MANIFEST_VERSION, pads=pads,
+                           callees=callees, formats=dict(formats),
+                           queues=geoms)
+
+    def adopt_manifest(self, manifest: RpcManifest,
+                       require_hosts: bool = True) -> None:
+        """Restore another process's identity tables from ``manifest`` so a
+        deserialized program's device-resident ids resolve here with ZERO
+        re-tracing.
+
+        Validation is hard-nosed: every manifest entry is re-hashed and
+        must reproduce its recorded id (a mismatched signature — manifest
+        edited, or hashing scheme drift — names the offending pad), ids
+        already bound locally must agree with the manifest, and with
+        ``require_hosts=True`` (default) every manifest callee must have a
+        host function registered before adoption — serving an artifact
+        whose callees cannot dispatch is an error at adopt time, not a
+        KeyError mid-drain."""
+        if manifest.version != MANIFEST_VERSION:
+            raise ValueError(
+                f"cannot adopt RpcManifest version {manifest.version}: this "
+                f"runtime speaks version {MANIFEST_VERSION}")
+        # -- validate everything before touching any table ----------------
+        for pid, entry in sorted(manifest.pads.items()):
+            name = entry["callee"]
+            sig = _sig_from_json(entry["signature"])
+            want = stable_pad_id(name, sig)
+            if want != pid:
+                raise ValueError(
+                    f"manifest pad {pid} ({name!r}) does not match its "
+                    f"recorded signature: re-registration hashes to {want} "
+                    "— mismatched signature for this pad")
+            if require_hosts and name not in self.hosts:
+                raise ValueError(
+                    f"manifest pad {pid} needs host function {name!r}, "
+                    "which is not registered in this process — register "
+                    "it (or import the module that does) before "
+                    "adopt_manifest()")
+        for cid, name in sorted(manifest.callees.items()):
+            want = stable_callee_id(name)
+            if want != cid:
+                raise ValueError(
+                    f"manifest callee id {cid} ({name!r}) does not match "
+                    f"its content hash {want} — mismatched re-registration "
+                    "for this pad")
+            if require_hosts and name not in self.hosts:
+                raise ValueError(
+                    f"manifest callee {name!r} (id {cid}) has no host "
+                    "function registered in this process — register it "
+                    "before adopt_manifest()")
+        with self.lock:
+            for cid, name in manifest.callees.items():
+                local = self.batch_names.get(cid)
+                if local is not None and local != name:
+                    raise ValueError(
+                        f"manifest callee id {cid} names {name!r} but is "
+                        f"already bound to {local!r} in this process")
+        # -- adopt: callees, pads (wrappers for registered hosts), formats
+        with self.lock:
+            for cid, name in manifest.callees.items():
+                self.batch_names[cid] = name
+                self.batch_ids[name] = cid
+        for pid, entry in manifest.pads.items():
+            name = entry["callee"]
+            if name in self.hosts:
+                self.landing_pad(name, _sig_from_json(entry["signature"]))
+        if manifest.formats:
+            if not _FORMAT_SECTION:
+                raise RuntimeError(
+                    "manifest carries interned format strings but no "
+                    "format section is registered (import repro.core.libc "
+                    "before adopt_manifest())")
+            _FORMAT_SECTION[1](dict(manifest.formats))
+        for g in manifest.queues:
+            self.note_queue_geometry(dict(g))
 
     def bump(self, name: str, pad_id: Optional[int], bytes_in: int,
              bytes_out: int, calls: int = 1):
@@ -379,6 +639,16 @@ class _Registry:
 
 
 REGISTRY = _Registry()
+
+
+def export_manifest(queues=()) -> RpcManifest:
+    """Module-level alias for :meth:`_Registry.export_manifest`."""
+    return REGISTRY.export_manifest(queues=queues)
+
+
+def adopt_manifest(manifest: RpcManifest, require_hosts: bool = True) -> None:
+    """Module-level alias for :meth:`_Registry.adopt_manifest`."""
+    REGISTRY.adopt_manifest(manifest, require_hosts=require_hosts)
 
 
 def rpc_stats(name: Optional[str] = None):
@@ -709,7 +979,13 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     for j in range(lo, n):
         k = j % cap
         cid = int(callee[k])
-        name = names[cid]
+        name = names.get(cid)
+        if name is None:
+            raise KeyError(
+                f"RpcQueue record carries unknown callee id {cid}: this "
+                "process never bound it — a program traced elsewhere must "
+                "ship its RpcManifest and the server must "
+                "adopt_manifest() it before draining")
         fn = (overrides or {}).get(name) or hosts[name]
         na = int(nargs[k])
         mask = int(imask[k])
@@ -828,7 +1104,7 @@ def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:                    # one snapshot, not per record
-        names = list(REGISTRY.batch_names)
+        names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
     drops, _ = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
                              plens, pbuf, None, n, overrides, names, hosts,
@@ -859,7 +1135,7 @@ def _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals, plens,
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
-        names = list(REGISTRY.batch_names)
+        names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
     drops, rdrops = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
                                   plens, pbuf, rwant, n, overrides, names,
@@ -886,7 +1162,7 @@ def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
-        names = list(REGISTRY.batch_names)
+        names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
     drops = 0
     total = 0
@@ -924,7 +1200,7 @@ def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
-        names = list(REGISTRY.batch_names)
+        names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
     drops = 0
     rdrops = 0
@@ -1215,6 +1491,10 @@ class RpcQueue:
                     capacity=capacity, width=width,
                     payload_capacity=payload_capacity,
                     reply_capacity=reply_capacity, sanitize=bool(sanitize))
+        REGISTRY.note_queue_geometry(
+            {"capacity": int(capacity), "width": int(width),
+             "payload_capacity": int(payload_capacity),
+             "reply_capacity": int(reply_capacity), "shards": 1})
         return q
 
     def enqueue(self, name: str, *args, where=None) -> "RpcQueue":
@@ -1649,8 +1929,10 @@ class ShardedRpcQueue:
                sanitize: bool = False) -> "ShardedRpcQueue":
         q = RpcQueue.create(capacity, width, payload_capacity,
                             reply_capacity, sanitize=sanitize)
-        return ShardedRpcQueue(jax.tree.map(
+        sq = ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
+        REGISTRY.note_queue_geometry(queue_geometry(sq))
+        return sq
 
     # -- shard access (the expand/team protocol) -----------------------------
     def local_view(self) -> RpcQueue:

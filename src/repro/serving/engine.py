@@ -12,6 +12,8 @@ machinery (paging is pointless for constant-size state — noted in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -27,6 +29,7 @@ from repro.models.mlp import mlp_apply
 from repro.models.moe import moe_apply
 from repro.models.model_zoo import Model
 from repro.models.transformer import _slice_layer
+from repro.core import rpc as rpc_mod
 from repro.core.rpc import REGISTRY, RpcQueue
 from repro.serving import kvcache
 from repro.serving.kvcache import PagedKV
@@ -173,6 +176,10 @@ class ServingEngine:
             static_argnums=(1,))
         self._values, self._axes = split_params(params)
         self._axes_h = _Hashable(self._axes)
+        self._geom = {"batch_slots": int(batch_slots),
+                      "max_len": int(max_len), "page_size": int(page_size),
+                      "eos_id": eos_id}
+        self._step_source = "jit"
 
     # -- public API --------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
@@ -274,6 +281,118 @@ class ServingEngine:
             self.step()
             ticks += 1
         return dict(self.finished)
+
+    # -- durable artifact: AOT export + cold start --------------------------------
+    def export_artifact(self, directory: str,
+                        extra_meta: Optional[dict] = None) -> str:
+        """Export this engine as a durable cold-start artifact.
+
+        Writes into ``directory``:
+
+        * ``serve_step.bin`` — the jitted ``paged_decode_step`` (axes and
+          config closed over) serialized via ``jax.export``: the compiled
+          "CPU program on GPU" as portable bytes;
+        * ``manifest.json`` — the :class:`repro.core.rpc.RpcManifest`:
+          every pad/callee id, signature, interned format string, and
+          queue geometry this process bound (including the engine's spill
+          queue);
+        * a step-0 checkpoint of the parameter values, whose manifest
+          embeds the SAME transport section (checkpoint-as-artifact);
+        * ``engine.json`` — the engine geometry (batch slots, max_len,
+          page size, eos id) plus ``extra_meta``.
+
+        :meth:`from_artifact` reloads all four in a fresh process with
+        zero retrace."""
+        from jax import export as jax_export
+        from repro.ckpt import checkpoint as ckpt
+        os.makedirs(directory, exist_ok=True)
+        axes_tree, cfg = self._axes, self.cfg
+
+        def _serve(values, kv, tokens, active):
+            return paged_decode_step(merge_params(values, axes_tree),
+                                     kv, tokens, active, cfg)
+
+        def _spec(x):
+            return jax.ShapeDtypeStruct(np.shape(x), jnp.result_type(x))
+
+        exported = jax_export.export(jax.jit(_serve))(
+            jax.tree.map(_spec, self._values), jax.tree.map(_spec, self.kv),
+            jax.ShapeDtypeStruct((self.B,), jnp.int32),
+            jax.ShapeDtypeStruct((self.B,), jnp.bool_))
+        with open(os.path.join(directory, "serve_step.bin"), "wb") as f:
+            f.write(exported.serialize())
+        queues = [self.spill_q] if self.spill_q is not None else []
+        manifest = rpc_mod.export_manifest(queues=queues)
+        manifest.save(os.path.join(directory, "manifest.json"))
+        ckpt.save_checkpoint(directory, 0, {"values": self._values},
+                             transport=manifest)
+        meta = dict(self._geom)
+        meta.update(extra_meta or {})
+        with open(os.path.join(directory, "engine.json"), "w") as f:
+            json.dump(meta, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return directory
+
+    @classmethod
+    def from_artifact(cls, directory: str, cfg: ModelConfig, *,
+                      spill_sink: Optional[Any] = None,
+                      mesh=None) -> "ServingEngine":
+        """Cold-start an engine from :meth:`export_artifact` output in a
+        FRESH process: adopt the manifest (so every device-resident id
+        resolves), deserialize ``serve_step.bin``, and restore parameter
+        values into the exported input structure — the artifact is
+        self-describing, so there is no model rebuild and NO re-trace
+        (``engine._step_source == "artifact"``).  ``cfg`` must be the
+        same model config the exporting process served (the KV cache is
+        re-initialized from it)."""
+        from jax import export as jax_export
+        from repro.ckpt import checkpoint as ckpt
+        with open(os.path.join(directory, "engine.json")) as f:
+            meta = json.load(f)
+        manifest = rpc_mod.RpcManifest.load(
+            os.path.join(directory, "manifest.json"))
+        rpc_mod.adopt_manifest(manifest)
+        with open(os.path.join(directory, "serve_step.bin"), "rb") as f:
+            exported = jax_export.deserialize(bytearray(f.read()))
+
+        self = cls.__new__(cls)
+        self.model = None
+        self.cfg = cfg
+        self.params = None
+        self.B = int(meta["batch_slots"])
+        max_len, page_size = int(meta["max_len"]), int(meta["page_size"])
+        self.kv = kvcache.paged_cache_init(cfg, self.B, max_len,
+                                           page_size=page_size, mesh=mesh)
+        self.eos_id = meta.get("eos_id")
+        self.spill_sink = spill_sink
+        self.spill_q = None
+        self.spill_acks = {}
+        if spill_sink is not None:
+            maxp = (max_len + page_size - 1) // page_size
+            self.spill_q = RpcQueue.create(
+                capacity=max(2 * self.B, 8), width=3,
+                payload_capacity=max(self.B * maxp, 8),
+                reply_capacity=max(2 * self.B, 8))
+        self.slots = [_Slot() for _ in range(self.B)]
+        self.queue = []
+        self.finished = {}
+        self._next_id = 0
+        # the exported signature IS the values treedef — restore into it
+        flat = [jax.ShapeDtypeStruct(a.shape, a.dtype)
+                for a in exported.in_avals]
+        args, _kwargs = jax.tree_util.tree_unflatten(exported.in_tree, flat)
+        _, restored = ckpt.restore_checkpoint(
+            directory, {"values": args[0]}, step=0)
+        self._values = restored["values"]
+        self._axes = None
+        self._axes_h = None
+        self._exported = exported
+        self._step = (lambda values, _axes, kv, tokens, active:
+                      exported.call(values, kv, tokens, active))
+        self._geom = {"batch_slots": self.B, "max_len": max_len,
+                      "page_size": page_size, "eos_id": self.eos_id}
+        self._step_source = "artifact"
+        return self
 
 
 class _Hashable:

@@ -70,6 +70,12 @@ class PagedKV:
         return cls(*leaves, aux)
 
 
+jax.export.register_pytree_node_serialization(
+    PagedKV, serialized_name="repro.serving.kvcache.PagedKV",
+    serialize_auxdata=lambda page_size: str(int(page_size)).encode("ascii"),
+    deserialize_auxdata=lambda b: int(b.decode("ascii")))
+
+
 def _mesh_devices(mesh) -> int:
     """Device count of a mesh-like: a ``jax.sharding.Mesh`` or a plain int
     (logical shard count — lets tests/benches run D>1 shards on one physical

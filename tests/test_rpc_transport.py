@@ -1045,3 +1045,133 @@ def test_batched_hook_array_payload():
     assert seen == [(2, [2.0, 3.0, 4.0], 2.0),
                     (4, [4.0, 5.0, 6.0], 4.0),
                     (6, [6.0, 7.0, 8.0], 6.0)]
+
+
+# ---------------------------------------------------------------------------
+# Durable identity: content-hashed ids, manifest round trip, cold start
+# ---------------------------------------------------------------------------
+
+_XP_PROGRAM = r"""
+import json, os, sys
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import libc
+from repro.core import rpc as rpc_mod
+from repro.core.allocator import GenericAllocator as GAlloc
+from repro.core.rpc import REGISTRY, RpcQueue, RpcManifest
+
+outdir, mode = sys.argv[1], sys.argv[2]
+HEAP, FMT = "heap.xproc", "xp %d %.1f"
+libc.remote_heap_register(HEAP, GAlloc.init(256, cap=16))
+
+if mode == "adopt":
+    # fresh process: bind ids from the manifest BEFORE issuing anything
+    rpc_mod.adopt_manifest(
+        RpcManifest.load(os.path.join(outdir, "manifest.json")))
+
+fid = libc._intern_fmt(FMT)       # content-hashed: same id either way
+nid = libc._intern_fmt(HEAP)
+
+@jax.jit
+def prog():
+    q = RpcQueue.create(8, width=4, payload_capacity=32, reply_capacity=8)
+    q = libc.fprintf(q, FMT, jnp.int32(3), jnp.float32(1.5))
+    q, t = libc.remote_malloc_enqueue(q, HEAP,
+                                      jnp.asarray([8, 16], jnp.int32))
+    q = libc.fprintf(q, FMT, jnp.int32(4), jnp.float32(-0.5))
+    q = q.flush()
+    return q.result(t, (2,), jnp.int32)
+
+ptrs = np.asarray(prog()).tolist()
+jax.effects_barrier()
+state, host_ptrs = libc.remote_malloc_results(HEAP)
+out = {"printf": libc.drain_printf(),
+       "host_ptrs": [p.tolist() for p in host_ptrs],
+       "watermark": int(state.watermark),
+       "device_ptrs": ptrs}
+with open(os.path.join(outdir, f"{mode}.json"), "w") as f:
+    json.dump(out, f)
+if mode == "export":
+    rpc_mod.export_manifest().save(os.path.join(outdir, "manifest.json"))
+print("OK", mode)
+"""
+
+
+def _run_xproc(tmp_path, mode: str) -> dict:
+    import json as _json
+    import os as _os
+    import subprocess
+    import sys as _sys
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.path.join(_os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [_sys.executable, "-c", _XP_PROGRAM, str(tmp_path), mode],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    with open(tmp_path / f"{mode}.json") as f:
+        return _json.load(f)
+
+
+def test_cross_process_conformance(tmp_path):
+    """The export-in-A / adopt-in-B leg of the conformance sweep: process A
+    runs a batched program (fprintf + ticketed remote_malloc) and exports
+    its RpcManifest; process B — a FRESH interpreter — adopts the manifest
+    and issues the same program.  Host-visible effects (printf lines, heap
+    pointers, watermark) and device-visible results (reply-arena pointers)
+    must be bit-identical: durable identity means the transport binds the
+    same ids in any process."""
+    a = _run_xproc(tmp_path, "export")
+    b = _run_xproc(tmp_path, "adopt")
+    assert a == b
+
+
+def test_manifest_round_trips_ids():
+    """export -> JSON -> from_json -> adopt re-derives identical ids (the
+    content-hash property, in one process)."""
+    from repro.core import rpc as rpc_mod
+    from repro.core.rpc import RpcManifest
+    name, sig = "conf.roundtrip", (("val", (), "int32"),)
+    REGISTRY.register(name, lambda x: np.int32(x))
+    pid, _ = REGISTRY.landing_pad(name, sig)
+    m = RpcManifest.from_json(rpc_mod.export_manifest().to_json())
+    assert m.pads[pid]["callee"] == name
+    rpc_mod.adopt_manifest(m)              # re-adoption in-place is a no-op
+    assert REGISTRY.landing_pad(name, sig)[0] == pid
+
+
+def test_adopt_manifest_rejects_mismatched_signature():
+    """Acceptance gate: a manifest whose recorded signature no longer
+    hashes to its pad id is rejected with an error NAMING the pad."""
+    import json as _json
+    from repro.core import rpc as rpc_mod
+    from repro.core.rpc import RpcManifest
+    name, sig = "conf.mismatch", (("val", (), "int32"),)
+    REGISTRY.register(name, lambda x: np.int32(x))
+    REGISTRY.landing_pad(name, sig)
+    doc = _json.loads(rpc_mod.export_manifest().to_json())
+    for entry in doc["pads"].values():
+        if entry["callee"] == name:
+            entry["signature"][0][2] = "float32"    # tamper the dtype
+    tampered = RpcManifest.from_json(_json.dumps(doc))
+    with pytest.raises(ValueError, match=name):
+        rpc_mod.adopt_manifest(tampered)
+
+
+def test_adopt_manifest_requires_hosts():
+    """A manifest callee with no registered host function is a hard error
+    naming the callee (silent no-op binding would drop its records)."""
+    from repro.core import rpc as rpc_mod
+    from repro.core.rpc import RpcManifest
+    name = "conf.unbound_host"
+    REGISTRY.register(name, lambda *a: None)
+    cid = REGISTRY.batch_callee_id(name)
+    m = RpcManifest.from_json(rpc_mod.export_manifest().to_json())
+    REGISTRY.unregister(name)
+    try:
+        with pytest.raises(ValueError, match=name):
+            rpc_mod.adopt_manifest(m)
+        rpc_mod.adopt_manifest(m, require_hosts=False)   # explicit opt-out
+        assert REGISTRY.batch_names[cid] == name
+    finally:
+        REGISTRY.unregister(name)
