@@ -19,6 +19,15 @@ from typing import Callable, Dict
 
 import jax
 
+# On the CPU backend, async dispatch can DEADLOCK an ordered io_callback
+# drain: the callback thread blocks in np.asarray on a large operand
+# (payload arenas past ~64K words) whose definition event is queued behind
+# the very computation the callback is part of, while the main thread sits
+# in block_until_ready — every bench that flushes a queue is exposed.
+# Deterministically reproducible on this container at payload-1024; pin
+# synchronous dispatch for all benchmark processes (a no-op off-CPU).
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+
 ROWS = []
 
 

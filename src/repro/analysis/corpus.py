@@ -32,7 +32,7 @@ from repro.core import allocator
 from repro.core.allocator import SizeClassAllocator
 from repro.core.device_main import HostHook, device_run
 from repro.core.expand import expand
-from repro.core.rpc import REGISTRY, RpcQueue, rpc_call
+from repro.core.rpc import REGISTRY, RetryPolicy, RpcQueue, rpc_call
 
 _I32 = jax.ShapeDtypeStruct((), jnp.int32)
 
@@ -47,6 +47,9 @@ def _note(*args):
 
 REGISTRY.register("corpus.echo", _echo)
 REGISTRY.register("corpus.note", _note)
+# the retry-safe twin: same callee, declared idempotent — the
+# RETRY_NON_IDEMPOTENT fixed variant enqueues this one
+REGISTRY.register("corpus.echo_idem", _echo, idempotent=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +74,7 @@ def result_before_flush_fixed():
     q = RpcQueue.create(8, 4, 64, reply_capacity=8)
     q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(7), returns=_I32)
     q = q.flush()
-    q.result(t, _I32)
+    q.result_ok(t, _I32)              # guarded read after the flush
 
 
 def never_flushed():
@@ -117,6 +120,41 @@ def unguarded_result_fixed():
                               where=jnp.array(True))
     q = q.flush()
     q.result_ok(t, _I32)          # validity mask guards the read
+
+
+# -- robustness (v5 fault-tolerant boundary) --------------------------------
+
+def retry_non_idempotent():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8,
+                        retry=RetryPolicy(max_attempts=2))
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(1),
+                              returns=_I32)   # BUG: echo not idempotent
+    q = q.flush()
+    q.result_ok(t, _I32)
+
+
+def retry_non_idempotent_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8,
+                        retry=RetryPolicy(max_attempts=2))
+    q, t = q.enqueue_ticketed("corpus.echo_idem", jnp.int32(1),
+                              returns=_I32)   # registered idempotent=True
+    q = q.flush()
+    q.result_ok(t, _I32)
+
+
+def unchecked_status():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(5), returns=_I32)
+    q = q.flush()
+    q.result(t, _I32)             # BUG: status lane never consulted
+
+
+def unchecked_status_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8)
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(5), returns=_I32)
+    q = q.flush()
+    q.result_status(t)            # the guard: status consulted ...
+    q.result(t, _I32)             # ... so the raw read is fine
 
 
 # -- capacity proofs --------------------------------------------------------
@@ -299,14 +337,20 @@ def unstable_pad_name_fixed():
 
 CASES = (
     Case("result_before_flush", result_before_flush,
-         ("NEVER_FLUSHED", "RESULT_BEFORE_FLUSH")),
+         ("NEVER_FLUSHED", "RESULT_BEFORE_FLUSH", "UNCHECKED_STATUS")),
     Case("result_before_flush_fixed", result_before_flush_fixed, ()),
     Case("never_flushed", never_flushed, ("NEVER_FLUSHED",)),
     Case("never_flushed_fixed", never_flushed_fixed, ()),
     Case("stale_ticket", stale_ticket, ("STALE_TICKET",)),
     Case("stale_ticket_fixed", stale_ticket_fixed, ()),
-    Case("unguarded_result", unguarded_result, ("UNGUARDED_RESULT",)),
+    Case("unguarded_result", unguarded_result,
+         ("UNCHECKED_STATUS", "UNGUARDED_RESULT")),
     Case("unguarded_result_fixed", unguarded_result_fixed, ()),
+    Case("retry_non_idempotent", retry_non_idempotent,
+         ("RETRY_NON_IDEMPOTENT",)),
+    Case("retry_non_idempotent_fixed", retry_non_idempotent_fixed, ()),
+    Case("unchecked_status", unchecked_status, ("UNCHECKED_STATUS",)),
+    Case("unchecked_status_fixed", unchecked_status_fixed, ()),
     Case("capacity_records", capacity_records, ("CAPACITY_RECORDS",)),
     Case("capacity_records_fixed", capacity_records_fixed, ()),
     Case("capacity_payload", capacity_payload, ("CAPACITY_PAYLOAD",)),

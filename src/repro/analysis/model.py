@@ -51,6 +51,16 @@ Durable identity
   so the pad id changes every process: an exported ``RpcManifest``
   cannot round-trip and a cold-started replica binds a DIFFERENT pad.
   Pass ``HostHook(name=...)`` explicitly.
+
+Robustness (the v5 fault-tolerant boundary)
+  ``RETRY_NON_IDEMPOTENT`` — a queue with a ``RetryPolicy`` carries a
+  callee not registered ``idempotent=True``: the drain will NOT redrive
+  its transient failures (the record surfaces ``CALLEE_RAISED``), so the
+  retry policy silently does not apply where it was probably wanted.
+  ``UNCHECKED_STATUS``     — a ticketed reply consumed only through raw
+  ``result()`` with no ``result_status()``/``result_ok()`` guard
+  reachable: a ``CALLEE_RAISED``/``TIMEOUT``/``DROPPED`` record reads
+  silent zeros indistinguishable from a real zero reply.
 """
 from __future__ import annotations
 
@@ -65,8 +75,9 @@ POINTER_CODES = ("USE_AFTER_FREE", "DOUBLE_FREE", "OOB_PTR")
 PERF_CODES = ("RPC_IN_LOOP", "CALLBACK_IN_LOOP", "CALLBACK_IN_MESH",
               "HOOK_NEVER_FIRES")
 IDENTITY_CODES = ("UNSTABLE_PAD_NAME",)
+ROBUSTNESS_CODES = ("RETRY_NON_IDEMPOTENT", "UNCHECKED_STATUS")
 ALL_CODES = TICKET_CODES + CAPACITY_CODES + POINTER_CODES + PERF_CODES \
-    + IDENTITY_CODES
+    + IDENTITY_CODES + ROBUSTNESS_CODES
 
 
 @dataclasses.dataclass(frozen=True)

@@ -126,11 +126,21 @@ def analyze_events(events: List[dict]) -> HazardReport:
             for k, v in _lineage_caps(ev).items():
                 if lin.caps.get(k) is None:
                     lin.caps[k] = v
+            if ev.get("retry") and not ev.get("idempotent"):
+                report.add(Hazard.make(
+                    "RETRY_NON_IDEMPOTENT",
+                    f"retrying queue carries {ev.get('name')!r}, which is "
+                    "not registered idempotent=True — the drain will NOT "
+                    "redrive its transient failures (the record surfaces "
+                    "CALLEE_RAISED); register the callee idempotent, or "
+                    "drop the RetryPolicy",
+                    ev["site"], name=ev.get("name")))
             if ev.get("ticketed"):
                 tickets[ev["ticket_id"]] = {
                     "lineage": lin, "epoch": lin.flush_count,
                     "conditional": bool(ev.get("conditional")),
-                    "site": ev["site"], "name": ev.get("name")}
+                    "site": ev["site"], "name": ev.get("name"),
+                    "raw_sites": [], "guarded": False}
 
         elif kind == "rpc_flush":
             lin = lineage_for(ev, known=False)
@@ -172,6 +182,12 @@ def analyze_events(events: List[dict]) -> HazardReport:
                         "result() — use result_ok() so a dropped record "
                         "is distinguishable from a zero reply",
                         ev["site"], enqueue_site=tk["site"]))
+                if ev.get("via_result"):
+                    tk["raw_sites"].append(ev["site"])
+                else:
+                    # result_ok / result_status read: the status lane IS
+                    # consulted for this ticket
+                    tk["guarded"] = True
 
         elif kind == "rpc_immediate":
             if ev.get("in_mesh"):
@@ -240,6 +256,19 @@ def analyze_events(events: List[dict]) -> HazardReport:
                     "USE_AFTER_FREE",
                     f"freed heap pointer {what}",
                     ev["site"], ptr=ev.get("ptr")))
+
+    # -- end of capture: tickets consumed with no status guard ------------
+    for tk in tickets.values():
+        if tk.get("raw_sites") and not tk.get("guarded"):
+            report.add(Hazard.make(
+                "UNCHECKED_STATUS",
+                f"ticketed reply ({tk.get('name')!r}) consumed only "
+                "through result() — no result_status()/result_ok() guard "
+                "reachable, so a CALLEE_RAISED/TIMEOUT/DROPPED record "
+                "reads silent zeros indistinguishable from a real zero "
+                "reply",
+                tk["raw_sites"][0], name=tk.get("name"),
+                enqueue_site=tk["site"]))
 
     # -- end of capture: never-flushed lineages + capacity proofs ---------
     for lin in lineages.values():

@@ -98,6 +98,11 @@ class HostHook:
               the carried state on firing steps (``ok`` is the v4
               validity mask: False when the record or its reply was
               dropped).  Required with ``returns``.
+    idempotent: declares host_fn retry-safe: a queue draining with a
+              :class:`~repro.core.rpc.RetryPolicy` may redrive a failed
+              firing (at-least-once delivery).  Leave False for hooks
+              with non-repeatable side effects — retry then skips them
+              and the record surfaces as ``CALLEE_RAISED``.
     """
     every: int
     extract: Callable[[jax.Array, Any], Any]
@@ -106,6 +111,7 @@ class HostHook:
     batched: bool = False
     returns: Optional[jax.ShapeDtypeStruct] = None
     consume: Optional[Callable] = None
+    idempotent: bool = False
 
 
 def _hook_key(hook: HostHook) -> Optional[str]:
@@ -172,7 +178,7 @@ def _register_hook(hook: HostHook, hname: str) -> str:
             return np.int32(0)
 
     adapter.__name__ = hname
-    REGISTRY.register(hname, adapter)
+    REGISTRY.register(hname, adapter, idempotent=hook.idempotent)
     return hname
 
 
@@ -235,6 +241,7 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                donate: bool = True, jit_kwargs: Optional[dict] = None,
                queue_capacity: int = 1024, queue_width: int = 8,
                queue_payload: int = 4096, queue_reply: int = 0,
+               queue_retry=None, queue_timeout: Optional[float] = None,
                thread_queue: bool = False, return_queue: bool = False,
                mesh: Optional[Mesh] = None, state_spec=None) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
@@ -277,6 +284,12 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
     ``state_spec``, or the replicated out-spec silently keeps one
     device's copy.  Per-device hook *payloads* are fine either way — they
     live in the queue shards, not the carry).
+
+    ``queue_retry`` (a :class:`~repro.core.rpc.RetryPolicy`) and
+    ``queue_timeout`` (per-callee seconds) set the run queue's fault
+    policy: the boundary drain isolates failing hook firings into the
+    reply status lane, retries ``idempotent=True`` hooks, and bounds a
+    hung host_fn's wall clock instead of wedging the drain.
     """
     named = _name_hooks(hooks)
     for h, hname in named:
@@ -299,7 +312,8 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                     "thread_queue/return_queue instead")
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
                                     state_spec, queue_capacity, queue_width,
-                                    queue_payload, queue_reply, thread_queue,
+                                    queue_payload, queue_reply, queue_retry,
+                                    queue_timeout, thread_queue,
                                     return_queue, dict(jit_kwargs or {}))
 
         jit_kwargs = dict(jit_kwargs or {})
@@ -338,7 +352,9 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                     return (step + 1, state, q)
 
                 q0 = RpcQueue.create(queue_capacity, queue_width,
-                                     queue_payload, queue_reply)
+                                     queue_payload, queue_reply,
+                                     retry=queue_retry,
+                                     timeout=queue_timeout)
                 with events.loop_scope(int(n_steps)):
                     _, final, q = lax.while_loop(
                         cond, body, (jnp.zeros((), jnp.int32), state, q0))
@@ -365,6 +381,7 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
 
 def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
                      queue_capacity, queue_width, queue_payload, queue_reply,
+                     queue_retry, queue_timeout,
                      thread_queue, return_queue, jit_kwargs):
     """The sharded step loop: whole ``while_loop`` inside one ``shard_map``,
     hooks enqueued into this device's queue shard, ONE gathered drain at the
@@ -376,7 +393,8 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
     axes = tuple(mesh.axis_names)
     spec = state_spec if state_spec is not None else P()
     q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width,
-                                queue_payload, queue_reply)
+                                queue_payload, queue_reply,
+                                retry=queue_retry, timeout=queue_timeout)
 
     def region(state, q):
         lq = q.local_view()

@@ -219,10 +219,31 @@ def _with_sanitize(q):
     return q
 
 
+def _with_fault_policy(q, retry, timeout):
+    """The sharded queue object with transport ``retry``/``timeout`` set.
+
+    Same shape as :func:`_with_sanitize`: understands a
+    :class:`~repro.core.rpc.ShardedRpcQueue` (policy lives on the inner
+    ``RpcQueue``) or a bare ``RpcQueue``; duck-typed carriers (e.g. a
+    sharded ``LogRing``) pass through unchanged.  Retry and timeout are
+    static queue attributes consulted at drain time, so flipping them on
+    an already-enqueued queue is safe (unlike ``sanitize``)."""
+    if retry is None and timeout is None:
+        return q
+    inner = getattr(q, "q", None)
+    if inner is not None and hasattr(inner, "retry"):
+        return dataclasses.replace(
+            q, q=dataclasses.replace(inner, retry=retry, timeout=timeout))
+    if hasattr(q, "retry"):
+        return dataclasses.replace(q, retry=retry, timeout=timeout)
+    return q
+
+
 def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
            lanes: int = 1, check_vma: bool = False,
            heap: bool = False, queue: bool = False,
-           sanitize: bool = False) -> Callable:
+           sanitize: bool = False, queue_retry=None,
+           queue_timeout: Optional[float] = None) -> Callable:
     """Rewrite single-team ``fn`` for multi-team execution over ``mesh``.
 
     Inside ``fn`` the single-team primitives report *global* coordinates.
@@ -248,6 +269,12 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
     bit-identical to ``sanitize=False``; only queue-internal arena layout
     differs.  Pass a queue that has not enqueued yet (see
     :func:`_with_sanitize`).
+
+    ``queue_retry`` / ``queue_timeout`` (with ``queue=True``) set the
+    region transport's fault policy: the threaded queue drains with the
+    given :class:`~repro.core.rpc.RetryPolicy` and per-callee wall-clock
+    timeout (see the transport's status lane).  Retry only redrives
+    callees registered ``idempotent=True``.
     """
     axes = tuple(mesh.axis_names)
     n_extra = int(heap) + int(queue)
@@ -276,6 +303,11 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
             qi = int(heap)
             call_args = call_args[:qi] + \
                 (_with_sanitize(call_args[qi]),) + call_args[qi + 1:]
+        if queue and (queue_retry is not None or queue_timeout is not None):
+            qi = int(heap)
+            call_args = call_args[:qi] + \
+                (_with_fault_policy(call_args[qi], queue_retry,
+                                    queue_timeout),) + call_args[qi + 1:]
         if queue:
             # record the region's team-queue geometry for the manifest
             # scheme: export_manifest() ships it so a cold-start process

@@ -240,22 +240,28 @@ class LogRing:
 
     @staticmethod
     def create(capacity: int = 1024, name: str = _LOG_SINK,
-               payload_capacity: int = 1024) -> "LogRing":
+               payload_capacity: int = 1024, retry=None,
+               timeout: "float | None" = None) -> "LogRing":
         if name not in REGISTRY.hosts:
-            REGISTRY.register(name, _default_sink)
+            # log delivery is retry-safe: at-least-once may duplicate a
+            # line, never corrupt state
+            REGISTRY.register(name, _default_sink, idempotent=True)
         return LogRing(RpcQueue.create(capacity, width=3, payload_capacity=
-                                       payload_capacity), name)
+                                       payload_capacity, retry=retry,
+                                       timeout=timeout), name)
 
     @staticmethod
     def create_sharded(n_devices: int, capacity: int = 1024,
                       name: str = _LOG_SINK,
-                      payload_capacity: int = 1024) -> "LogRing":
+                      payload_capacity: int = 1024, retry=None,
+                      timeout: "float | None" = None) -> "LogRing":
         """One ring shard per mesh device, on the sharded batched transport."""
         if name not in REGISTRY.hosts:
-            REGISTRY.register(name, _default_sink)
+            REGISTRY.register(name, _default_sink, idempotent=True)
         return LogRing(ShardedRpcQueue.create(n_devices, capacity, width=3,
                                               payload_capacity=
-                                              payload_capacity), name)
+                                              payload_capacity, retry=retry,
+                                              timeout=timeout), name)
 
     # -- team protocol (threads through ``expand(..., queue=True)``) ----------
     def local_view(self) -> "LogRing":
@@ -296,7 +302,9 @@ def _default_sink(tag: int, value: float, payload=None):
         _LOG_LINES.append((int(tag), float(value), np.asarray(payload)))
 
 
-REGISTRY.register(_LOG_SINK, _default_sink)
+# retry-safe (at-least-once logging: a retried delivery can duplicate a
+# line but never corrupts sink state) — a RetryPolicy queue may redrive it
+REGISTRY.register(_LOG_SINK, _default_sink, idempotent=True)
 
 
 def drain_log_lines():
@@ -383,8 +391,10 @@ def _fwrite_sink(stream, data):
     _WRITE_STREAMS.setdefault(int(stream), []).append(np.asarray(data))
 
 
-REGISTRY.register("libc.fprintf", _fprintf_sink)
-REGISTRY.register("libc.fwrite", _fwrite_sink)
+# output sinks are retry-safe the same way the log sink is: a redriven
+# record appends a duplicate line/chunk, acceptable under at-least-once
+REGISTRY.register("libc.fprintf", _fprintf_sink, idempotent=True)
+REGISTRY.register("libc.fwrite", _fwrite_sink, idempotent=True)
 
 
 def fprintf(q: RpcQueue, fmt: str, *args, where=None) -> RpcQueue:
@@ -494,6 +504,9 @@ def _fgets_sink(stream, n):
     return window[:k]
 
 
+# NOT retry-safe: each call advances the stream cursor, so a retried
+# record would silently skip input — left idempotent=False (the default)
+# and the RETRY_NON_IDEMPOTENT lint flags retrying queues that carry them
 REGISTRY.register("libc.fread", _fread_sink)
 REGISTRY.register("libc.fgets", _fgets_sink)
 
@@ -584,6 +597,7 @@ def _remote_malloc_sink(name_id, dev, sizes):
     return out
 
 
+# NOT retry-safe: a redriven allocation leaks the first block
 REGISTRY.register("libc.remote_malloc", _remote_malloc_sink)
 
 

@@ -114,6 +114,20 @@ exposes the path generically, returning ``(queue, ticket)`` — the
 blocking-at-flush result path that makes input-style libc (``fread``,
 ``fgets``) and device-usable remote-malloc pointers possible.
 
+**Fault-tolerant host boundary (v5).**  The drain ISOLATES every callee:
+an exception or per-callee wall-clock ``timeout`` overrun fails only that
+record — traceback captured in :func:`error_log`, counts in
+``flush_stats()['callee_errors']`` — while the remaining records replay in
+the same deterministic order.  Reply-carrying queues add a per-slot STATUS
+lane: ``result_status(ticket)`` distinguishes OK / CALLEE_RAISED /
+TIMEOUT / DROPPED / REPLY_OVERFLOW / STALE, and ``result_ok`` requires
+``STATUS_OK``.  ``RpcQueue.create(retry=RetryPolicy(...), timeout=...)``
+adds drain-side retry with exponential backoff, gated by the callee's
+``register(idempotent=True)`` declaration.  ``queue.pressure()`` exposes
+device-visible ring/arena/reply occupancy for cond-before-enqueue, and
+:func:`set_fault_injector` is the deterministic fault-injection seam
+(:mod:`repro.testing.faults`) the chaos suite drives.
+
 **Sharded transport** (paper §3.3 applied to the transport).  Under
 ``expand`` every mesh device is a team, and funnelling all teams' records
 through one logical queue would serialize the machine on a single ring.
@@ -157,7 +171,11 @@ import dataclasses
 import hashlib
 import json
 import threading
+import time
+import traceback as traceback_mod
 import warnings
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -191,6 +209,8 @@ def _zero_san() -> Dict[str, Any]:
             #                         live object (found == 0 at the pad)
             "stale_ticket_reads": 0,  # results_host reads outside the epoch
             #                           window on a sanitized queue
+            "failed_ticket_reads": 0,  # result() consumed a failed/dropped
+            #                            ticket's zeros as if they were a reply
             "epochs": []}           # per-sanitized-flush ticket shadow records
 
 
@@ -218,6 +238,167 @@ def _san_bump(key: str, n: int = 1) -> None:
     if n:
         with _SAN_LOCK:
             _SAN[key] += n
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant host boundary: reply statuses, error log, retry, timeout
+# ---------------------------------------------------------------------------
+#
+# The host used to be treated as infallible: one raising callee inside the
+# ordered drain aborted the whole device program, and a dropped or stale
+# ticket read silent zeros indistinguishable from a real reply.  Every
+# per-record callee invocation is now ISOLATED — an exception or wall-clock
+# timeout fails only THAT record (traceback kept in ``error_log()``, count
+# in ``flush_stats()['callee_errors']``) while the remaining records still
+# replay in deterministic order — and every ticketed reply carries a status
+# readable on device via ``result_status(ticket)``.
+
+#: Reply statuses.  The drain stamps one per serviced ring slot; the
+#: device-side ``result_status`` adds the two it can decide locally
+#: (DROPPED for a ``-1`` ticket, STALE for a ticket outside the last
+#: flush's window).
+STATUS_OK = 0               # callee ran, reply (if declared) delivered
+STATUS_CALLEE_RAISED = 1    # callee raised; traceback in error_log()
+STATUS_TIMEOUT = 2          # callee exceeded the queue's per-callee timeout
+STATUS_DROPPED = 3          # record dropped at enqueue (where=False / arena
+#                             full), or its reply dropped by fault injection
+STATUS_REPLY_OVERFLOW = 4   # reply arena full at drain: callee NOT run
+STATUS_STALE = 5            # ticket from an epoch other than the last flush
+
+STATUS_NAMES = {STATUS_OK: "OK", STATUS_CALLEE_RAISED: "CALLEE_RAISED",
+                STATUS_TIMEOUT: "TIMEOUT", STATUS_DROPPED: "DROPPED",
+                STATUS_REPLY_OVERFLOW: "REPLY_OVERFLOW",
+                STATUS_STALE: "STALE"}
+
+#: Bounded host-side error log (oldest entries evicted past the cap).
+_ERROR_LOG_CAP = 256
+_ERRORS: List[Dict[str, Any]] = []
+_ERR_LOCK = threading.Lock()
+
+
+def error_log() -> List[Dict[str, Any]]:
+    """Snapshot of captured callee failures, oldest first.  Each entry:
+    ``{"callee", "ticket", "attempt", "error", "traceback"}`` — ``ticket``
+    is the record's global sequence number (``-1`` when unknown),
+    ``attempt`` the 1-based attempt that failed, ``error`` the repr of the
+    exception, ``traceback`` the formatted host-side traceback that
+    ``io_callback`` would otherwise have destroyed."""
+    with _ERR_LOCK:
+        return [dict(e) for e in _ERRORS]
+
+
+def clear_error_log() -> None:
+    with _ERR_LOCK:
+        _ERRORS.clear()
+
+
+def _log_callee_error(name: str, ticket: int, attempt: int,
+                      exc: BaseException) -> None:
+    entry = {"callee": name, "ticket": int(ticket), "attempt": int(attempt),
+             "error": repr(exc),
+             "traceback": "".join(traceback_mod.format_exception(
+                 type(exc), exc, exc.__traceback__))}
+    with _ERR_LOCK:
+        _ERRORS.append(entry)
+        if len(_ERRORS) > _ERROR_LOG_CAP:
+            del _ERRORS[:len(_ERRORS) - _ERROR_LOG_CAP]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Host-side retry for transiently-failing batched callees.
+
+    A queue created with ``retry=RetryPolicy(...)`` re-runs a failed
+    record up to ``max_attempts`` times total WITHIN its drain, sleeping
+    ``backoff * 2**(attempt-1)`` seconds between attempts (exponential
+    backoff; ``backoff=0`` retries immediately).  ``retryable`` (optional
+    ``exc -> bool``) filters which exceptions are worth retrying — by
+    default every ``Exception`` is.  Retries are GATED by the callee's
+    registration: only callees registered ``idempotent=True`` are re-run
+    (re-running an effectful callee would duplicate its side effects; the
+    analyzer flags the combination as ``RETRY_NON_IDEMPOTENT``).  A record
+    that exhausts its attempts reads ``CALLEE_RAISED``/``TIMEOUT``; one
+    that succeeds on a later attempt reads ``OK``.  Frozen (hashable): the
+    policy is static queue metadata, part of the pytree aux."""
+    max_attempts: int = 2
+    backoff: float = 0.0
+    retryable: Optional[Callable[[BaseException], bool]] = None
+
+
+class _CalleeTimeout(Exception):
+    """Raised (host-side, captured) when a callee exceeds the queue's
+    per-callee wall-clock timeout."""
+
+
+_TIMEOUT_POOL: List[ThreadPoolExecutor] = []
+
+
+def _call_with_timeout(fn, args, timeout: float):
+    """Run ``fn(*args)`` with a wall-clock deadline.  A timed-out callee
+    keeps running in its worker thread (Python cannot safely kill it) but
+    its record fails with ``STATUS_TIMEOUT`` and the drain moves on."""
+    if not _TIMEOUT_POOL:
+        _TIMEOUT_POOL.append(ThreadPoolExecutor(
+            max_workers=8, thread_name_prefix="rpc-callee"))
+    fut = _TIMEOUT_POOL[0].submit(fn, *args)
+    try:
+        return fut.result(timeout)
+    except _FutureTimeout:
+        raise _CalleeTimeout(
+            f"host callee exceeded the {timeout}s per-callee timeout "
+            "(still running in its worker thread; record marked TIMEOUT)"
+        ) from None
+
+
+# The deterministic fault-injection seam (repro.testing.faults plugs in
+# here).  At most one injector is active; it is consulted at DISPATCH time
+# inside the drain, so a program traced once can run with and without
+# faults.  Protocol: ``on_call(name, attempt) -> Optional[delay_seconds]``
+# (may raise to fail the record before its callee runs — host effects stay
+# clean) and ``on_reply(name, words) -> Optional[int32 words]`` (``None``
+# drops the reply; a modified array corrupts it in place).
+_FAULT_INJECTOR: List[Any] = []
+
+
+def set_fault_injector(inj=None) -> None:
+    """Install (or with ``None`` remove) the process-wide drain fault
+    injector.  Testing seam — see :mod:`repro.testing.faults`."""
+    _FAULT_INJECTOR[:] = [] if inj is None else [inj]
+
+
+def _invoke_record(name: str, fn, args, ticket: int, inj,
+                   retry: Optional[RetryPolicy], timeout: Optional[float],
+                   idempotent: bool):
+    """Run one record's callee with failure isolation, fault injection,
+    timeout, and (idempotent-gated) retry.  Returns ``(status, out,
+    n_retries)`` — ``out`` is None on failure."""
+    attempts = (retry.max_attempts if (retry is not None and idempotent)
+                else 1)
+    attempt = 1
+    while True:
+        try:
+            delay = inj.on_call(name, attempt) if inj is not None else None
+            if delay:
+                call = (lambda *a: (time.sleep(delay), fn(*a))[1])
+            else:
+                call = fn
+            if timeout is not None:
+                out = _call_with_timeout(call, args, timeout)
+            else:
+                out = call(*args)
+            return STATUS_OK, out, attempt - 1
+        except Exception as exc:         # noqa: BLE001 — the isolation point
+            _log_callee_error(name, ticket, attempt, exc)
+            timed_out = isinstance(exc, _CalleeTimeout)
+            can_retry = (attempt < attempts
+                         and (retry.retryable is None
+                              or retry.retryable(exc)))
+            if not can_retry:
+                return (STATUS_TIMEOUT if timed_out
+                        else STATUS_CALLEE_RAISED), None, attempt - 1
+            if retry.backoff:
+                time.sleep(retry.backoff * (2.0 ** (attempt - 1)))
+            attempt += 1
 
 
 # ---------------------------------------------------------------------------
@@ -425,21 +606,31 @@ class _Registry:
         self.stats: Dict[str, Dict[str, float]] = {}
         self.batch_ids: Dict[str, int] = {}        # name -> queue callee id
         self.batch_names: Dict[int, str] = {}      # queue callee id -> name
+        self.idempotent: Dict[str, bool] = {}      # name -> safe to re-run
         self.queue_geoms: List[Dict[str, int]] = []  # geometries seen/adopted
         self.queue_drops = 0
         self.arena_drops = 0
         self.reply_drops = 0
+        self.callee_errors = 0
+        self.retries = 0
         self.flushes = 0
         self.last_flush_drops = 0
         self.last_flush_arena_drops = 0
         self.last_flush_reply_drops = 0
+        self.last_flush_callee_errors = 0
 
-    def register(self, name: str, fn: Callable):
+    def register(self, name: str, fn: Callable, idempotent: bool = False):
         """(Re-)bind ``name`` to ``fn``.  Pads, pad wrappers and stats for
         ``name`` survive re-registration: already-traced stubs dispatch to the
-        NEW function (wrappers resolve the callee at dispatch time)."""
+        NEW function (wrappers resolve the callee at dispatch time).
+
+        ``idempotent=True`` declares that re-running ``fn`` with the same
+        arguments is safe — the gate for drain-side
+        :class:`RetryPolicy` retries (a non-idempotent callee is never
+        re-run; the record fails on its first exception)."""
         with self.lock:
             self.hosts[name] = fn
+            self.idempotent[name] = bool(idempotent)
             self.stats.setdefault(name, dict(_zero_stats(), pads=0))
 
     def unregister(self, name: str):
@@ -451,6 +642,7 @@ class _Registry:
         name later re-derives the SAME ids — nothing to recycle.)"""
         with self.lock:
             self.hosts.pop(name, None)
+            self.idempotent.pop(name, None)
             self.stats.pop(name, None)
             for key in [k for k in self.pads if k[0] == name]:
                 pid = self.pads.pop(key)
@@ -628,7 +820,8 @@ class _Registry:
             self.queue_drops += n
 
     def bump_flush(self, drops: int, arena_drops: int = 0,
-                   reply_drops: int = 0):
+                   reply_drops: int = 0, callee_errors: int = 0,
+                   retries: int = 0):
         with self.lock:
             self.flushes += 1
             self.last_flush_drops = drops
@@ -636,6 +829,9 @@ class _Registry:
             self.last_flush_arena_drops = arena_drops
             self.reply_drops += reply_drops
             self.last_flush_reply_drops = reply_drops
+            self.callee_errors += callee_errors
+            self.last_flush_callee_errors = callee_errors
+            self.retries += retries
 
 
 REGISTRY = _Registry()
@@ -686,7 +882,13 @@ def flush_stats() -> Dict[str, int]:
     to a full REPLY arena (``reply_drops``, counted at drain time: the
     reply could not fit, so the record's callee was NOT run and the
     reader sees zeros — the drain-side atomic drop), plus each count for
-    the most recent flush alone (0 when nothing was lost)."""
+    the most recent flush alone (0 when nothing was lost).
+
+    ``callee_errors`` / ``last_callee_errors`` count records whose callee
+    raised or timed out during a drain AFTER any retries (the failure was
+    isolated: the record read ``CALLEE_RAISED``/``TIMEOUT``, the rest of
+    the flush completed — tracebacks in :func:`error_log`).  ``retries``
+    counts extra attempts spent by :class:`RetryPolicy` queues."""
     with REGISTRY.lock:
         return {"flushes": REGISTRY.flushes,
                 "drops": REGISTRY.queue_drops,
@@ -694,7 +896,10 @@ def flush_stats() -> Dict[str, int]:
                 "arena_drops": REGISTRY.arena_drops,
                 "last_arena_drops": REGISTRY.last_flush_arena_drops,
                 "reply_drops": REGISTRY.reply_drops,
-                "last_reply_drops": REGISTRY.last_flush_reply_drops}
+                "last_reply_drops": REGISTRY.last_flush_reply_drops,
+                "callee_errors": REGISTRY.callee_errors,
+                "last_callee_errors": REGISTRY.last_flush_callee_errors,
+                "retries": REGISTRY.retries}
 
 
 def reset_rpc_stats():
@@ -708,10 +913,13 @@ def reset_rpc_stats():
         REGISTRY.queue_drops = 0
         REGISTRY.arena_drops = 0
         REGISTRY.reply_drops = 0
+        REGISTRY.callee_errors = 0
+        REGISTRY.retries = 0
         REGISTRY.flushes = 0
         REGISTRY.last_flush_drops = 0
         REGISTRY.last_flush_arena_drops = 0
         REGISTRY.last_flush_reply_drops = 0
+        REGISTRY.last_flush_callee_errors = 0
 
 
 # ---------------------------------------------------------------------------
@@ -952,30 +1160,47 @@ def _find_obj(state, ptr):
 
 def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
                   rwant, n, overrides, names, hosts, per_name_calls,
-                  per_name_bytes, reply=None) -> Tuple[int, int]:
+                  per_name_bytes, reply=None, base=0, idem=None,
+                  retry=None, timeout=None) -> Tuple[int, int, int, int]:
     """Replay one queue shard's records in enqueue order; returns ``(number
     of records overwritten before this flush could drain them, number of
-    replies dropped because the reply arena was full)``.
+    replies dropped because the reply arena was full, records whose callee
+    failed after retries, retry attempts spent)``.
 
     Scalar arguments come out of the int/float lanes; payload arguments
     (``pmask`` bit set) are reattached from the arena via their descriptor —
     offset in the int lane, length in ``plens``, dtype from the ``imask``
     tag (set = int32 words, clear = float32 bitcast).
 
-    ``reply`` (a ``(rwords, roff, rlen)`` triple of preallocated numpy
-    arrays, or None on a reply-less drain) collects result-bearing records:
-    a record whose ``rwant`` lane is nonzero has its callee's return value
-    coerced to ``|rwant|`` words of the declared dtype (``+`` = int32, ``-``
-    = float32 bitcast; short results zero-padded, long ones truncated, a
-    None return reads as zeros) and appended at the reply watermark, with
-    the slot's ``(offset, length)`` recorded for the device-side
-    ``result()`` read.  A result-bearing record whose reply cannot fit is
-    dropped ATOMICALLY — callee not run, nothing written, counted."""
+    ``reply`` (a ``(rwords, roff, rlen, rstat)`` quadruple of preallocated
+    numpy arrays, or None on a reply-less drain) collects result-bearing
+    records: a record whose ``rwant`` lane is nonzero has its callee's
+    return value coerced to ``|rwant|`` words of the declared dtype (``+``
+    = int32, ``-`` = float32 bitcast; short results zero-padded, long ones
+    truncated, a None return reads as zeros) and appended at the reply
+    watermark, with the slot's ``(offset, length)`` recorded for the
+    device-side ``result()`` read and its STATUS stamped into ``rstat``.
+    A result-bearing record whose reply cannot fit is dropped ATOMICALLY —
+    callee not run, nothing written, ``REPLY_OVERFLOW`` stamped, counted.
+
+    Every callee invocation is ISOLATED: an exception (or a wall-clock
+    ``timeout`` overrun) fails only that record — ``CALLEE_RAISED`` /
+    ``TIMEOUT`` stamped, traceback captured into :func:`error_log` — and
+    the remaining records still replay in order.  ``retry`` (a
+    :class:`RetryPolicy`) re-runs failed records for callees registered
+    ``idempotent=True``.  ``base`` is the epoch's global ticket base (error
+    log attribution); ``idem`` the registry idempotency snapshot."""
     cap = callee.shape[0]
     lo = max(0, n - cap)
     fbuf = pbuf.view(np.float32)
     rhead = 0
     rdrops = 0
+    cerrs = 0
+    nretries = 0
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    # the fault-free default path stays a bare call in a try/except — no
+    # thread pool, no injector lookup per record (the <10% overhead gate)
+    fast = inj is None and retry is None and timeout is None
     for j in range(lo, n):
         k = j % cap
         cid = int(callee[k])
@@ -1011,37 +1236,63 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
             # result can never reach the requester) and the reader sees
             # zeros with ok=False
             rdrops += 1
+            reply[3][k] = STATUS_REPLY_OVERFLOW
             continue
-        out = fn(*args)
-        if want != 0:
-            rwords, roff, rlen = reply
-            nw = abs(want)
-            dt = np.int32 if want > 0 else np.float32
+        if fast:
             try:
-                arr = (np.zeros((nw,), dt) if out is None
-                       else np.asarray(out).reshape(-1).astype(dt))
-            except (TypeError, ValueError):
-                # a non-numeric return must fail only THIS record's reply,
-                # not abort the drain mid-replay and discard its siblings
-                warnings.warn(
-                    f"RPC reply from {name!r} ({type(out).__name__}) is "
-                    f"not coercible to {dt.__name__}; its reader sees "
-                    "zeros", RuntimeWarning, stacklevel=2)
-                arr = np.zeros((nw,), dt)
-            if arr.size < nw:
-                arr = np.pad(arr, (0, nw - arr.size))
-            rwords[rhead:rhead + nw] = arr[:nw].view(np.int32)
-            roff[k] = rhead
-            rlen[k] = nw
-            rhead += nw
-            nbytes += 4 * nw
+                out = fn(*args)
+                status = STATUS_OK
+            except Exception as exc:     # noqa: BLE001 — isolation point
+                _log_callee_error(name, int(base) + j, 1, exc)
+                status, out = STATUS_CALLEE_RAISED, None
+        else:
+            status, out, rr = _invoke_record(
+                name, fn, args, int(base) + j, inj, retry, timeout,
+                bool((idem or {}).get(name, False)))
+            nretries += rr
+        if status != STATUS_OK:
+            cerrs += 1
+        if reply is not None:
+            rwords, roff, rlen, rstat = reply
+            if want != 0 and status == STATUS_OK:
+                nw = abs(want)
+                dt = np.int32 if want > 0 else np.float32
+                try:
+                    arr = (np.zeros((nw,), dt) if out is None
+                           else np.asarray(out).reshape(-1).astype(dt))
+                except (TypeError, ValueError):
+                    # a non-numeric return must fail only THIS record's
+                    # reply, not abort the drain and discard its siblings
+                    warnings.warn(
+                        f"RPC reply from {name!r} ({type(out).__name__}) "
+                        f"is not coercible to {dt.__name__}; its reader "
+                        "sees zeros", RuntimeWarning, stacklevel=2)
+                    arr = np.zeros((nw,), dt)
+                if arr.size < nw:
+                    arr = np.pad(arr, (0, nw - arr.size))
+                words = arr[:nw].view(np.int32)
+                if inj is not None:
+                    words = inj.on_reply(name, words)
+                if words is None:
+                    # injected reply drop: the callee RAN (host effects
+                    # stand) but its reply never lands — reader sees
+                    # zeros, status says DROPPED
+                    status = STATUS_DROPPED
+                else:
+                    rwords[rhead:rhead + nw] = words
+                    roff[k] = rhead
+                    rlen[k] = nw
+                    rhead += nw
+                    nbytes += 4 * nw
+            rstat[k] = status
         per_name_calls[name] = per_name_calls.get(name, 0) + 1
         per_name_bytes[name] = per_name_bytes.get(name, 0) + nbytes
-    return lo, rdrops
+    return lo, rdrops, cerrs, nretries
 
 
 def _finish_flush(drops: int, arena_drops: int, per_name_calls,
-                  per_name_bytes, reply_drops: int = 0):
+                  per_name_bytes, reply_drops: int = 0,
+                  callee_errors: int = 0, retries: int = 0):
     if drops:
         REGISTRY.bump_drops(drops)
         warnings.warn(
@@ -1062,28 +1313,40 @@ def _finish_flush(drops: int, arena_drops: int, per_name_calls,
             "atomically — callee NOT run, readers see zeros).  Flush more "
             "often or enlarge reply_capacity.", RuntimeWarning,
             stacklevel=2)
-    REGISTRY.bump_flush(drops, arena_drops, reply_drops)
+    if callee_errors:
+        warnings.warn(
+            f"RpcQueue flush isolated {callee_errors} failing callee "
+            "record(s): the callee raised or timed out, the record reads "
+            "CALLEE_RAISED/TIMEOUT, and the rest of the flush completed — "
+            "tracebacks in repro.core.rpc.error_log().", RuntimeWarning,
+            stacklevel=2)
+    REGISTRY.bump_flush(drops, arena_drops, reply_drops,
+                        callee_errors=callee_errors, retries=retries)
     for name, calls in per_name_calls.items():
         REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
 
 
-def _bind_drain(fn, handlers):
-    """Close ``handlers`` over a drain callable — or return the stable
-    module-level callable untouched when there are none (the jit cache and
-    callback registry key on callable identity, so the no-handler path
-    must always hand ``io_callback`` the same object)."""
-    if not handlers:
+def _bind_drain(fn, handlers, retry=None, timeout=None):
+    """Close ``handlers`` and the queue's retry/timeout policy over a drain
+    callable — or return the stable module-level callable untouched when
+    there is nothing to bind (the jit cache and callback registry key on
+    callable identity, so the default path must always hand ``io_callback``
+    the same object).  The fault INJECTOR is deliberately not bound: it is
+    looked up at dispatch time, so one traced program runs with and
+    without faults."""
+    if not handlers and retry is None and timeout is None:
         return fn
-    bound = dict(handlers)
+    bound = dict(handlers) if handlers else None
 
     def drain(*flat):
-        return fn(*flat, overrides=bound)
+        return fn(*flat, overrides=bound, retry=retry, timeout=timeout)
 
     return drain
 
 
 def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
-                 head, phead, adrops, overrides=None):
+                 head, phead, adrops, base, overrides=None, retry=None,
+                 timeout=None):
     """Host side of :meth:`RpcQueue.flush` (reply-less queues): replay
     queued records in enqueue order, dispatching each to its registered
     callee (resolved at drain time), unless ``overrides`` maps the callee's
@@ -1106,21 +1369,25 @@ def _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     with REGISTRY.lock:                    # one snapshot, not per record
         names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
-    drops, _ = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
-                             plens, pbuf, None, n, overrides, names, hosts,
-                             per_name_calls, per_name_bytes)
-    _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes)
+        idem = dict(REGISTRY.idempotent)
+    drops, _, cerrs, nretries = _replay_shard(
+        callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, None, n,
+        overrides, names, hosts, per_name_calls, per_name_bytes,
+        base=int(base), idem=idem, retry=retry, timeout=timeout)
+    _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes,
+                  callee_errors=cerrs, retries=nretries)
     return np.int32(n)
 
 
 def _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals, plens,
-                         pbuf, rwant, head, phead, adrops, rc,
-                         overrides=None):
+                         pbuf, rwant, head, phead, adrops, base, rc,
+                         overrides=None, retry=None, timeout=None):
     """Host side of the TWO-PHASE flush (``reply_capacity > 0`` queues):
     phase one replays records exactly like :func:`_drain_queue`; phase two
-    returns the reply triple ``(rbuf, roff, rlen)`` the device scatters
-    into its reply state — the flat i32 reply buffer plus the per-slot
-    offset/length table keyed by ticket slot.  ``rc`` (the static reply
+    returns the reply quadruple ``(rbuf, roff, rlen, rstat)`` the device
+    scatters into its reply state — the flat i32 reply buffer, the
+    per-slot offset/length table keyed by ticket slot, and the per-slot
+    STATUS lane ``result_status`` reads.  ``rc`` (the static reply
     capacity) travels as a scalar operand so this stays ONE stable
     module-level callable for every reply-carrying queue."""
     callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant = (
@@ -1132,22 +1399,26 @@ def _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals, plens,
     rwords = np.zeros((rc,), np.int32)
     roff = np.zeros((cap,), np.int32)
     rlen = np.zeros((cap,), np.int32)
+    rstat = np.zeros((cap,), np.int32)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
         names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
-    drops, rdrops = _replay_shard(callee, nargs, imask, pmask, ivals, fvals,
-                                  plens, pbuf, rwant, n, overrides, names,
-                                  hosts, per_name_calls, per_name_bytes,
-                                  reply=(rwords, roff, rlen))
+        idem = dict(REGISTRY.idempotent)
+    drops, rdrops, cerrs, nretries = _replay_shard(
+        callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant, n,
+        overrides, names, hosts, per_name_calls, per_name_bytes,
+        reply=(rwords, roff, rlen, rstat), base=int(base), idem=idem,
+        retry=retry, timeout=timeout)
     _finish_flush(drops, int(adrops), per_name_calls, per_name_bytes,
-                  reply_drops=rdrops)
-    return rwords, roff, rlen
+                  reply_drops=rdrops, callee_errors=cerrs, retries=nretries)
+    return rwords, roff, rlen, rstat
 
 
 def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
-                         pbuf, head, phead, adrops, overrides=None):
+                         pbuf, head, phead, adrops, base, overrides=None,
+                         retry=None, timeout=None):
     """Host side of :meth:`ShardedRpcQueue.flush` (reply-less; v3 operand
     tuple, no dead ``rwant`` transfer): every array carries a leading
     device axis; records replay in ``(device, slot)`` order — device 0's
@@ -1159,63 +1430,80 @@ def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
                                 plens, pbuf))
     head = np.asarray(head)
     adrops = np.asarray(adrops)
+    base = np.asarray(base)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
         names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
+        idem = dict(REGISTRY.idempotent)
     drops = 0
     total = 0
+    cerrs = 0
+    nretries = 0
     for d in range(callee.shape[0]):
         n = int(head[d])
         total += n
-        sh_drops, _ = _replay_shard(callee[d], nargs[d], imask[d], pmask[d],
-                                    ivals[d], fvals[d], plens[d], pbuf[d],
-                                    None, n, overrides, names, hosts,
-                                    per_name_calls, per_name_bytes)
+        sh_drops, _, sh_cerrs, sh_rr = _replay_shard(
+            callee[d], nargs[d], imask[d], pmask[d], ivals[d], fvals[d],
+            plens[d], pbuf[d], None, n, overrides, names, hosts,
+            per_name_calls, per_name_bytes, base=int(base[d]), idem=idem,
+            retry=retry, timeout=timeout)
         drops += sh_drops
-    _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes)
+        cerrs += sh_cerrs
+        nretries += sh_rr
+    _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes,
+                  callee_errors=cerrs, retries=nretries)
     return np.int32(total)
 
 
 def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
-                                 plens, pbuf, rwant, head, phead, adrops, rc,
-                                 overrides=None):
+                                 plens, pbuf, rwant, head, phead, adrops,
+                                 base, rc, overrides=None, retry=None,
+                                 timeout=None):
     """Sharded two-phase flush: replay in ``(device, slot)`` order AND
-    return per-device reply triples stacked along the device axis —
-    ``(rbuf (D, rc), roff (D, cap), rlen (D, cap))``.  Each shard's replies
-    pack into ITS reply buffer in the deterministic replay order, so
-    ``q.local(d).result(ticket, ...)`` reads device ``d``'s results no
-    matter how the drain interleaved the shards."""
+    return per-device reply state stacked along the device axis —
+    ``(rbuf (D, rc), roff (D, cap), rlen (D, cap), rstat (D, cap))``.
+    Each shard's replies pack into ITS reply buffer in the deterministic
+    replay order, so ``q.local(d).result(ticket, ...)`` reads device
+    ``d``'s results no matter how the drain interleaved the shards."""
     callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant = (
         np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
                                 plens, pbuf, rwant))
     head = np.asarray(head)
     adrops = np.asarray(adrops)
+    base = np.asarray(base)
     rc = int(rc)
     D, cap = callee.shape[0], callee.shape[1]
     rwords = np.zeros((D, rc), np.int32)
     roff = np.zeros((D, cap), np.int32)
     rlen = np.zeros((D, cap), np.int32)
+    rstat = np.zeros((D, cap), np.int32)
     per_name_calls: Dict[str, int] = {}
     per_name_bytes: Dict[str, int] = {}
     with REGISTRY.lock:
         names = dict(REGISTRY.batch_names)
         hosts = dict(REGISTRY.hosts)
+        idem = dict(REGISTRY.idempotent)
     drops = 0
     rdrops = 0
+    cerrs = 0
+    nretries = 0
     for d in range(D):
         n = int(head[d])
-        sh_drops, sh_rdrops = _replay_shard(
+        sh_drops, sh_rdrops, sh_cerrs, sh_rr = _replay_shard(
             callee[d], nargs[d], imask[d], pmask[d], ivals[d], fvals[d],
             plens[d], pbuf[d], rwant[d], n, overrides, names, hosts,
             per_name_calls, per_name_bytes,
-            reply=(rwords[d], roff[d], rlen[d]))
+            reply=(rwords[d], roff[d], rlen[d], rstat[d]),
+            base=int(base[d]), idem=idem, retry=retry, timeout=timeout)
         drops += sh_drops
         rdrops += sh_rdrops
+        cerrs += sh_cerrs
+        nretries += sh_rr
     _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes,
-                  reply_drops=rdrops)
-    return rwords, roff, rlen
+                  reply_drops=rdrops, callee_errors=cerrs, retries=nretries)
+    return rwords, roff, rlen, rstat
 
 
 def _san_scan_shard(cap: int, n: int, pmask, ivals, plens, pbuf
@@ -1297,42 +1585,48 @@ def _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=None,
 
 
 def _drain_queue_san(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
-                     head, phead, adrops, overrides=None):
+                     head, phead, adrops, base, overrides=None, retry=None,
+                     timeout=None):
     """Sanitized variant of :func:`_drain_queue` — same replay, preceded by
     the canary/poison pass.  A distinct module-level callable so sanitized
     and plain queues each hand ``io_callback`` ONE stable object."""
     _san_precheck(callee, pmask, ivals, plens, pbuf, head)
     return _drain_queue(callee, nargs, imask, pmask, ivals, fvals, plens,
-                        pbuf, head, phead, adrops, overrides=overrides)
+                        pbuf, head, phead, adrops, base,
+                        overrides=overrides, retry=retry, timeout=timeout)
 
 
 def _drain_queue_replies_san(callee, nargs, imask, pmask, ivals, fvals,
-                             plens, pbuf, rwant, head, phead, adrops, rc,
-                             overrides=None):
+                             plens, pbuf, rwant, head, phead, adrops, base,
+                             rc, overrides=None, retry=None, timeout=None):
     _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=rwant)
     return _drain_queue_replies(callee, nargs, imask, pmask, ivals, fvals,
-                                plens, pbuf, rwant, head, phead, adrops, rc,
-                                overrides=overrides)
+                                plens, pbuf, rwant, head, phead, adrops,
+                                base, rc, overrides=overrides, retry=retry,
+                                timeout=timeout)
 
 
 def _drain_queue_sharded_san(callee, nargs, imask, pmask, ivals, fvals,
-                             plens, pbuf, head, phead, adrops,
-                             overrides=None):
+                             plens, pbuf, head, phead, adrops, base,
+                             overrides=None, retry=None, timeout=None):
     _san_precheck(callee, pmask, ivals, plens, pbuf, head, sharded=True)
     return _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals,
-                                plens, pbuf, head, phead, adrops,
-                                overrides=overrides)
+                                plens, pbuf, head, phead, adrops, base,
+                                overrides=overrides, retry=retry,
+                                timeout=timeout)
 
 
 def _drain_queue_sharded_replies_san(callee, nargs, imask, pmask, ivals,
                                      fvals, plens, pbuf, rwant, head, phead,
-                                     adrops, rc, overrides=None):
+                                     adrops, base, rc, overrides=None,
+                                     retry=None, timeout=None):
     _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=rwant,
                   sharded=True)
     return _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals,
                                         fvals, plens, pbuf, rwant, head,
-                                        phead, adrops, rc,
-                                        overrides=overrides)
+                                        phead, adrops, base, rc,
+                                        overrides=overrides, retry=retry,
+                                        timeout=timeout)
 
 
 def _payload_words(a: jax.Array) -> Tuple[jax.Array, bool]:
@@ -1401,7 +1695,10 @@ class RpcQueue:
     rbuf: jax.Array      # (RC,) int32 — reply arena from the LAST flush
     roff: jax.Array      # (N,) int32 — reply offset per slot (last flush)
     rlen: jax.Array      # (N,) int32 — reply words per slot (0 = none)
-    #                      (rwant/roff/rlen are sized (0,) when RC == 0)
+    rstat: jax.Array     # (N,) int32 — reply STATUS per slot (last flush):
+    #                       STATUS_OK / CALLEE_RAISED / TIMEOUT / DROPPED /
+    #                       REPLY_OVERFLOW, read via result_status()
+    #                       (rwant/roff/rlen/rstat are sized (0,) at RC == 0)
     base: jax.Array      # () int32 — global seq no. of this epoch's first
     #                       record (tickets = base + within-epoch order)
     rbase: jax.Array     # () int32 — base of the epoch the reply table
@@ -1412,17 +1709,22 @@ class RpcQueue:
     #                       must not change the while_loop carry's treedef)
     sanitize: bool = False  # static: canary-wrapped payload reservations +
     #                         sanitized drains (see sanitize_stats())
+    retry: Optional[RetryPolicy] = None  # static: drain-side retry of
+    #                                      idempotent callees' failures
+    timeout: Optional[float] = None      # static: per-callee wall-clock
+    #                                      deadline (seconds) at drain
 
     def tree_flatten(self):
         return ((self.callee, self.nargs, self.imask, self.pmask, self.ivals,
                  self.fvals, self.plens, self.pbuf, self.head, self.phead,
                  self.adrops, self.rwant, self.rbuf, self.roff, self.rlen,
-                 self.base, self.rbase, self.rcount, self.fonce),
-                bool(self.sanitize))
+                 self.rstat, self.base, self.rbase, self.rcount, self.fonce),
+                (bool(self.sanitize), self.retry, self.timeout))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, sanitize=bool(aux))
+        return cls(*leaves, sanitize=bool(aux[0]), retry=aux[1],
+                   timeout=aux[2])
 
     @property
     def capacity(self) -> int:
@@ -1440,11 +1742,18 @@ class RpcQueue:
     def reply_capacity(self) -> int:
         return self.rbuf.shape[-1]
 
+    # once-per-queue-object guard for the failed-ticket-read warning (a
+    # plain class attribute, not a dataclass field: it is host-side
+    # bookkeeping, never a pytree leaf)
+    _failed_read_warned = False
+
     @staticmethod
     def create(capacity: int = 1024, width: int = 4,
                payload_capacity: int = 1024,
                reply_capacity: int = 0,
-               sanitize: bool = False) -> "RpcQueue":
+               sanitize: bool = False,
+               retry: Optional[RetryPolicy] = None,
+               timeout: Optional[float] = None) -> "RpcQueue":
         """``payload_capacity`` is the arena size in 4-byte words shared by
         every payload between two flushes (0 = scalar-only queue: array
         args are rejected at trace time).  ``reply_capacity`` is the REPLY
@@ -1460,7 +1769,13 @@ class RpcQueue:
         payloads for the freed-block :data:`POISON` pattern, publishing
         findings through :func:`sanitize_stats`.  Delivered records,
         replies, and program results are bit-identical to an unsanitized
-        queue as long as nothing stomps the arena."""
+        queue as long as nothing stomps the arena.
+
+        ``retry`` (a :class:`RetryPolicy`) re-runs records whose
+        ``idempotent=True`` callee failed, with host-side exponential
+        backoff; ``timeout`` (seconds) puts a wall-clock deadline on every
+        callee this queue drains (overrun -> ``STATUS_TIMEOUT``, drain
+        continues).  Both are static queue metadata (pytree aux)."""
         if not 0 < width <= 31:
             raise ValueError(
                 f"width must be in [1, 31] to fit the int32 interleave "
@@ -1482,15 +1797,17 @@ class RpcQueue:
             jnp.zeros((reply_capacity,), jnp.int32),
             jnp.zeros((rslots,), jnp.int32),
             jnp.zeros((rslots,), jnp.int32),
+            jnp.zeros((rslots,), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
-            sanitize=bool(sanitize))
+            sanitize=bool(sanitize), retry=retry, timeout=timeout)
         events.emit("queue_create", _refs=(q,), qid=id(q),
                     capacity=capacity, width=width,
                     payload_capacity=payload_capacity,
-                    reply_capacity=reply_capacity, sanitize=bool(sanitize))
+                    reply_capacity=reply_capacity, sanitize=bool(sanitize),
+                    retry=retry is not None)
         REGISTRY.note_queue_geometry(
             {"capacity": int(capacity), "width": int(width),
              "payload_capacity": int(payload_capacity),
@@ -1673,7 +1990,9 @@ class RpcQueue:
                         ticketed=returns is not None, ticket_id=id(ticket),
                         conditional=where is not None, capacity=cap,
                         payload_capacity=pc,
-                        reply_capacity=self.reply_capacity)
+                        reply_capacity=self.reply_capacity,
+                        retry=self.retry is not None,
+                        idempotent=REGISTRY.idempotent.get(name, False))
         return out, ticket
 
     def flush(self, handlers: Optional[Dict[str, Callable]] = None
@@ -1726,22 +2045,26 @@ class RpcQueue:
             cap = self.capacity
             shapes = (jax.ShapeDtypeStruct((rc,), jnp.int32),
                       jax.ShapeDtypeStruct((cap,), jnp.int32),
+                      jax.ShapeDtypeStruct((cap,), jnp.int32),
                       jax.ShapeDtypeStruct((cap,), jnp.int32))
             drain_fn = (_drain_queue_replies_san if self.sanitize
                         else _drain_queue_replies)
-            rbuf, roff, rlen = io_callback(
-                _bind_drain(drain_fn, handlers), shapes,
-                *records, self.rwant, *heads, jnp.int32(rc), ordered=True)
+            rbuf, roff, rlen, rstat = io_callback(
+                _bind_drain(drain_fn, handlers, self.retry, self.timeout),
+                shapes, *records, self.rwant, *heads, self.base,
+                jnp.int32(rc), ordered=True)
             out = dataclasses.replace(self, head=z, phead=z, adrops=z,
                                       rbuf=rbuf, roff=roff, rlen=rlen,
+                                      rstat=rstat,
                                       base=self.base + self.head,
                                       rbase=self.base, rcount=self.head,
                                       fonce=one)
         else:
             drain_fn = _drain_queue_san if self.sanitize else _drain_queue
-            io_callback(_bind_drain(drain_fn, handlers),
+            io_callback(_bind_drain(drain_fn, handlers, self.retry,
+                                    self.timeout),
                         jax.ShapeDtypeStruct((), jnp.int32),
-                        *records, *heads, ordered=True)
+                        *records, *heads, self.base, ordered=True)
             out = dataclasses.replace(self, head=z, phead=z, adrops=z,
                                       base=self.base + self.head, fonce=one)
         if events.active():
@@ -1766,8 +2089,11 @@ class RpcQueue:
     def result_ok(self, ticket, shape=(), dtype=None, *, _via_result=False
                   ) -> Tuple[jax.Array, jax.Array]:
         """:meth:`result` plus its validity mask: ``(value, ok)`` where
-        ``ok`` is a traced bool — True iff the ticket's slot holds a reply
-        of exactly the expected length from the last flush."""
+        ``ok`` is a traced bool — True iff the ticket's slot holds a
+        ``STATUS_OK`` reply of exactly the expected length from the last
+        flush (a record whose callee raised or timed out, whose reply was
+        dropped, or whose ticket is stale reads ``ok=False`` — see
+        :meth:`result_status` for WHICH failure it was)."""
         shape, dtype, nw = self._reply_spec(shape, dtype)
         never_flushed = None
         if not isinstance(self.fonce, jax.core.Tracer):
@@ -1796,6 +2122,8 @@ class RpcQueue:
         slot = jnp.where(local >= 0, local, 0) % self.capacity
         ok = (t >= 0) & (local >= 0) & (local < self.rcount) & \
             (self.rlen[slot] == nw)
+        if self.rstat.shape[0]:
+            ok = ok & (self.rstat[slot] == STATUS_OK)
         off = jnp.clip(self.roff[slot], 0, rc - nw)
         words = lax.dynamic_slice(self.rbuf, (off,), (nw,))
         if jnp.issubdtype(dtype, jnp.floating):
@@ -1803,7 +2131,73 @@ class RpcQueue:
         else:
             vals = words.astype(dtype)
         vals = jnp.where(ok, vals, jnp.zeros_like(vals))
+        if _via_result and not isinstance(ok, jax.core.Tracer):
+            # concrete read through raw result(): a failed ticket's zeros
+            # are about to be consumed AS IF they were a reply — say so
+            # once per queue object, and let the sanitizer count it
+            if not bool(np.asarray(ok)):
+                if self.sanitize:
+                    _san_bump("failed_ticket_reads")
+                if not self._failed_read_warned:
+                    self._failed_read_warned = True
+                    tval = (int(np.asarray(t))
+                            if not isinstance(t, jax.core.Tracer) else "?")
+                    warnings.warn(
+                        f"RpcQueue.result() on failed/dropped ticket "
+                        f"{tval}: the read returns zeros indistinguishable "
+                        "from a real zero reply — consult result_status() "
+                        "or use result_ok() (warning once per queue).",
+                        RuntimeWarning, stacklevel=3)
         return vals.reshape(shape), ok
+
+    def result_status(self, ticket) -> jax.Array:
+        """The STATUS of ``ticket`` against the LAST flush (traced int32):
+        ``STATUS_OK`` when its callee ran and its reply (if declared)
+        landed; ``STATUS_CALLEE_RAISED`` / ``STATUS_TIMEOUT`` when the
+        callee failed (traceback in :func:`error_log`);
+        ``STATUS_REPLY_OVERFLOW`` when the reply arena was full at drain
+        (callee NOT run); ``STATUS_DROPPED`` for a ``-1`` ticket (dropped
+        at enqueue) or an injected reply drop; ``STATUS_STALE`` for a
+        ticket outside the last flush's window.  O(1), pure device read —
+        the cond-able guard :meth:`result` lacks."""
+        if self.reply_capacity == 0:
+            raise ValueError(
+                "result_status() on a queue with no reply arena; create "
+                "the queue with reply_capacity > 0")
+        if events.active():
+            # a status consult counts as a guard: the analyzer's
+            # UNCHECKED_STATUS rule looks for via_result=False reads
+            events.emit("rpc_result", _refs=(self, ticket), qid=id(self),
+                        ticket_id=id(ticket), via_result=False,
+                        never_flushed=None)
+        t = jnp.asarray(ticket, jnp.int32)
+        local = t - self.rbase
+        slot = jnp.where(local >= 0, local, 0) % self.capacity
+        st = (self.rstat[slot] if self.rstat.shape[0]
+              else jnp.int32(STATUS_OK))
+        in_window = (local >= 0) & (local < self.rcount)
+        return jnp.where(
+            t < 0, jnp.int32(STATUS_DROPPED),
+            jnp.where(in_window, st, jnp.int32(STATUS_STALE)))
+
+    def pressure(self) -> jax.Array:
+        """Device-visible backpressure in ``[0, 1+)``: the max of ring,
+        payload-arena, and declared-reply occupancy for the CURRENT epoch.
+        Pure device arithmetic (no host contact) — cond on it before
+        enqueueing, or flush early when it climbs.  ``>= 1.0`` means the
+        next enqueue (or the drain) will drop records."""
+        cap = self.capacity
+        p = self.head.astype(jnp.float32) / cap
+        if self.payload_capacity:
+            p = jnp.maximum(
+                p, self.phead.astype(jnp.float32) / self.payload_capacity)
+        if self.reply_capacity and self.rwant.shape[0]:
+            live = (jnp.arange(self.rwant.shape[0], dtype=jnp.int32)
+                    < jnp.minimum(self.head, cap))
+            declared = jnp.sum(jnp.abs(self.rwant) * live)
+            p = jnp.maximum(
+                p, declared.astype(jnp.float32) / self.reply_capacity)
+        return p
 
     def _reply_spec(self, shape, dtype):
         """Normalize a reply read spec to ``(shape, dtype, nwords)`` with
@@ -1843,6 +2237,7 @@ class RpcQueue:
         rbuf = np.asarray(self.rbuf)
         roff = np.asarray(self.roff)
         rlen = np.asarray(self.rlen)
+        rstat = np.asarray(self.rstat)
         rbase, rcount = int(self.rbase), int(self.rcount)
         np_dtype = np.dtype(dtype.name)
         out = []
@@ -1850,7 +2245,8 @@ class RpcQueue:
             t = int(t)
             local = t - rbase
             slot = local % self.capacity if local >= 0 else 0
-            ok = t >= 0 and 0 <= local < rcount and int(rlen[slot]) == nw
+            ok = (t >= 0 and 0 <= local < rcount and int(rlen[slot]) == nw
+                  and (not rstat.size or int(rstat[slot]) == STATUS_OK))
             if self.sanitize and t >= 0 and not 0 <= local < rcount:
                 # ticket shadow: a live ticket read outside the serviced
                 # epoch's window is a stale (or dropped-epoch) read
@@ -1863,6 +2259,30 @@ class RpcQueue:
             else:
                 vals = np.zeros((nw,), np_dtype)
             out.append((vals.reshape(shape), ok))
+        return out
+
+    def statuses_host(self, tickets) -> List[int]:
+        """Host-side batch :meth:`result_status`: one int per ticket, with
+        ONE device->host pull of the status lane (concrete queues on
+        serving hot paths — the companion of :meth:`results_host`)."""
+        if self.reply_capacity == 0:
+            raise ValueError(
+                "statuses_host() on a queue with no reply arena; create "
+                "the queue with reply_capacity > 0")
+        rstat = np.asarray(self.rstat)
+        rbase, rcount = int(self.rbase), int(self.rcount)
+        out = []
+        for t in tickets:
+            t = int(t)
+            if t < 0:
+                out.append(STATUS_DROPPED)
+                continue
+            local = t - rbase
+            if not 0 <= local < rcount:
+                out.append(STATUS_STALE)
+                continue
+            slot = local % self.capacity
+            out.append(int(rstat[slot]) if rstat.size else STATUS_OK)
         return out
 
 
@@ -1926,9 +2346,12 @@ class ShardedRpcQueue:
     def create(n_devices: int, capacity: int = 1024, width: int = 4,
                payload_capacity: int = 1024,
                reply_capacity: int = 0,
-               sanitize: bool = False) -> "ShardedRpcQueue":
+               sanitize: bool = False,
+               retry: Optional[RetryPolicy] = None,
+               timeout: Optional[float] = None) -> "ShardedRpcQueue":
         q = RpcQueue.create(capacity, width, payload_capacity,
-                            reply_capacity, sanitize=sanitize)
+                            reply_capacity, sanitize=sanitize,
+                            retry=retry, timeout=timeout)
         sq = ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
         REGISTRY.note_queue_geometry(queue_geometry(sq))
@@ -1977,33 +2400,36 @@ class ShardedRpcQueue:
         if rc:
             drain_fn = (_drain_queue_sharded_replies_san if self.q.sanitize
                         else _drain_queue_sharded_replies)
-            drain = _bind_drain(drain_fn, handlers)
-            operands = records + (self.q.rwant,) + heads
+            drain = _bind_drain(drain_fn, handlers, self.q.retry,
+                                self.q.timeout)
+            operands = records + (self.q.rwant,) + heads + (self.q.base,)
             if traced:
                 shapes = (jax.ShapeDtypeStruct((D, rc), jnp.int32),
                           jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                          jax.ShapeDtypeStruct((D, cap), jnp.int32),
                           jax.ShapeDtypeStruct((D, cap), jnp.int32))
-                rbuf, roff, rlen = io_callback(drain, shapes, *operands,
-                                               jnp.int32(rc), ordered=True)
+                rbuf, roff, rlen, rstat = io_callback(
+                    drain, shapes, *operands, jnp.int32(rc), ordered=True)
             else:
-                rbuf, roff, rlen = (jnp.asarray(a) for a in drain(
+                rbuf, roff, rlen, rstat = (jnp.asarray(a) for a in drain(
                     *operands, np.int32(rc)))
             out = dataclasses.replace(self, q=dataclasses.replace(
                 self.q, head=z, phead=z, adrops=z,
-                rbuf=rbuf, roff=roff, rlen=rlen,
+                rbuf=rbuf, roff=roff, rlen=rlen, rstat=rstat,
                 base=self.q.base + self.q.head,
                 rbase=self.q.base, rcount=self.q.head, fonce=one))
         else:
             drain_fn = (_drain_queue_sharded_san if self.q.sanitize
                         else _drain_queue_sharded)
-            drain = _bind_drain(drain_fn, handlers)
+            drain = _bind_drain(drain_fn, handlers, self.q.retry,
+                                self.q.timeout)
             if traced:
                 io_callback(drain, jax.ShapeDtypeStruct((), jnp.int32),
-                            *records, *heads, ordered=True)
+                            *records, *heads, self.q.base, ordered=True)
             else:
                 # concrete shards (program boundary): drain directly — this
                 # also works when the shards live on a real multi-device mesh
-                drain(*records, *heads)
+                drain(*records, *heads, self.q.base)
             out = dataclasses.replace(
                 self, q=dataclasses.replace(
                     self.q, head=z, phead=z, adrops=z,
@@ -2020,13 +2446,24 @@ class ShardedRpcQueue:
         per-shard analogue of :meth:`RpcQueue.result`)."""
         return self.local(dev).result(ticket, shape, dtype)
 
+    def result_status(self, dev, ticket) -> jax.Array:
+        """Device ``dev``'s status for ``ticket`` (the per-shard analogue
+        of :meth:`RpcQueue.result_status`)."""
+        return self.local(dev).result_status(ticket)
+
+    def pressure(self) -> jax.Array:
+        """Per-device backpressure vector ``(D,)`` — each shard's
+        :meth:`RpcQueue.pressure`."""
+        return jax.vmap(RpcQueue.pressure)(self.q)
+
 
 # ---------------------------------------------------------------------------
 # Decorator: register + generate a typed device stub
 # ---------------------------------------------------------------------------
 
 def host_rpc(name: Optional[str] = None, *, result_shape,
-             ordered: bool = True, pure: bool = False):
+             ordered: bool = True, pure: bool = False,
+             idempotent: bool = False):
     """Register ``fn`` as host-only and return its device-callable stub.
 
     >>> @host_rpc(result_shape=jax.ShapeDtypeStruct((), jnp.int32))
@@ -2037,10 +2474,12 @@ def host_rpc(name: Optional[str] = None, *, result_shape,
 
     ``pure=True`` routes the stub through the elidable ``pure_callback``
     fast path — only for host functions with no side effects.
+    ``idempotent=True`` declares re-running safe — the gate for
+    :class:`RetryPolicy` retries when the callee rides a batched queue.
     """
     def deco(fn):
         rpc_name = name or fn.__name__
-        REGISTRY.register(rpc_name, fn)
+        REGISTRY.register(rpc_name, fn, idempotent=idempotent)
 
         def stub(*args):
             return rpc_call(rpc_name, *args, result_shape=result_shape,

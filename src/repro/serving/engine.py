@@ -38,7 +38,12 @@ from repro.serving.kvcache import PagedKV
 #: binding is a no-op so enqueue always resolves — each engine captures its
 #: own sink as a per-flush handler (no cross-engine rebinding).
 _SPILL_RPC = "kvcache.spill"
-REGISTRY.register(_SPILL_RPC, lambda rid, n_tokens, pages: None)
+REGISTRY.register(_SPILL_RPC, lambda rid, n_tokens, pages: None,
+                  idempotent=True)
+
+#: Occupancy (ring/arena/reply, whichever is fullest) above which
+#: ``_deliver_spills`` drains mid-batch before enqueueing more records.
+_SPILL_PRESSURE = 0.75
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +129,9 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, batch_slots: int = 4,
                  max_len: int = 256, page_size: int = 16,
                  eos_id: Optional[int] = None, mesh=None,
-                 spill_sink: Optional[Any] = None):
+                 spill_sink: Optional[Any] = None,
+                 spill_timeout: Optional[float] = None,
+                 spill_retries: int = 1):
         """``mesh`` (a ``jax.sharding.Mesh`` or an int shard count) shards
         the KV page heap per device: each device's allocator shard serves
         its block of batch slots, so page alloc/release never funnel
@@ -145,7 +152,20 @@ class ServingEngine:
         is therefore distinguishable from a sink that legitimately
         returned 0.  Acks accumulate until the consumer
         collects them with :meth:`drain_spill_acks` (one entry per retired
-        request — drain periodically in long-running processes)."""
+        request — drain periodically in long-running processes).
+
+        ``spill_timeout`` bounds each sink invocation's wall clock: a
+        hung sink marks that record ``TIMEOUT`` in the reply status lane
+        instead of wedging the tick loop.  A failed delivery (timeout,
+        raising sink, lost reply) is re-enqueued and re-flushed in a
+        fresh epoch up to ``spill_retries`` more times; a record that
+        still fails acks ``None`` and its request id lands in
+        ``self.recompute_on_readmit`` — the tiered-KV consumer's signal
+        that the pages were never durably spilled and a readmitted
+        request must recompute from the prompt.  Enqueues are gated on
+        ``spill_q.pressure()``: when ring/arena occupancy crosses
+        :data:`_SPILL_PRESSURE`, the engine drains mid-batch so nothing
+        drops."""
         self.model = model
         self.cfg = model.cfg
         assert self.cfg.family in ("dense", "moe", "vlm"), \
@@ -159,12 +179,15 @@ class ServingEngine:
         self.spill_sink = spill_sink
         self.spill_q: Optional[RpcQueue] = None
         self.spill_acks: Dict[int, Optional[int]] = {}
+        self.spill_retries = int(spill_retries)
+        self.recompute_on_readmit: set = set()
         if spill_sink is not None:
             maxp = (max_len + page_size - 1) // page_size
             self.spill_q = RpcQueue.create(
                 capacity=max(2 * batch_slots, 8), width=3,
                 payload_capacity=max(batch_slots * maxp, 8),
-                reply_capacity=max(2 * batch_slots, 8))
+                reply_capacity=max(2 * batch_slots, 8),
+                timeout=spill_timeout)
         self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, List[int], int]] = []
         self.finished: Dict[int, List[int]] = {}
@@ -237,35 +260,72 @@ class ServingEngine:
             if self.spill_q is not None:
                 # page-spill: every retiring slot's page ids ride the
                 # payload arena; ONE flush delivers the whole tick and its
-                # replies ack every spill (sink return, or page count)
-                sink = self.spill_sink
-
-                def handler(rid, n_tokens, pages):
-                    # sinks written against the pre-ack contract may return
-                    # anything (or nothing): a None ack defaults to the
-                    # page count; other returns pass through untouched —
-                    # the drain's reply coercion handles shape/dtype
-                    out = sink(rid, n_tokens, pages)
-                    return np.int32(len(pages)) if out is None else out
-
-                tickets = []
-                for i, rid in zip(done_slots, done_rids):
-                    self.spill_q, t = self.spill_q.enqueue_ticketed(
-                        _SPILL_RPC, jnp.int32(rid), self.kv.lengths[i],
-                        kvcache.live_pages(self.kv, i),
-                        returns=jax.ShapeDtypeStruct((), jnp.int32))
-                    tickets.append((rid, t))
-                self.spill_q = self.spill_q.flush(
-                    handlers={_SPILL_RPC: handler})
-                acks = self.spill_q.results_host([t for _, t in tickets])
-                for (rid, _), (val, ok) in zip(tickets, acks):
-                    # None = reply lost (arena overflow) — distinct from a
-                    # sink that acknowledged with 0
-                    self.spill_acks[rid] = int(val) if ok else None
+                # replies ack every spill (sink return, or page count).
+                # _deliver_spills retries failed records and degrades to
+                # recompute-on-readmit instead of wedging the tick loop.
+                self._deliver_spills(
+                    [(int(rid), self.kv.lengths[i],
+                      kvcache.live_pages(self.kv, i))
+                     for i, rid in zip(done_slots, done_rids)])
             # every retired request this tick releases in ONE bulk reset
             mask = jnp.zeros((len(self.slots),), bool).at[
                 jnp.asarray(done_slots, jnp.int32)].set(True)
             self.kv = kvcache.release_slots(self.kv, mask)
+
+    def _deliver_spills(self, records) -> None:
+        """Deliver ``(rid, n_tokens, pages)`` spill records with retry
+        and graceful degradation.
+
+        Each delivery round enqueues pending records — draining early
+        whenever ``spill_q.pressure()`` crosses :data:`_SPILL_PRESSURE`
+        so the ring/arenas never overflow — then reads the status lane.
+        Records whose status is not OK (raising sink, per-record
+        ``spill_timeout``, lost reply) are carried into the next round,
+        up to ``spill_retries`` re-deliveries.  A record that exhausts
+        its retries acks ``None`` and joins ``recompute_on_readmit``."""
+        sink = self.spill_sink
+
+        def handler(rid, n_tokens, pages):
+            # sinks written against the pre-ack contract may return
+            # anything (or nothing): a None ack defaults to the
+            # page count; other returns pass through untouched —
+            # the drain's reply coercion handles shape/dtype
+            out = sink(rid, n_tokens, pages)
+            return np.int32(len(pages)) if out is None else out
+
+        handlers = {_SPILL_RPC: handler}
+        failed = list(records)
+        for _attempt in range(1 + max(0, self.spill_retries)):
+            if not failed:
+                break
+            pending, failed = failed, []
+            i = 0
+            while i < len(pending):
+                batch = []
+                while i < len(pending):
+                    rid, n_tok, pages = pending[i]
+                    self.spill_q, t = self.spill_q.enqueue_ticketed(
+                        _SPILL_RPC, jnp.int32(rid), n_tok, pages,
+                        returns=jax.ShapeDtypeStruct((), jnp.int32))
+                    batch.append((pending[i], t))
+                    i += 1
+                    if float(self.spill_q.pressure()) >= _SPILL_PRESSURE:
+                        break           # drain before enqueueing more
+                self.spill_q = self.spill_q.flush(handlers=handlers)
+                tix = [t for _, t in batch]
+                statuses = self.spill_q.statuses_host(tix)
+                acks = self.spill_q.results_host(tix)
+                for (rec, _), st, (val, ok) in zip(batch, statuses, acks):
+                    if st == rpc_mod.STATUS_OK and ok:
+                        self.spill_acks[rec[0]] = int(val)
+                    else:
+                        failed.append(rec)
+        for rec in failed:
+            # delivery exhausted its retries: the pages were never
+            # durably spilled — None ack (distinct from a 0 ack) and the
+            # request must recompute from the prompt if readmitted
+            self.spill_acks[rec[0]] = None
+            self.recompute_on_readmit.add(rec[0])
 
     def drain_spill_acks(self) -> Dict[int, Optional[int]]:
         """Collect-and-clear the accumulated spill acks (request id ->
@@ -336,6 +396,8 @@ class ServingEngine:
     @classmethod
     def from_artifact(cls, directory: str, cfg: ModelConfig, *,
                       spill_sink: Optional[Any] = None,
+                      spill_timeout: Optional[float] = None,
+                      spill_retries: int = 1,
                       mesh=None) -> "ServingEngine":
         """Cold-start an engine from :meth:`export_artifact` output in a
         FRESH process: adopt the manifest (so every device-resident id
@@ -367,12 +429,15 @@ class ServingEngine:
         self.spill_sink = spill_sink
         self.spill_q = None
         self.spill_acks = {}
+        self.spill_retries = int(spill_retries)
+        self.recompute_on_readmit = set()
         if spill_sink is not None:
             maxp = (max_len + page_size - 1) // page_size
             self.spill_q = RpcQueue.create(
                 capacity=max(2 * self.B, 8), width=3,
                 payload_capacity=max(self.B * maxp, 8),
-                reply_capacity=max(2 * self.B, 8))
+                reply_capacity=max(2 * self.B, 8),
+                timeout=spill_timeout)
         self.slots = [_Slot() for _ in range(self.B)]
         self.queue = []
         self.finished = {}

@@ -1,0 +1,11 @@
+"""Deterministic testing seams for the GPU-First runtime.
+
+:mod:`repro.testing.faults` — seeded fault plans injected at the RPC
+drain (see :func:`repro.core.rpc.set_fault_injector`).
+"""
+from repro.testing.faults import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    InjectedFault,
+    inject,
+)

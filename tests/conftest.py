@@ -11,6 +11,15 @@ import jax  # noqa: E402
 
 import pytest  # noqa: E402
 
+# Under CPU async dispatch an ordered io_callback drain can DEADLOCK: the
+# callback thread blocks in np.asarray on a large operand whose definition
+# event is queued behind the computation the callback belongs to, while
+# the test sits in block_until_ready.  Environment-dependent (kernel /
+# thread-pool sizing) and reproducible on some containers; synchronous
+# dispatch removes the race without changing any tested semantics.
+# benchmarks/common.py carries the same pin for the bench processes.
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,273 @@
+"""Chaos suite for the fault-tolerant host boundary (ISSUE 9).
+
+Seeded :class:`repro.testing.faults.FaultPlan`s drive the drain of all
+three transports — per-enqueue "immediate" flushes, one batched flush,
+2-shard sharded — and every leg must agree bit-for-bit on statuses and
+host effects.  The CI ``chaos`` job widens the seed matrix via
+``RPC_FAULT_SEEDS`` (comma-separated ints); the tier-1 default keeps a
+small fixed set so the suite always runs.
+
+Also home to the satellite fixes' unit coverage: the drain-side error
+log (`error_log()`, ``flush_stats()['callee_errors']``), the
+once-per-queue failed-ticket-read warning, and the ``sanitize=True``
+``failed_ticket_reads`` counter.
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rpc
+from repro.core.rpc import (REGISTRY, RetryPolicy, RpcQueue,
+                            STATUS_CALLEE_RAISED, STATUS_DROPPED, STATUS_OK,
+                            STATUS_TIMEOUT, flush_stats, reset_rpc_stats)
+from repro.testing.faults import Fault, FaultPlan
+
+# the conformance runners + record set live next to the reference model
+from test_rpc_differential import (_CONFORMANCE_RECORDS, _run_batched,
+                                   _run_immediate, _run_sharded)
+
+_I32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+FAULT_SEEDS = [int(s) for s in
+               os.environ.get("RPC_FAULT_SEEDS", "0,1,2,3").split(",") if s]
+
+
+def _echo(x):
+    return np.int32(x)
+
+
+REGISTRY.register("chaos.echo", _echo)
+REGISTRY.register("chaos.echo_idem", _echo, idempotent=True)
+
+
+# ---------------------------------------------------------------------------
+# Seeded cross-transport chaos matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", FAULT_SEEDS)
+@pytest.mark.parametrize("retry", [False, True])
+def test_chaos_seeded_transport_conformance(seed, retry):
+    """Same seeded fault plan, three transports: statuses and host
+    effects must be bit-identical, and the flush must COMPLETE on every
+    leg (no escaped exception, every ticket resolvable)."""
+    base = FaultPlan.generate(seed, ["diff.int", "diff.float"],
+                              n_faults=3, max_index=6)
+    legs = []
+    for runner in (_run_immediate, _run_batched, _run_sharded):
+        reset_rpc_stats()
+        legs.append(runner(_CONFORMANCE_RECORDS,
+                           FaultPlan(base.faults), retry))
+    (st_a, fx_a), (st_b, fx_b), (st_c, fx_c) = legs
+    assert st_a == st_b == st_c
+    assert fx_a == fx_b == fx_c
+    assert len(st_a) == len(_CONFORMANCE_RECORDS)
+
+
+@pytest.mark.parametrize("seed", FAULT_SEEDS)
+def test_chaos_callee_raises_first_attempt(seed):
+    """The acceptance scenario, seed-positioned: callee N (the seed picks
+    which occurrence) raises on its FIRST attempt.  The flush completes
+    on all three transports, survivors replay in order, the victim
+    reports CALLEE_RAISED without retry and OK after one retry for the
+    idempotent callee — bit-identical across transports."""
+    n_int = sum(1 for k, *_ in _CONFORMANCE_RECORDS if k == "i")
+    occ = seed % n_int
+    victim = Fault("raise", "diff.int", occ)
+    for retry in (False, True):
+        legs = []
+        for runner in (_run_immediate, _run_batched, _run_sharded):
+            reset_rpc_stats()
+            legs.append(runner(_CONFORMANCE_RECORDS,
+                               FaultPlan([victim]), retry))
+        (st_a, fx_a), (st_b, fx_b), (st_c, fx_c) = legs
+        assert st_a == st_b == st_c
+        assert fx_a == fx_b == fx_c
+        # the victim is the occ-th diff.int record; everything else OK
+        idx = [i for i, (k, *_r) in enumerate(_CONFORMANCE_RECORDS)
+               if k == "i"][occ]
+        want = STATUS_OK if retry else STATUS_CALLEE_RAISED
+        assert st_a[idx] == want
+        assert all(s == STATUS_OK for i, s in enumerate(st_a) if i != idx)
+        n_effects = len(_CONFORMANCE_RECORDS) - (0 if retry else 1)
+        assert len(fx_a) == n_effects
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: callee exceptions never escape io_callback; error_log()
+# keeps the traceback; flush_stats() counts
+# ---------------------------------------------------------------------------
+
+def test_callee_exception_isolated_and_logged():
+    REGISTRY.register("chaos.boom",
+                      lambda x: (_ for _ in ()).throw(ValueError("bang")))
+    reset_rpc_stats()
+    rpc.clear_error_log()
+    q = RpcQueue.create(8, 2, 32, reply_capacity=16)
+    q, t_ok = q.enqueue_ticketed("chaos.echo", 5, returns=_I32)
+    q, t_bad = q.enqueue_ticketed("chaos.boom", 1, returns=_I32)
+    q, t_ok2 = q.enqueue_ticketed("chaos.echo", 7, returns=_I32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        q = q.flush()                     # must NOT raise
+        jax.effects_barrier()
+    assert any("isolated" in str(x.message) for x in w)
+    # siblings survive in order with live replies
+    assert int(q.result(t_ok)) == 5 and int(q.result(t_ok2)) == 7
+    assert int(q.result_status(t_bad)) == STATUS_CALLEE_RAISED
+    v, ok = q.result_ok(t_bad, (), jnp.int32)
+    assert not bool(ok) and int(v) == 0
+    stats = flush_stats()
+    assert stats["callee_errors"] == 1
+    assert stats["last_callee_errors"] == 1
+    log = rpc.error_log()
+    assert log and log[-1]["callee"] == "chaos.boom"
+    assert "bang" in log[-1]["traceback"]
+    assert log[-1]["ticket"] == int(t_bad)
+
+
+def test_timeout_marks_record_and_drain_survives():
+    import time
+    REGISTRY.register("chaos.hang",
+                      lambda x: (time.sleep(0.6), np.int32(1))[1])
+    reset_rpc_stats()
+    q = RpcQueue.create(4, 1, 16, reply_capacity=8, timeout=0.05)
+    q, t = q.enqueue_ticketed("chaos.hang", 1, returns=_I32)
+    q, t2 = q.enqueue_ticketed("chaos.echo", 3, returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    assert int(q.result_status(t)) == STATUS_TIMEOUT
+    assert int(q.result(t2)) == 3         # the sibling still replays
+    assert flush_stats()["callee_errors"] == 1
+
+
+def test_retry_redrives_idempotent_only():
+    calls = {"idem": 0, "plain": 0}
+
+    def flaky_idem(x):
+        calls["idem"] += 1
+        if calls["idem"] == 1:
+            raise RuntimeError("transient")
+        return np.int32(x + 1)
+
+    def flaky_plain(x):
+        calls["plain"] += 1
+        raise RuntimeError("always")
+
+    REGISTRY.register("chaos.flaky_idem", flaky_idem, idempotent=True)
+    REGISTRY.register("chaos.flaky_plain", flaky_plain)
+    reset_rpc_stats()
+    q = RpcQueue.create(8, 2, 32, reply_capacity=16,
+                        retry=RetryPolicy(max_attempts=3))
+    q, ti = q.enqueue_ticketed("chaos.flaky_idem", 10, returns=_I32)
+    q, tp = q.enqueue_ticketed("chaos.flaky_plain", 1, returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    assert int(q.result_status(ti)) == STATUS_OK    # redriven to success
+    assert int(q.result(ti)) == 11
+    assert calls["idem"] == 2
+    assert int(q.result_status(tp)) == STATUS_CALLEE_RAISED
+    assert calls["plain"] == 1                      # NOT retried
+    assert flush_stats()["retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: result() on a failed/dropped ticket warns once per queue;
+# sanitize=True counts failed_ticket_reads
+# ---------------------------------------------------------------------------
+
+def test_failed_ticket_read_warns_once_per_queue():
+    REGISTRY.register("chaos.boom2",
+                      lambda x: (_ for _ in ()).throw(RuntimeError("x")))
+    q = RpcQueue.create(4, 1, 16, reply_capacity=8)
+    q, t = q.enqueue_ticketed("chaos.boom2", 1, returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        q.result(t)
+        q.result(t)                       # second consult: no second warn
+        relevant = [x for x in w
+                    if "failed/dropped ticket" in str(x.message)]
+    assert len(relevant) == 1
+    assert str(int(t)) in str(relevant[0].message)
+
+
+def test_sanitize_counts_failed_ticket_reads():
+    REGISTRY.register("chaos.boom3",
+                      lambda x: (_ for _ in ()).throw(RuntimeError("y")))
+    rpc.reset_sanitize_stats()
+    q = RpcQueue.create(4, 1, 16, reply_capacity=8, sanitize=True)
+    q, t = q.enqueue_ticketed("chaos.boom3", 1, returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+        q.result(t)
+        q.result(t)
+    assert rpc.sanitize_stats()["failed_ticket_reads"] == 2
+
+
+def test_dropped_and_stale_statuses():
+    q = RpcQueue.create(4, 1, 16, reply_capacity=8)
+    q, t_drop = q.enqueue_ticketed("chaos.echo", 1, returns=_I32,
+                                   where=jnp.bool_(False))
+    q, t_live = q.enqueue_ticketed("chaos.echo", 2, returns=_I32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    assert int(q.result_status(t_drop)) == STATUS_DROPPED
+    assert int(q.result_status(t_live)) == STATUS_OK
+    # a later flush slides the window: the old ticket reads STALE
+    q = q.enqueue("chaos.echo", 3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    assert int(q.result_status(t_live)) == rpc.STATUS_STALE
+
+
+def test_pressure_monotone_and_resets():
+    q = RpcQueue.create(4, 1, 16, reply_capacity=8)
+    assert float(q.pressure()) == 0.0
+    p_last = 0.0
+    for i in range(3):
+        q, _ = q.enqueue_ticketed("chaos.echo", i, returns=_I32)
+        p = float(q.pressure())
+        assert p > p_last
+        p_last = p
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    assert float(q.pressure()) == 0.0
+
+
+def test_error_log_caps_and_clears():
+    REGISTRY.register("chaos.boom4",
+                      lambda x: (_ for _ in ()).throw(RuntimeError("z")))
+    rpc.clear_error_log()
+    q = RpcQueue.create(8, 1, 32, reply_capacity=16)
+    tix = []
+    for i in range(3):
+        q, t = q.enqueue_ticketed("chaos.boom4", i, returns=_I32)
+        tix.append(t)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        q = q.flush()
+        jax.effects_barrier()
+    log = rpc.error_log()
+    assert len(log) == 3
+    assert [e["ticket"] for e in log] == [int(t) for t in tix]
+    rpc.clear_error_log()
+    assert rpc.error_log() == []

@@ -35,6 +35,15 @@ runs from a clean environment — the pattern of
 ``test_allocator_properties.py``.  The CI differential job raises the
 example count to the acceptance bar (>= 200 interleavings) via
 ``RPC_DIFF_EXAMPLES``; the default keeps the tier-1 run quick.
+
+**v5 fault differential.**  The model also mirrors the fault-tolerant
+boundary: per-slot reply STATUSES (OK / CALLEE_RAISED / DROPPED /
+REPLY_OVERFLOW, with DROPPED/STALE judged at read time), drain-side
+isolation, and idempotent-gated retry.  Seeded
+:class:`repro.testing.faults.FaultPlan`s drive the device drain and an
+identical twin plan drives the model — statuses, host effects, fired
+faults, and ``callee_errors``/``retries`` stats must agree bit-for-bit,
+on the single and the 2-shard sharded transport.
 """
 import os
 import random
@@ -51,8 +60,11 @@ try:
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.core.rpc import (REGISTRY, RpcQueue, ShardedRpcQueue, flush_stats,
-                            reset_rpc_stats)
+from repro.core.rpc import (REGISTRY, RetryPolicy, RpcQueue, ShardedRpcQueue,
+                            STATUS_CALLEE_RAISED, STATUS_DROPPED, STATUS_OK,
+                            STATUS_REPLY_OVERFLOW, STATUS_STALE, flush_stats,
+                            reset_rpc_stats, set_fault_injector)
+from repro.testing.faults import Fault, FaultPlan, InjectedFault
 
 # Small geometry so ring overwrite, arena drops and reply drops all actually
 # happen inside short plans.
@@ -83,8 +95,13 @@ def _echo_float(tag, nrep, arr=None):
     return np.arange(int(nrep), dtype=np.float32) * 0.5 + np.float32(tag)
 
 
-REGISTRY.register("diff.int", _echo_int)
+# diff.int is declared retry-safe, diff.float is not: a retrying queue
+# redrives only the former — the differential plans exercise both gates
+REGISTRY.register("diff.int", _echo_int, idempotent=True)
 REGISTRY.register("diff.float", _echo_float)
+
+#: mirror of the registry's idempotent flags, for the reference model
+_IDEM = {"diff.int": True, "diff.float": False}
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +121,7 @@ class RefQueue:
         self.rbase = 0                   # epoch window of the last flush's
         self.rcount = 0                  # reply table
         self.reply = {}                  # slot -> reply value list
+        self.stab = {}                   # slot -> status of the last flush
 
     def enqueue(self, kind, tag, nrep, payload, where=None):
         """Mirror of ``enqueue_ticketed``: returns the GLOBAL ticket or
@@ -124,37 +142,93 @@ class RefQueue:
         self.phead += npay
         return t
 
-    def flush(self):
+    def flush(self, plan=None, retry_attempts=1, idem=None):
         """Returns (host-visible replay list, overwrite drops, arena drops,
-        reply drops) and installs the epoch's reply table."""
+        reply drops, callee errors, retries) and installs the epoch's
+        reply + status tables.  ``plan`` is a fault-plan twin consulted in
+        the same per-record order as the device drain; ``retry_attempts``
+        and ``idem`` mirror the queue's RetryPolicy and the registry's
+        idempotent flags."""
         n = self.head
         lo = max(0, n - self.cap)
-        seen, rtab = [], {}
-        rhead = rdrops = 0
+        seen, rtab, stab = [], {}, {}
+        rhead = rdrops = cerrs = nretries = 0
         for j in range(lo, n):
             k = j % self.cap
             kind, tag, nrep, payload = self.slots[k]
             if nrep > 0 and rhead + nrep > self.rc:
                 rdrops += 1              # atomic drain drop: callee not run
+                stab[k] = STATUS_REPLY_OVERFLOW
                 continue
-            seen.append((kind, tag, payload))
-            if nrep > 0:
-                rtab[k] = _MODEL_HOSTS[kind](tag, nrep, payload)
-                rhead += nrep
+            name = "diff.int" if kind == "i" else "diff.float"
+            attempts = (retry_attempts if (idem or {}).get(name, False)
+                        else 1)
+            attempt, status = 1, STATUS_OK
+            while True:
+                raised = False
+                if plan is not None:
+                    try:
+                        plan.on_call(name, attempt)
+                    except InjectedFault:
+                        raised = True
+                if not raised:
+                    break
+                if attempt < attempts:
+                    attempt += 1
+                    nretries += 1
+                    continue
+                status = STATUS_CALLEE_RAISED
+                break
+            if status != STATUS_OK:
+                # callee_errors counts invocation failures only — an
+                # injected reply drop below is DROPPED but not an error
+                cerrs += 1
+            if status == STATUS_OK:
+                seen.append((kind, tag, payload))
+                if nrep > 0:
+                    vals = _MODEL_HOSTS[kind](tag, nrep, payload)
+                    dt = np.int32 if kind == "i" else np.float32
+                    words = np.asarray(vals, dt).view(np.int32)
+                    if plan is not None:
+                        words = plan.on_reply(name, words)
+                    if words is None:    # injected reply drop: callee RAN
+                        status = STATUS_DROPPED
+                    else:
+                        # store raw int32 WORDS like the device reply
+                        # arena: a cross-kind aliased ticket bit-casts
+                        # them into the reader's dtype at read time
+                        rtab[k] = [int(w) for w in words]
+                        rhead += nrep
+            stab[k] = status
         adrops, self.adrops = self.adrops, 0
         self.reply = rtab
+        self.stab = stab
         self.rbase, self.rcount = self.gbase, n
         self.gbase += n
         self.head = self.phead = 0
-        return seen, lo, adrops, rdrops
+        return seen, lo, adrops, rdrops, cerrs, nretries
 
     def result(self, ticket, nrep, kind):
         zero = [0] * nrep if kind == "i" else [0.0] * nrep
         local = ticket - self.rbase
         if ticket < 0 or local < 0 or local >= self.rcount:
             return zero                  # dropped / cross-epoch: dead
+        if self.stab.get(local % self.cap, STATUS_OK) != STATUS_OK:
+            return zero                  # failed record never wrote a reply
         r = self.reply.get(local % self.cap)
-        return r if r is not None and len(r) == nrep else zero
+        if r is None or len(r) != nrep:
+            return zero
+        arr = np.asarray(r, np.int32)    # stored words -> reader's dtype
+        return ([int(v) for v in arr] if kind == "i"
+                else [float(v) for v in arr.view(np.float32)])
+
+    def result_status(self, ticket):
+        local = ticket - self.rbase
+        if ticket < 0:
+            return STATUS_DROPPED
+        if local < 0 or local >= self.rcount:
+            return STATUS_STALE
+        return self.stab.get(local % self.cap, STATUS_OK)
 
 
 def _model_int(tag, nrep, payload):
@@ -236,20 +310,29 @@ def _dev_result(q, ticket, nrep, kind):
         [float(v) for v in vals]
 
 
-def _check_single(plan):
+def _check_single(plan, fault_seed=None, retry=False):
     """One interleaving, single queue: drive device + model, compare the
-    host replay stream, every ticket's reply, counters, and drop stats."""
+    host replay stream, every ticket's reply AND status, counters, and
+    drop/error stats.  ``fault_seed`` installs a seeded fault plan on the
+    device drain and its twin on the model; ``retry`` gives the queue a
+    2-attempt RetryPolicy (redrives idempotent diff.int only)."""
     reset_rpc_stats()
     _SEEN.clear()
+    dev_plan = ref_plan = None
+    if fault_seed is not None:
+        dev_plan = FaultPlan.generate(fault_seed, ["diff.int", "diff.float"])
+        ref_plan = FaultPlan(dev_plan.faults)     # twin: same faults,
+        set_fault_injector(dev_plan)              # independent counters
+    pol = RetryPolicy(max_attempts=2) if retry else None
     q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
-                        reply_capacity=RC)
+                        reply_capacity=RC, retry=pol)
     ref = RefQueue()
     expect_seen = []
-    drops = adrops = rdrops = 0
+    drops = adrops = rdrops = cerrs = nretries = 0
     pending = []                      # (dev ticket, ref ticket, nrep, kind)
 
     def do_flush(q):
-        nonlocal drops, adrops, rdrops
+        nonlocal drops, adrops, rdrops, cerrs, nretries
         # pre-flush counters must agree exactly
         assert int(q.head) == ref.head
         assert int(q.phead) == ref.phead
@@ -257,33 +340,41 @@ def _check_single(plan):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", RuntimeWarning)
             q = q.flush()
-        seen, d, a, r = ref.flush()
+        seen, d, a, r, c, rr = ref.flush(
+            ref_plan, 2 if retry else 1, _IDEM)
         expect_seen.extend(seen)
         drops += d
         adrops += a
         rdrops += r
+        cerrs += c
+        nretries += rr
         jax.effects_barrier()
         # every ticket issued this epoch reads bit-identically (zeros for
-        # dropped / reply-overflow / no-reply; survivor data for aliased
-        # overwritten tickets)
+        # dropped / reply-overflow / failed / no-reply; survivor data for
+        # aliased overwritten tickets) and reports the same status
         for dt_, rt_, nrep, kind in pending:
             assert dt_ == rt_                     # same ticket numbering
+            assert int(q.result_status(dt_)) == ref.result_status(rt_), \
+                (dt_, nrep, kind)
             if nrep > 0:
                 assert _dev_result(q, dt_, nrep, kind) == \
                     ref.result(rt_, nrep, kind), (dt_, nrep, kind)
         pending.clear()
         return q
 
-    for op in plan:
-        if op[0] == "flush":
-            q = do_flush(q)
-        else:
-            _, kind, tag, plen, nrep, where = op
-            payload = _payload_for(kind, plen, tag)
-            q, t_dev = _dev_enqueue(q, kind, tag, nrep, payload, where)
-            t_ref = ref.enqueue(kind, tag, nrep, payload, where)
-            pending.append((t_dev, t_ref, nrep, kind))
-    q = do_flush(q)                   # drain the tail epoch
+    try:
+        for op in plan:
+            if op[0] == "flush":
+                q = do_flush(q)
+            else:
+                _, kind, tag, plen, nrep, where = op
+                payload = _payload_for(kind, plen, tag)
+                q, t_dev = _dev_enqueue(q, kind, tag, nrep, payload, where)
+                t_ref = ref.enqueue(kind, tag, nrep, payload, where)
+                pending.append((t_dev, t_ref, nrep, kind))
+        q = do_flush(q)               # drain the tail epoch
+    finally:
+        set_fault_injector(None)
 
     # host-visible stream: same callees, same scalars, same array bytes
     got = [(k, t, a) for k, t, a in _SEEN]
@@ -292,25 +383,37 @@ def _check_single(plan):
     assert stats["drops"] == drops
     assert stats["arena_drops"] == adrops
     assert stats["reply_drops"] == rdrops
+    assert stats["callee_errors"] == cerrs
+    assert stats["retries"] == nretries
+    if dev_plan is not None:          # both plans saw the same firings
+        assert dev_plan.fired == ref_plan.fired
 
 
-def _check_sharded(plans):
+def _check_sharded(plans, fault_seed=None, retry=False):
     """Per-device interleavings on a sharded queue: enqueues stay shard-
     local, ONE stacked flush replays (device, slot) order, and each
-    device's tickets resolve against ITS reply arena."""
+    device's tickets resolve against ITS reply arena and status lane.
+    The model consults its fault-plan twin in the same device-major
+    order the gathered drain uses."""
     D = len(plans)
     reset_rpc_stats()
     _SEEN.clear()
+    dev_plan = ref_plan = None
+    if fault_seed is not None:
+        dev_plan = FaultPlan.generate(fault_seed, ["diff.int", "diff.float"])
+        ref_plan = FaultPlan(dev_plan.faults)
+        set_fault_injector(dev_plan)
+    pol = RetryPolicy(max_attempts=2) if retry else None
     sq = ShardedRpcQueue.create(D, CAP, width=WIDTH, payload_capacity=PC,
-                                reply_capacity=RC)
+                                reply_capacity=RC, retry=pol)
     locals_ = [sq.local(d) for d in range(D)]
     refs = [RefQueue() for _ in range(D)]
     expect_seen = []
-    drops = adrops = rdrops = 0
+    drops = adrops = rdrops = cerrs = nretries = 0
     pending = [[] for _ in range(D)]
 
     def do_flush():
-        nonlocal drops, adrops, rdrops, locals_
+        nonlocal drops, adrops, rdrops, cerrs, nretries, locals_
         stacked = ShardedRpcQueue(
             jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
         for d in range(D):
@@ -321,15 +424,20 @@ def _check_sharded(plans):
             stacked = stacked.flush()
         jax.effects_barrier()
         for d in range(D):           # (device, slot): device-major replay
-            seen, dd, aa, rr = refs[d].flush()
+            seen, dd, aa, rr, cc, nn = refs[d].flush(
+                ref_plan, 2 if retry else 1, _IDEM)
             expect_seen.extend(seen)
             drops += dd
             adrops += aa
             rdrops += rr
+            cerrs += cc
+            nretries += nn
         for d in range(D):
             lq = stacked.local(d)
             for dt_, rt_, nrep, kind in pending[d]:
                 assert dt_ == rt_
+                assert int(lq.result_status(dt_)) == \
+                    refs[d].result_status(rt_), (d, dt_, nrep, kind)
                 if nrep > 0:
                     assert _dev_result(lq, dt_, nrep, kind) == \
                         refs[d].result(rt_, nrep, kind), (d, dt_, nrep)
@@ -338,31 +446,38 @@ def _check_sharded(plans):
 
     # interleave devices op-by-op (round-robin) so shard-local state and
     # the gathered flush genuinely interleave; flush ops are global
-    maxlen = max(len(p) for p in plans)
-    for i in range(maxlen):
-        flush_now = False
-        for d, plan in enumerate(plans):
-            if i >= len(plan):
-                continue
-            op = plan[i]
-            if op[0] == "flush":
-                flush_now = True
-                continue
-            _, kind, tag, plen, nrep, where = op
-            payload = _payload_for(kind, plen, tag)
-            locals_[d], t_dev = _dev_enqueue(locals_[d], kind, tag, nrep,
-                                             payload, where)
-            t_ref = refs[d].enqueue(kind, tag, nrep, payload, where)
-            pending[d].append((t_dev, t_ref, nrep, kind))
-        if flush_now:
-            do_flush()
-    do_flush()
+    try:
+        maxlen = max(len(p) for p in plans)
+        for i in range(maxlen):
+            flush_now = False
+            for d, plan in enumerate(plans):
+                if i >= len(plan):
+                    continue
+                op = plan[i]
+                if op[0] == "flush":
+                    flush_now = True
+                    continue
+                _, kind, tag, plen, nrep, where = op
+                payload = _payload_for(kind, plen, tag)
+                locals_[d], t_dev = _dev_enqueue(locals_[d], kind, tag, nrep,
+                                                 payload, where)
+                t_ref = refs[d].enqueue(kind, tag, nrep, payload, where)
+                pending[d].append((t_dev, t_ref, nrep, kind))
+            if flush_now:
+                do_flush()
+        do_flush()
+    finally:
+        set_fault_injector(None)
 
     assert [(k, t, a) for k, t, a in _SEEN] == expect_seen
     stats = flush_stats()
     assert stats["drops"] == drops
     assert stats["arena_drops"] == adrops
     assert stats["reply_drops"] == rdrops
+    assert stats["callee_errors"] == cerrs
+    assert stats["retries"] == nretries
+    if dev_plan is not None:
+        assert dev_plan.fired == ref_plan.fired
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +510,7 @@ def test_directed_stale_ticket_never_reads_next_epoch():
     """A ticket held across a LATER flush must read zeros even when the
     next epoch put a same-length reply in the same slot (global tickets +
     the (rbase, rcount) window kill cross-epoch aliasing)."""
-    REGISTRY.register("diff.int", _echo_int)
+    REGISTRY.register("diff.int", _echo_int, idempotent=True)
     q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
                         reply_capacity=RC)
     q, t_old = q.enqueue_ticketed(
@@ -422,6 +537,88 @@ def test_directed_sharded_minimal():
                      ("enq", "i", 4, 9, 2, None)]])
 
 
+def test_directed_fault_isolation_and_retry():
+    """Directed fault plan: a raising record is isolated (siblings keep
+    their replies, CALLEE_RAISED in the status lane) without retry, and
+    redriven to OK with a RetryPolicy — matching the model on both."""
+    plan = [("enq", "i", 1, -1, 2, None),
+            ("enq", "i", 2, 3, 2, None),      # occurrence 1: the victim
+            ("enq", "f", 3, -1, 1, None),
+            ("enq", "i", 4, -1, 1, None)]
+    raise_second = (Fault("raise", "diff.int", 1),)
+    for retry in (False, True):
+        reset_rpc_stats()
+        _SEEN.clear()
+        dev_plan, ref_plan = FaultPlan(raise_second), FaultPlan(raise_second)
+        q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                            reply_capacity=RC,
+                            retry=RetryPolicy(max_attempts=2)
+                            if retry else None)
+        ref = RefQueue()
+        tickets = []
+        for op in plan:
+            if op[0] == "flush":
+                continue
+            _, kind, tag, plen, nrep, where = op
+            payload = _payload_for(kind, plen, tag)
+            q, td = _dev_enqueue(q, kind, tag, nrep, payload, where)
+            tr = ref.enqueue(kind, tag, nrep, payload, where)
+            tickets.append((td, tr, nrep, kind))
+        set_fault_injector(dev_plan)
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                q = q.flush()
+        finally:
+            set_fault_injector(None)
+        ref.flush(ref_plan, 2 if retry else 1, _IDEM)
+        jax.effects_barrier()
+        sts = [int(q.result_status(td)) for td, _, _, _ in tickets]
+        exp = [ref.result_status(tr) for _, tr, _, _ in tickets]
+        assert sts == exp
+        victim = sts[1]
+        assert victim == (STATUS_OK if retry else STATUS_CALLEE_RAISED)
+        for td, tr, nrep, kind in tickets:
+            if nrep > 0:
+                assert _dev_result(q, td, nrep, kind) == \
+                    ref.result(tr, nrep, kind)
+
+
+def test_directed_fault_drop_and_corrupt_reply():
+    """drop_reply marks DROPPED with the host effect standing; corrupt
+    rewrites one reply word identically on device and model."""
+    faults = (Fault("drop_reply", "diff.int", 0),
+              Fault("corrupt", "diff.int", 1, word=1, value=-77))
+    reset_rpc_stats()
+    _SEEN.clear()
+    dev_plan, ref_plan = FaultPlan(faults), FaultPlan(faults)
+    q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                        reply_capacity=RC)
+    ref = RefQueue()
+    ops = [("i", 5, -1, 2), ("i", 6, -1, 3)]
+    tix = []
+    for kind, tag, plen, nrep in ops:
+        payload = _payload_for(kind, plen, tag)
+        q, td = _dev_enqueue(q, kind, tag, nrep, payload, None)
+        tr = ref.enqueue(kind, tag, nrep, payload, None)
+        tix.append((td, tr, nrep, kind))
+    set_fault_injector(dev_plan)
+    try:
+        q = q.flush()
+    finally:
+        set_fault_injector(None)
+    ref.flush(ref_plan, 1, _IDEM)
+    jax.effects_barrier()
+    assert int(q.result_status(tix[0][0])) == STATUS_DROPPED
+    assert int(q.result_status(tix[1][0])) == STATUS_OK
+    assert _dev_result(q, tix[1][0], 3, "i") == \
+        ref.result(tix[1][1], 3, "i")
+    assert _dev_result(q, tix[1][0], 3, "i")[1] == -77
+    # drop_reply does NOT suppress the host effect: both callees ran
+    assert len(_SEEN) == 2
+    assert dev_plan.fired == ref_plan.fired
+
+
 # ---------------------------------------------------------------------------
 # Generated interleavings: hypothesis when present, seeded corpus otherwise
 # ---------------------------------------------------------------------------
@@ -445,3 +642,157 @@ else:
     def test_differential_sharded_queue(seed):
         rng = random.Random(2000 + seed)
         _check_sharded([_random_plan(rng, 10), _random_plan(rng, 10)])
+
+
+# ---------------------------------------------------------------------------
+# Fault differential: seeded fault plans over both transports.  Always the
+# seeded generator (fault plans address per-callee occurrences, so the plan
+# and the interleaving must come from the same deterministic source).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_differential_single_queue_faults(seed):
+    rng = random.Random(3000 + seed)
+    _check_single(_random_plan(rng), fault_seed=seed,
+                  retry=bool(seed % 2))
+
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_differential_sharded_queue_faults(seed):
+    rng = random.Random(4000 + seed)
+    _check_sharded([_random_plan(rng, 10), _random_plan(rng, 10)],
+                   fault_seed=seed, retry=bool(seed % 2))
+
+
+# ---------------------------------------------------------------------------
+# Cross-transport conformance: the SAME logical records under the SAME
+# seeded fault plan must report bit-identical statuses and host effects on
+# all three transports (per-enqueue "immediate" flushes, one batched
+# flush, 2-shard sharded).  Records are block-distributed across shards so
+# the sharded (device, slot) replay order equals the batched slot order —
+# fault plans address per-callee occurrences in replay order, so identical
+# order means identical faulted records.
+# ---------------------------------------------------------------------------
+
+_CONFORMANCE_RECORDS = [
+    ("i", 11, -1, 2), ("i", 12, 3, 2), ("f", 13, -1, 1),
+    ("i", 14, 2, 1), ("f", 15, -1, 2), ("i", 16, -1, 2),
+]
+
+
+def _run_immediate(records, plan, retry):
+    """Transport (a): flush after EVERY enqueue on a single queue."""
+    _SEEN.clear()
+    q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                        reply_capacity=RC,
+                        retry=RetryPolicy(max_attempts=2) if retry else None)
+    sts, effects = [], []
+    set_fault_injector(plan)
+    try:
+        for kind, tag, plen, nrep in records:
+            payload = _payload_for(kind, plen, tag)
+            q, t = _dev_enqueue(q, kind, tag, nrep, payload, None)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                q = q.flush()
+            jax.effects_barrier()
+            sts.append(int(q.result_status(t)))
+    finally:
+        set_fault_injector(None)
+    effects[:] = list(_SEEN)
+    return sts, effects
+
+
+def _run_batched(records, plan, retry):
+    """Transport (b): one flush carries every record."""
+    _SEEN.clear()
+    q = RpcQueue.create(max(CAP, len(records)), width=WIDTH,
+                        payload_capacity=4 * PC, reply_capacity=4 * RC,
+                        retry=RetryPolicy(max_attempts=2) if retry else None)
+    tix = []
+    for kind, tag, plen, nrep in records:
+        payload = _payload_for(kind, plen, tag)
+        q, t = _dev_enqueue(q, kind, tag, nrep, payload, None)
+        tix.append(t)
+    set_fault_injector(plan)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            q = q.flush()
+    finally:
+        set_fault_injector(None)
+    jax.effects_barrier()
+    return [int(q.result_status(t)) for t in tix], list(_SEEN)
+
+
+def _run_sharded(records, plan, retry, D=2):
+    """Transport (c): 2-shard sharded queue, records block-distributed so
+    the gathered (device, slot) drain preserves the batched order."""
+    _SEEN.clear()
+    sq = ShardedRpcQueue.create(D, max(CAP, len(records)), width=WIDTH,
+                                payload_capacity=4 * PC,
+                                reply_capacity=4 * RC,
+                                retry=RetryPolicy(max_attempts=2)
+                                if retry else None)
+    per = -(-len(records) // D)
+    locals_ = [sq.local(d) for d in range(D)]
+    tix = []                          # (device, ticket) in record order
+    for i, (kind, tag, plen, nrep) in enumerate(records):
+        d = i // per
+        payload = _payload_for(kind, plen, tag)
+        locals_[d], t = _dev_enqueue(locals_[d], kind, tag, nrep,
+                                     payload, None)
+        tix.append((d, t))
+    stacked = ShardedRpcQueue(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
+    set_fault_injector(plan)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            stacked = stacked.flush()
+    finally:
+        set_fault_injector(None)
+    jax.effects_barrier()
+    return [int(stacked.local(d).result_status(t)) for d, t in tix], \
+        list(_SEEN)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+@pytest.mark.parametrize("retry", [False, True])
+def test_conformance_identical_statuses_across_transports(seed, retry):
+    plan_seed = FaultPlan.generate(
+        seed, ["diff.int", "diff.float"], n_faults=2, max_index=4)
+    runs = []
+    for runner in (_run_immediate, _run_batched, _run_sharded):
+        reset_rpc_stats()
+        plan = FaultPlan(plan_seed.faults)     # fresh counters per leg
+        runs.append(runner(_CONFORMANCE_RECORDS, plan, retry))
+    (st_a, fx_a), (st_b, fx_b), (st_c, fx_c) = runs
+    assert st_a == st_b == st_c                # bit-identical statuses
+    assert fx_a == fx_b == fx_c                # bit-identical host effects
+
+
+def test_conformance_callee_raise_first_attempt():
+    """The acceptance chaos scenario: callee N raises on its FIRST
+    attempt.  On every transport the flush completes, survivors replay in
+    order, and the victim reports CALLEE_RAISED without retry — or OK
+    after one retry, because diff.int is registered idempotent."""
+    victim = Fault("raise", "diff.int", 1)     # second diff.int record
+    for retry in (False, True):
+        legs = []
+        for runner in (_run_immediate, _run_batched, _run_sharded):
+            reset_rpc_stats()
+            legs.append(runner(_CONFORMANCE_RECORDS,
+                               FaultPlan([victim]), retry))
+        (st_a, fx_a), (st_b, fx_b), (st_c, fx_c) = legs
+        assert st_a == st_b == st_c
+        assert fx_a == fx_b == fx_c
+        # records: i11 i12 f13 i14 f15 i16 — diff.int occurrence 1 is i12
+        want = STATUS_OK if retry else STATUS_CALLEE_RAISED
+        assert st_a == [STATUS_OK, want, STATUS_OK, STATUS_OK,
+                        STATUS_OK, STATUS_OK]
+        tags = [t for _k, t, _a in fx_a]
+        if retry:
+            assert tags == [11, 12, 13, 14, 15, 16]   # victim redriven
+        else:
+            assert tags == [11, 13, 14, 15, 16]       # victim isolated

@@ -315,7 +315,9 @@ def test_queue_overflow_surfaced_at_flush():
     st = flush_stats()
     assert st == {"flushes": 1, "drops": k, "last_drops": k,
                   "arena_drops": 0, "last_arena_drops": 0,
-                  "reply_drops": 0, "last_reply_drops": 0}
+                  "reply_drops": 0, "last_reply_drops": 0,
+                  "callee_errors": 0, "last_callee_errors": 0,
+                  "retries": 0}
 
     @jax.jit
     def clean():
@@ -329,7 +331,9 @@ def test_queue_overflow_surfaced_at_flush():
     st = flush_stats()
     assert st == {"flushes": 2, "drops": k, "last_drops": 0,
                   "arena_drops": 0, "last_arena_drops": 0,
-                  "reply_drops": 0, "last_reply_drops": 0}
+                  "reply_drops": 0, "last_reply_drops": 0,
+                  "callee_errors": 0, "last_callee_errors": 0,
+                  "retries": 0}
 
 
 def test_queue_rejects_overwidth_unregistered_and_armless_arrays():

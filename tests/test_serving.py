@@ -122,6 +122,52 @@ def test_engine_spill_ack_carries_sink_return(dense_model):
     assert spilled and eng2.spill_acks == {r2: spilled[0][0]}
 
 
+def test_engine_spill_flaky_sink_is_retried(dense_model):
+    """PR 9: a sink that fails its first delivery is re-enqueued in a
+    fresh epoch (application-level retry, spill_retries rounds) — the
+    ack still lands and nothing degrades."""
+    cfg, model, params = dense_model
+    calls = {}
+
+    def flaky(rid, n_tokens, pages):
+        calls[int(rid)] = calls.get(int(rid), 0) + 1
+        if calls[int(rid)] == 1:
+            raise RuntimeError("transient spill-store hiccup")
+        return int(rid) + 500
+
+    import warnings
+    eng = ServingEngine(model, params, batch_slots=1, max_len=32,
+                        page_size=8, spill_sink=flaky, spill_retries=2)
+    r1 = eng.submit([4, 2], max_new=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        eng.run_until_drained()
+    assert calls[r1] == 2
+    assert eng.spill_acks == {r1: r1 + 500}
+    assert eng.recompute_on_readmit == set()
+
+
+def test_engine_spill_dead_sink_degrades_to_recompute(dense_model):
+    """PR 9: a sink that fails EVERY attempt exhausts the retry budget —
+    the engine records the failed ack as None, marks the request for
+    recompute-on-readmit, and the tick completes (no wedge, no raise)."""
+    cfg, model, params = dense_model
+
+    def dead(rid, n_tokens, pages):
+        raise RuntimeError("spill store down")
+
+    import warnings
+    eng = ServingEngine(model, params, batch_slots=1, max_len=32,
+                        page_size=8, spill_sink=dead, spill_retries=1)
+    r1 = eng.submit([4, 2], max_new=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        res = eng.run_until_drained()
+    assert len(res[r1]) == 3               # decode itself unaffected
+    assert eng.spill_acks == {r1: None}
+    assert eng.recompute_on_readmit == {r1}
+
+
 def test_engine_spill_disabled_by_default(dense_model):
     cfg, model, params = dense_model
     eng = ServingEngine(model, params, batch_slots=1, max_len=32,
