@@ -26,6 +26,9 @@ import jax
 # in block_until_ready — every bench that flushes a queue is exposed.
 # Deterministically reproducible on this container at payload-1024; pin
 # synchronous dispatch for all benchmark processes (a no-op off-CPU).
+# ``RpcQueue.create`` now detects a live flag at queue-construction time
+# and emits a RuntimeWarning naming this pin (rpc._check_cpu_async_dispatch),
+# so a bench that loses it complains loudly instead of hanging.
 jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 ROWS = []

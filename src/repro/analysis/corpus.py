@@ -157,6 +157,25 @@ def unchecked_status_fixed():
     q.result(t, _I32)             # ... so the raw read is fine
 
 
+def pending_ticket_read():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8, mode="async")
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(4), returns=_I32)
+    q = q.flush()                 # async: SUBMIT only — replies not here
+    q.result(t, _I32)             # BUG: epoch still pending (reads zeros)
+    q = q.flush()                 # collect, so the drain retires cleanly
+    q.join()
+
+
+def pending_ticket_read_fixed():
+    q = RpcQueue.create(8, 4, 64, reply_capacity=8, mode="async")
+    q, t = q.enqueue_ticketed("corpus.echo", jnp.int32(4), returns=_I32)
+    q = q.flush()                 # submit the epoch
+    q = q.flush()                 # collect: the epoch's replies land
+    q.result_status(t)            # guard distinguishes PENDING from OK
+    q.result(t, _I32)
+    q.join()
+
+
 # -- capacity proofs --------------------------------------------------------
 
 def capacity_records():
@@ -351,6 +370,9 @@ CASES = (
     Case("retry_non_idempotent_fixed", retry_non_idempotent_fixed, ()),
     Case("unchecked_status", unchecked_status, ("UNCHECKED_STATUS",)),
     Case("unchecked_status_fixed", unchecked_status_fixed, ()),
+    Case("pending_ticket_read", pending_ticket_read,
+         ("PENDING_TICKET_READ", "UNCHECKED_STATUS")),
+    Case("pending_ticket_read_fixed", pending_ticket_read_fixed, ()),
     Case("capacity_records", capacity_records, ("CAPACITY_RECORDS",)),
     Case("capacity_records_fixed", capacity_records_fixed, ()),
     Case("capacity_payload", capacity_payload, ("CAPACITY_PAYLOAD",)),

@@ -61,6 +61,13 @@ Robustness (the v5 fault-tolerant boundary)
   ``result()`` with no ``result_status()``/``result_ok()`` guard
   reachable: a ``CALLEE_RAISED``/``TIMEOUT``/``DROPPED`` record reads
   silent zeros indistinguishable from a real zero reply.
+  ``PENDING_TICKET_READ``  — on the v6 double-buffered (``mode="async"``)
+  transport a flush only SUBMITS its epoch; the replies land at the NEXT
+  flush.  A raw ``result()`` one flush after the enqueue therefore reads
+  a reply that has not been collected yet (``STATUS_PENDING`` in the
+  status lane) — guard with ``result_status()`` or read after the
+  collect flush.  Async lineages also get one extra flush of reply-window
+  grace before ``STALE_TICKET`` (the window trails by an epoch).
 """
 from __future__ import annotations
 
@@ -75,7 +82,8 @@ POINTER_CODES = ("USE_AFTER_FREE", "DOUBLE_FREE", "OOB_PTR")
 PERF_CODES = ("RPC_IN_LOOP", "CALLBACK_IN_LOOP", "CALLBACK_IN_MESH",
               "HOOK_NEVER_FIRES")
 IDENTITY_CODES = ("UNSTABLE_PAD_NAME",)
-ROBUSTNESS_CODES = ("RETRY_NON_IDEMPOTENT", "UNCHECKED_STATUS")
+ROBUSTNESS_CODES = ("RETRY_NON_IDEMPOTENT", "UNCHECKED_STATUS",
+                    "PENDING_TICKET_READ")
 ALL_CODES = TICKET_CODES + CAPACITY_CODES + POINTER_CODES + PERF_CODES \
     + IDENTITY_CODES + ROBUSTNESS_CODES
 

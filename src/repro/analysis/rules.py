@@ -40,6 +40,7 @@ class _Lineage:
     epochs: List[Tuple[Optional[dict], List[dict]]] = \
         dataclasses.field(default_factory=list)
     last_flush: Optional[dict] = None
+    mode: str = "sync"            # "async": v6 double-buffered transport
 
 
 def _cap_of(ev: dict, key: str) -> Optional[int]:
@@ -110,12 +111,14 @@ def analyze_events(events: List[dict]) -> HazardReport:
         kind = ev["kind"]
 
         if kind == "queue_create":
-            lin = _Lineage(next(next_lid), True, _lineage_caps(ev))
+            lin = _Lineage(next(next_lid), True, _lineage_caps(ev),
+                           mode=str(ev.get("mode") or "sync"))
             owner[ev["qid"]] = lin
             lineages[lin.lid] = lin
 
         elif kind == "queue_view":
-            lin = _Lineage(next(next_lid), False, _lineage_caps(ev))
+            lin = _Lineage(next(next_lid), False, _lineage_caps(ev),
+                           mode=str(ev.get("mode") or "sync"))
             owner[ev["qid"]] = lin
             lineages[lin.lid] = lin
 
@@ -149,6 +152,8 @@ def analyze_events(events: List[dict]) -> HazardReport:
             lin.pending = []
             lin.flush_count += 1
             lin.last_flush = ev
+            if ev.get("mode"):
+                lin.mode = str(ev["mode"])
 
         elif kind == "rpc_result":
             lin = owner.get(ev["qid"])
@@ -166,7 +171,23 @@ def analyze_events(events: List[dict]) -> HazardReport:
                     ev["site"]))
             if tk is not None:
                 t_lin = tk["lineage"]
-                if t_lin.flush_count >= tk["epoch"] + 2:
+                is_async = t_lin.mode == "async"
+                if is_async and ev.get("via_result") \
+                        and t_lin.flush_count == tk["epoch"] + 1:
+                    report.add(Hazard.make(
+                        "PENDING_TICKET_READ",
+                        f"ticket from epoch {tk['epoch']} read through "
+                        "raw result() one flush later — on the async "
+                        "transport that flush only SUBMITTED the epoch "
+                        "(status lane reads PENDING); collect with a "
+                        "second flush, or guard with result_status()",
+                        ev["site"], epoch=tk["epoch"],
+                        flushes=t_lin.flush_count,
+                        enqueue_site=tk["site"]))
+                # the async reply window trails by one epoch: the collect
+                # flush at epoch+2 is the valid read point, not stale
+                stale_at = tk["epoch"] + (3 if is_async else 2)
+                if t_lin.flush_count >= stale_at:
                     report.add(Hazard.make(
                         "STALE_TICKET",
                         f"ticket from epoch {tk['epoch']} read after "

@@ -242,6 +242,7 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                queue_capacity: int = 1024, queue_width: int = 8,
                queue_payload: int = 4096, queue_reply: int = 0,
                queue_retry=None, queue_timeout: Optional[float] = None,
+               queue_async: bool = False,
                thread_queue: bool = False, return_queue: bool = False,
                mesh: Optional[Mesh] = None, state_spec=None) -> Any:
     """Run ``state = step_fn(step, state)`` for ``n_steps`` **on device**.
@@ -290,6 +291,18 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
     policy: the boundary drain isolates failing hook firings into the
     reply status lane, retries ``idempotent=True`` hooks, and bounds a
     hung host_fn's wall clock instead of wedging the drain.
+
+    ``queue_async=True`` puts the run queue on the v6 double-buffered
+    transport: each flush SUBMITS its epoch to a background host drain
+    and returns without waiting, so host-callee time overlaps the
+    following device compute.  ``device_run`` owns the boundary
+    protocol — after the program returns it issues the collect flush
+    (publishing the final epoch's replies into the returned queue's
+    reply window) and joins the drain executor, so by the time the call
+    returns every host effect has retired.  In-loop flushes (via
+    ``thread_queue``) land replies ONE EPOCH LATE — guard reads with
+    ``result_status`` against ``STATUS_PENDING``.  Incompatible with
+    ``returns=`` hooks, whose consume step needs same-epoch replies.
     """
     named = _name_hooks(hooks)
     for h, hname in named:
@@ -302,6 +315,13 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                         unstable=h.name is None and _hook_key(h) is None)
     try:
         returning = [hname for h, hname in named if h.returns is not None]
+        if queue_async and returning:
+            raise ValueError(
+                f"hook(s) {returning} use returns= with queue_async=True: "
+                "the double-buffered transport lands replies one epoch "
+                "late, but a consume step folds its reply into the SAME "
+                "firing step's state — use the synchronous queue for "
+                "reply-consuming hooks")
         if mesh is not None:
             if returning:
                 raise ValueError(
@@ -313,7 +333,7 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
             return _device_run_mesh(step_fn, state, n_steps, named, mesh,
                                     state_spec, queue_capacity, queue_width,
                                     queue_payload, queue_reply, queue_retry,
-                                    queue_timeout, thread_queue,
+                                    queue_timeout, queue_async, thread_queue,
                                     return_queue, dict(jit_kwargs or {}))
 
         jit_kwargs = dict(jit_kwargs or {})
@@ -354,12 +374,13 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                 q0 = RpcQueue.create(queue_capacity, queue_width,
                                      queue_payload, queue_reply,
                                      retry=queue_retry,
-                                     timeout=queue_timeout)
+                                     timeout=queue_timeout,
+                                     mode="async" if queue_async else "sync")
                 with events.loop_scope(int(n_steps)):
                     _, final, q = lax.while_loop(
                         cond, body, (jnp.zeros((), jnp.int32), state, q0))
                 q = q.flush()
-                if return_queue:
+                if return_queue or queue_async:
                     return final, q
             else:
                 def body(carry):
@@ -374,14 +395,26 @@ def device_run(step_fn: Callable[[jax.Array, Any], Any], state: Any,
                         cond, body, (jnp.zeros((), jnp.int32), state))
             return final
 
-        return program(state)
+        out = program(state)
+        if carries_queue and queue_async:
+            final, q = out
+            # boundary protocol: the in-program flush only SUBMITTED the
+            # final epoch — collect it here (eager flush on the concrete
+            # queue publishes its replies into the window), then join the
+            # slot so every host effect has retired before we return.
+            jax.effects_barrier()
+            q = q.flush()
+            jax.effects_barrier()
+            q.join()
+            return (final, q) if return_queue else final
+        return out
     finally:
         _retire_auto_hooks(named)
 
 
 def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
                      queue_capacity, queue_width, queue_payload, queue_reply,
-                     queue_retry, queue_timeout,
+                     queue_retry, queue_timeout, queue_async,
                      thread_queue, return_queue, jit_kwargs):
     """The sharded step loop: whole ``while_loop`` inside one ``shard_map``,
     hooks enqueued into this device's queue shard, ONE gathered drain at the
@@ -394,7 +427,8 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
     spec = state_spec if state_spec is not None else P()
     q0 = ShardedRpcQueue.create(mesh.size, queue_capacity, queue_width,
                                 queue_payload, queue_reply,
-                                retry=queue_retry, timeout=queue_timeout)
+                                retry=queue_retry, timeout=queue_timeout,
+                                mode="async" if queue_async else "sync")
 
     def region(state, q):
         lq = q.local_view()
@@ -422,6 +456,14 @@ def _device_run_mesh(step_fn, state, n_steps, named, mesh, state_spec,
         out_specs=(spec, P(axes)), check_vma=False), **jit_kwargs)
     final, q = program(state, q0)
     q = q.flush()                  # concrete shards -> host-side drain
+    if queue_async:
+        # submit-only above: collect the boundary epoch's replies (each
+        # device's drain runs on its own slot executor, no gather barrier),
+        # then join so host effects retire before the run returns.
+        jax.effects_barrier()
+        q = q.flush()
+        jax.effects_barrier()
+        q.join()
     if return_queue:
         return final, q
     return final

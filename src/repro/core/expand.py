@@ -243,7 +243,8 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
            lanes: int = 1, check_vma: bool = False,
            heap: bool = False, queue: bool = False,
            sanitize: bool = False, queue_retry=None,
-           queue_timeout: Optional[float] = None) -> Callable:
+           queue_timeout: Optional[float] = None,
+           queue_async: bool = False) -> Callable:
     """Rewrite single-team ``fn`` for multi-team execution over ``mesh``.
 
     Inside ``fn`` the single-team primitives report *global* coordinates.
@@ -275,6 +276,15 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
     given :class:`~repro.core.rpc.RetryPolicy` and per-callee wall-clock
     timeout (see the transport's status lane).  Retry only redrives
     callees registered ``idempotent=True``.
+
+    ``queue_async=True`` declares the region rides the v6 double-buffered
+    transport: the passed queue must have been CREATED with
+    ``mode="async"`` (the epoch slot — the host-side drain executor
+    lineage — is allocated at create time; it cannot be grafted on per
+    call without defeating the jit cache).  This is a validation, not a
+    transform: it exists so a region written against epoch-late reply
+    semantics fails loudly when handed a synchronous queue rather than
+    silently blocking at every flush.
     """
     axes = tuple(mesh.axis_names)
     n_extra = int(heap) + int(queue)
@@ -299,6 +309,17 @@ def expand(fn: Callable, mesh: Mesh, in_specs, out_specs, *,
         assert len(call_args) >= n_extra, \
             f"expand(heap={heap}, queue={queue}) expects the sharded " \
             f"state as the leading {n_extra} argument(s)"
+        if queue and queue_async:
+            qi = int(heap)
+            inner = getattr(call_args[qi], "q", call_args[qi])
+            if getattr(inner, "mode", "sync") != "async":
+                raise ValueError(
+                    "expand(queue_async=True) was handed a synchronous "
+                    "queue: the double-buffered transport's epoch slot is "
+                    "allocated at create time, so build the queue with "
+                    "RpcQueue.create(..., mode='async') (or "
+                    "ShardedRpcQueue.create(..., mode='async')) instead "
+                    "of flipping it per call")
         if queue and sanitize:
             qi = int(heap)
             call_args = call_args[:qi] + \

@@ -148,6 +148,66 @@ form; when the shards live on a real multi-device mesh, flush at the
 program boundary instead (``device_run(mesh=...)`` does) — XLA cannot lower
 a gathered callback inside the same program as the partitioned loop.
 
+**Async double-buffered transport (v6).**  A queue created with
+``mode="async"`` stops paying the drain on the device clock: ``flush``
+becomes a PING-PONG epoch hand-off.  The callback SUBMITS the just-closed
+epoch's records (a copied snapshot) to a host-side single-thread executor
+owned by the queue's **slot** (allocated at ``create``; per *(slot,
+device)* for sharded queues) and immediately COLLECTS the previous
+epoch's finished drain as its return value — so host-callee time overlaps
+the device compute that runs between flushes instead of serializing with
+it.  Consequences, all visible in the API:
+
+* **Replies land one epoch late.**  The reply window a flush installs is
+  the PREVIOUS epoch's; tickets of the epoch just submitted read
+  ``STATUS_PENDING`` from ``result_status()`` until the NEXT flush
+  collects their drain (flushing an empty epoch is the explicit "collect
+  the tail" idiom; ``join()`` waits for the background work without
+  collecting).  The analyzer flags a raw ``result()`` of a pending ticket
+  as ``PENDING_TICKET_READ``.
+* **Per-device independent drains.**  A sharded async flush submits one
+  job per shard to per-``(slot, device)`` executors — no host-side gather
+  barrier, shards drain concurrently.  Determinism is recovered
+  structurally: each shard's executor is FIFO over its epoch sequence
+  (per-shard epoch sequence numbers), so per-shard replay order — and
+  therefore every status and reply — is deterministic; only the
+  cross-shard interleaving of host effects is not.  Fault plans stay
+  seed-deterministic because occurrence indices are RESERVED at submit
+  time in canonical ``(device, slot)`` order (see
+  :mod:`repro.testing.faults`).
+* **Cross-epoch retry carry.**  ``create(..., carry_budget=N)`` lets a
+  failing record (``CALLEE_RAISED``/``TIMEOUT`` after in-drain retries,
+  idempotent callees only) be CARRIED host-side into the next epoch's
+  drain instead of finalizing: its slot stamps ``STATUS_PENDING``, the
+  record replays FIRST (oldest first) at each subsequent drain of the
+  slot, up to ``N`` extra rounds.  Final outcomes are host-visible via
+  ``carry_outcomes()`` and folded into ``statuses_host()`` /
+  ``results_host()``; the carried depth returns to the device as the
+  ``cdepth`` leaf, which ``pressure()`` folds into the occupancy max —
+  a degrading host IS backpressure.
+* **Per-shard drain deadlines.**  ``create(..., shard_deadline=secs)``
+  bounds how long a flush waits for each shard's previous-epoch drain
+  (and, on a SYNC sharded queue, drains shards concurrently with that
+  per-shard budget): a stalled shard's records are stamped
+  ``STATUS_TIMEOUT`` and its siblings complete — partial-epoch
+  completion instead of one hung shard stalling the gather.
+
+**CPU async-dispatch deadlock (why ``RpcQueue.create`` warns).**  Under
+``jax_cpu_enable_async_dispatch=True`` the CPU backend enqueues programs
+on a dispatch thread and materializes operands lazily.  An ordered
+``io_callback`` drain then runs on a callback thread that calls
+``np.asarray`` on its operands; for a LARGE operand (payload arenas past
+~64K words) that materialization blocks on the operand's definition
+event, which is queued BEHIND the very computation the callback belongs
+to — while the main thread sits in ``block_until_ready`` waiting for
+that computation.  Three threads, a cycle, no progress: a deterministic
+deadlock on some containers (reproducible at the payload-1024 bench
+point).  Synchronous dispatch removes the cycle without changing any
+transport semantics, so ``RpcQueue.create`` detects the hazardous
+config (CPU backend + async dispatch enabled) and warns ONCE per
+process with the pin to apply; the test and bench harnesses
+(``tests/conftest.py``, ``benchmarks/common.py``) pin it preemptively.
+
 Argument categories (paper Fig. 3):
   * value args      — leaves passed by value; never written back.
   * ref args        — ``Ref(array, access=...)``: the underlying array ships
@@ -174,8 +234,9 @@ import threading
 import time
 import traceback as traceback_mod
 import warnings
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from concurrent.futures import TimeoutError as _FutureTimeout
+from queue import Empty as _QueueEmpty, SimpleQueue as _SimpleQueue
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -264,11 +325,15 @@ STATUS_DROPPED = 3          # record dropped at enqueue (where=False / arena
 #                             full), or its reply dropped by fault injection
 STATUS_REPLY_OVERFLOW = 4   # reply arena full at drain: callee NOT run
 STATUS_STALE = 5            # ticket from an epoch other than the last flush
+STATUS_PENDING = 6          # async transport: the ticket's epoch is submitted
+#                             but its drain has not been collected yet (reply
+#                             lands one epoch late), or its record is being
+#                             carried across epochs under a retry budget
 
 STATUS_NAMES = {STATUS_OK: "OK", STATUS_CALLEE_RAISED: "CALLEE_RAISED",
                 STATUS_TIMEOUT: "TIMEOUT", STATUS_DROPPED: "DROPPED",
                 STATUS_REPLY_OVERFLOW: "REPLY_OVERFLOW",
-                STATUS_STALE: "STALE"}
+                STATUS_STALE: "STALE", STATUS_PENDING: "PENDING"}
 
 #: Bounded host-side error log (oldest entries evicted past the cap).
 _ERROR_LOG_CAP = 256
@@ -330,33 +395,236 @@ class _CalleeTimeout(Exception):
     per-callee wall-clock timeout."""
 
 
-_TIMEOUT_POOL: List[ThreadPoolExecutor] = []
+class _PipelinedCall:
+    """One record in flight on a :class:`_CalleeWorker`'s inbox.
+
+    The claim/cancel pair closes the double-execution race of a pipelined
+    drain: when record j times out while record j+1 is already queued
+    behind it, the drain must redrive j+1 on a FRESH worker — but only if
+    the wedged worker has not started it.  ``claim()`` (worker side) and
+    ``cancel()`` (drain side) race under the item's lock; exactly one
+    wins, so every record's callee runs at most once."""
+
+    __slots__ = ("fn", "args", "seq", "src", "_lk", "claimed", "cancelled")
+
+    def __init__(self, fn, args, seq: int, src: "_CalleeWorker") -> None:
+        self.fn = fn
+        self.args = args
+        self.seq = seq
+        self.src = src          # the worker whose outbox holds the result
+        self._lk = threading.Lock()
+        self.claimed = False
+        self.cancelled = False
+
+    def claim(self) -> bool:
+        with self._lk:
+            if self.cancelled:
+                return False
+            self.claimed = True
+            return True
+
+    def cancel(self) -> bool:
+        with self._lk:
+            if self.claimed:
+                return False
+            self.cancelled = True
+            return True
 
 
-def _call_with_timeout(fn, args, timeout: float):
+class _CalleeWorker:
+    """One persistent daemon thread running a serial stream of callee
+    invocations for the ``timeout=`` path.
+
+    The old implementation paid a ``ThreadPoolExecutor.submit`` + future
+    wakeup per record (~40µs: a lock handoff, a condition-variable round
+    trip, and a future allocation each time), which put the guarded drain
+    at ~2.5x the bare one.  A drain now CHECKS OUT one worker and streams
+    every record of the epoch through a ``SimpleQueue`` inbox/outbox
+    pair, and the fault-free drain PIPELINES the WHOLE EPOCH: every
+    record is submitted before the first reply is settled, so the worker
+    drains its inbox in one scheduling quantum and the drain pays O(1)
+    context switches per epoch instead of O(records) — the decisive term
+    on a single-core host, where a per-record ping-pong cannot overlap
+    with anything (the ≤1.5x rpc_bench gate).  Results carry their
+    submission sequence number so a collect can discard the stale entry
+    a timed-out-but-late-completing callee leaves behind.  A timed-out
+    callee wedges its worker (Python cannot safely kill a thread), so
+    the worker is ABANDONED — its thread keeps running the callee to
+    completion, skips any cancelled items still queued behind it, and
+    idles forever on an unreachable inbox — and the next checkout spins
+    up a fresh one."""
+
+    def __init__(self) -> None:
+        self._inbox: _SimpleQueue = _SimpleQueue()
+        self._outbox: _SimpleQueue = _SimpleQueue()
+        self._seq = 0
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="rpc-callee-worker")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._inbox.get()
+            if not item.claim():
+                continue                 # cancelled before it ever ran
+            try:
+                out = (True, item.fn(*item.args), item.seq)
+            except BaseException as exc:  # noqa: BLE001 — relayed to caller
+                out = (False, exc, item.seq)
+            self._outbox.put(out)
+
+    def submit(self, fn, args) -> _PipelinedCall:
+        self._seq += 1
+        item = _PipelinedCall(fn, args, self._seq, self)
+        self._inbox.put(item)
+        return item
+
+    def collect(self, seq: int, timeout: float):
+        while True:
+            try:
+                # a pipelined drain usually finds the result already
+                # posted (the worker ran it during the drain's own
+                # unmarshalling of the next record) — the non-blocking
+                # probe skips the timed-wait setup on that path
+                ok, val, s = self._outbox.get_nowait()
+            except _QueueEmpty:
+                try:
+                    ok, val, s = self._outbox.get(timeout=timeout)
+                except _QueueEmpty:
+                    raise _CalleeTimeout(
+                        f"host callee exceeded the {timeout}s per-callee "
+                        "timeout (still running in its worker thread; "
+                        "record marked TIMEOUT)") from None
+            if s != seq:
+                continue   # stale result from an already-abandoned record
+            if ok:
+                return val
+            raise val
+
+
+_IDLE_WORKERS: List[_CalleeWorker] = []
+_WORKER_LOCK = threading.Lock()
+
+
+def _checkout_worker() -> _CalleeWorker:
+    with _WORKER_LOCK:
+        if _IDLE_WORKERS:
+            return _IDLE_WORKERS.pop()
+    return _CalleeWorker()
+
+
+def _return_worker(w: _CalleeWorker) -> None:
+    with _WORKER_LOCK:
+        _IDLE_WORKERS.append(w)
+
+
+class _WorkerLease:
+    """A drain's handle on one checked-out :class:`_CalleeWorker`.
+
+    Lazily checks a worker out on first use, streams every ``timeout=``
+    record of the drain through it, and returns it to the idle pool at
+    ``release()``.  ``submit()``/``collect()`` expose the pipelined
+    protocol (one record executing, the next already queued behind it);
+    ``call()`` is the strict ping-pong used when an injector or retry
+    policy requires serial confirmation.  A timeout ABANDONS the wedged
+    worker (dropped on the floor; its daemon thread finishes the callee
+    and idles forever on an unreachable inbox) and the next record
+    transparently gets a fresh one."""
+
+    __slots__ = ("_w",)
+
+    def __init__(self) -> None:
+        self._w: Optional[_CalleeWorker] = None
+
+    def submit(self, fn, args) -> _PipelinedCall:
+        if self._w is None:
+            self._w = _checkout_worker()
+        return self._w.submit(fn, args)
+
+    def collect(self, item: _PipelinedCall, timeout: float):
+        return item.src.collect(item.seq, timeout)
+
+    def call(self, fn, args, timeout: float):
+        item = self.submit(fn, args)
+        try:
+            return item.src.collect(item.seq, timeout)
+        except _CalleeTimeout:
+            self._w = None           # wedged — abandon, never reuse
+            raise
+
+    def handle_timeout(self, pending: List[_PipelinedCall]
+                       ) -> List[_PipelinedCall]:
+        """Decide the worker's fate after the oldest in-flight record
+        timed out.  ``pending`` holds the records still queued behind it,
+        oldest first; the (possibly replaced) calls are returned in the
+        same order.
+
+        If the worker claimed the first pending record, the timed-out
+        callee actually finished just past its deadline: the worker is
+        healthy, everything stays where it is, and the stale predecessor
+        entry in its outbox is discarded by the sequence check at
+        collect.  Otherwise the worker is wedged: it is abandoned, and
+        every record whose cancel wins its claim race is resubmitted (in
+        order) on a fresh worker.  A record the old worker claims DURING
+        the walk (it finished the wedging callee mid-cancellation) keeps
+        its original call — ``src`` still points at the old worker, so
+        its result is collected from there; such a record's callee may
+        run concurrently with the redriven ones, the same degraded-path
+        concurrency an abandoned callee already has today."""
+        if not pending:
+            self._w = None
+            return pending
+        if not pending[0].cancel():
+            return pending           # late completion — worker is healthy
+        self._w = None
+        out = [self.submit(pending[0].fn, pending[0].args)]
+        for item in pending[1:]:
+            out.append(self.submit(item.fn, item.args) if item.cancel()
+                       else item)
+        return out
+
+    def drop(self) -> None:
+        """Forget the worker WITHOUT pooling it — used when a
+        deadline-abandoned drain walks away mid-flight and the worker may
+        still be executing a record whose result nobody will read."""
+        self._w = None
+
+    def release(self) -> None:
+        if self._w is not None:
+            _return_worker(self._w)
+            self._w = None
+
+
+def _call_with_timeout(fn, args, timeout: float, lease=None):
     """Run ``fn(*args)`` with a wall-clock deadline.  A timed-out callee
-    keeps running in its worker thread (Python cannot safely kill it) but
-    its record fails with ``STATUS_TIMEOUT`` and the drain moves on."""
-    if not _TIMEOUT_POOL:
-        _TIMEOUT_POOL.append(ThreadPoolExecutor(
-            max_workers=8, thread_name_prefix="rpc-callee"))
-    fut = _TIMEOUT_POOL[0].submit(fn, *args)
+    keeps running in its (abandoned) worker thread but its record fails
+    with ``STATUS_TIMEOUT`` and the drain moves on.  ``lease`` lets a
+    drain stream many records through one checked-out worker (the batched
+    path); without it a worker is checked out and returned per call."""
+    if lease is not None:
+        return lease.call(fn, args, timeout)
+    one_shot = _WorkerLease()
     try:
-        return fut.result(timeout)
-    except _FutureTimeout:
-        raise _CalleeTimeout(
-            f"host callee exceeded the {timeout}s per-callee timeout "
-            "(still running in its worker thread; record marked TIMEOUT)"
-        ) from None
+        return one_shot.call(fn, args, timeout)
+    finally:
+        one_shot.release()
 
 
 # The deterministic fault-injection seam (repro.testing.faults plugs in
 # here).  At most one injector is active; it is consulted at DISPATCH time
 # inside the drain, so a program traced once can run with and without
-# faults.  Protocol: ``on_call(name, attempt) -> Optional[delay_seconds]``
-# (may raise to fail the record before its callee runs — host effects stay
-# clean) and ``on_reply(name, words) -> Optional[int32 words]`` (``None``
-# drops the reply; a modified array corrupts it in place).
+# faults.  Protocol: ``on_call(name, attempt, index=None) ->
+# Optional[delay_seconds]`` (may raise to fail the record before its callee
+# runs — host effects stay clean) and ``on_reply(name, words, index=None)
+# -> Optional[int32 words]`` (``None`` drops the reply; a modified array
+# corrupts it in place).  ``index`` is the record's per-callee occurrence
+# index: synchronous drains omit it (the injector counts first attempts
+# itself in replay order), while async/concurrent drains RESERVE indices
+# up front via ``reserve(names) -> List[int]`` (optional; injectors
+# without it run concurrent drains index-less, which is only racy for
+# multi-shard plans) and pass them explicitly so per-shard threads and
+# epoch-late carried redrives keep the same numbering the serial drain
+# would produce.
 _FAULT_INJECTOR: List[Any] = []
 
 
@@ -368,25 +636,37 @@ def set_fault_injector(inj=None) -> None:
 
 def _invoke_record(name: str, fn, args, ticket: int, inj,
                    retry: Optional[RetryPolicy], timeout: Optional[float],
-                   idempotent: bool):
+                   idempotent: bool, first_attempt: int = 1,
+                   occ_index: Optional[int] = None, lease=None):
     """Run one record's callee with failure isolation, fault injection,
     timeout, and (idempotent-gated) retry.  Returns ``(status, out,
-    n_retries)`` — ``out`` is None on failure."""
-    attempts = (retry.max_attempts if (retry is not None and idempotent)
-                else 1)
-    attempt = 1
+    n_retries)`` — ``out`` is None on failure, ``n_retries`` counts the
+    attempts beyond the first made HERE.  ``first_attempt`` numbers the
+    attempts for the injector and the retry budget (a carried record's
+    redrive continues where its original drain stopped rather than
+    restarting at 1); ``occ_index`` passes an explicitly reserved
+    per-callee occurrence index (async/concurrent drains); ``lease``
+    streams ``timeout=`` dispatches through one checked-out worker."""
+    attempts = (first_attempt - 1 + retry.max_attempts
+                if (retry is not None and idempotent) else first_attempt)
+    attempt = first_attempt
     while True:
         try:
-            delay = inj.on_call(name, attempt) if inj is not None else None
+            if inj is None:
+                delay = None
+            elif occ_index is None:
+                delay = inj.on_call(name, attempt)
+            else:
+                delay = inj.on_call(name, attempt, index=occ_index)
             if delay:
                 call = (lambda *a: (time.sleep(delay), fn(*a))[1])
             else:
                 call = fn
             if timeout is not None:
-                out = _call_with_timeout(call, args, timeout)
+                out = _call_with_timeout(call, args, timeout, lease=lease)
             else:
                 out = call(*args)
-            return STATUS_OK, out, attempt - 1
+            return STATUS_OK, out, attempt - first_attempt
         except Exception as exc:         # noqa: BLE001 — the isolation point
             _log_callee_error(name, ticket, attempt, exc)
             timed_out = isinstance(exc, _CalleeTimeout)
@@ -395,7 +675,7 @@ def _invoke_record(name: str, fn, args, ticket: int, inj,
                               or retry.retryable(exc)))
             if not can_retry:
                 return (STATUS_TIMEOUT if timed_out
-                        else STATUS_CALLEE_RAISED), None, attempt - 1
+                        else STATUS_CALLEE_RAISED), None, attempt - first_attempt
             if retry.backoff:
                 time.sleep(retry.backoff * (2.0 ** (attempt - 1)))
             attempt += 1
@@ -1161,7 +1441,8 @@ def _find_obj(state, ptr):
 def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
                   rwant, n, overrides, names, hosts, per_name_calls,
                   per_name_bytes, reply=None, base=0, idem=None,
-                  retry=None, timeout=None) -> Tuple[int, int, int, int]:
+                  retry=None, timeout=None, occ=None, carry=None,
+                  abandoned=None) -> Tuple[int, int, int, int]:
     """Replay one queue shard's records in enqueue order; returns ``(number
     of records overwritten before this flush could drain them, number of
     replies dropped because the reply arena was full, records whose callee
@@ -1189,7 +1470,15 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     the remaining records still replay in order.  ``retry`` (a
     :class:`RetryPolicy`) re-runs failed records for callees registered
     ``idempotent=True``.  ``base`` is the epoch's global ticket base (error
-    log attribution); ``idem`` the registry idempotency snapshot."""
+    log attribution); ``idem`` the registry idempotency snapshot.
+
+    ``occ`` (optional, aligned to the surviving records ``[lo, n)``)
+    carries per-callee occurrence indices reserved at submit time, so
+    concurrent/async drains address faults identically to the serial one.
+    ``carry`` (a :class:`_CarrySink`) lets a failing idempotent record be
+    carried into the next epoch instead of finalizing — its slot stamps
+    ``STATUS_PENDING``.  ``abandoned`` (a nullary callable) lets a
+    deadline-exceeded drain stop early: its results are already discarded."""
     cap = callee.shape[0]
     lo = max(0, n - cap)
     fbuf = pbuf.view(np.float32)
@@ -1201,7 +1490,101 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
     # the fault-free default path stays a bare call in a try/except — no
     # thread pool, no injector lookup per record (the <10% overhead gate)
     fast = inj is None and retry is None and timeout is None
+    lease = _WorkerLease() if timeout is not None else None
+    # With a timeout but no injector/retry, the drain PIPELINES: the
+    # whole epoch is submitted to the worker before the first reply is
+    # settled, so the per-record thread hop collapses to O(1) context
+    # switches per epoch (the only term that matters on a single-core
+    # host).  An injector or retry policy forces the strict ping-pong:
+    # both need record j's outcome confirmed before record j+1 may
+    # dispatch (replay-order effect and occurrence determinism).
+    pipelined = timeout is not None and inj is None and retry is None
+    rsize = reply[0].shape[0] if reply is not None else 0
+    # each entry: [call, j, k, name, args, want, occ_idx, is_idem, nbytes]
+    inflight: List[list] = []
+    ahead_words = 0    # reply words reserved by in-flight records
+
+    def _post(j, k, name, args, want, occ_idx, is_idem, status, out, rr,
+              nbytes):
+        nonlocal rhead, cerrs, nretries
+        nretries += rr
+        if status != STATUS_OK:
+            cerrs += 1
+            if (carry is not None and is_idem
+                    and status in (STATUS_CALLEE_RAISED, STATUS_TIMEOUT)
+                    and carry.accept(name, args, int(base) + j,
+                                     int(rwant[k]) if rwant is not None
+                                     else 0, 1 + rr, occ_idx)):
+                # the record will redrive at the next epoch's drain: its
+                # slot reads PENDING and the final outcome lands host-side
+                # (carry_outcomes / statuses_host)
+                status = STATUS_PENDING
+        if reply is not None:
+            rwords, roff, rlen, rstat = reply
+            if want != 0 and status == STATUS_OK:
+                nw = abs(want)
+                dt = np.int32 if want > 0 else np.float32
+                try:
+                    arr = (np.zeros((nw,), dt) if out is None
+                           else np.asarray(out).reshape(-1).astype(dt))
+                except (TypeError, ValueError):
+                    # a non-numeric return must fail only THIS record's
+                    # reply, not abort the drain and discard its siblings
+                    warnings.warn(
+                        f"RPC reply from {name!r} ({type(out).__name__}) "
+                        f"is not coercible to {dt.__name__}; its reader "
+                        "sees zeros", RuntimeWarning, stacklevel=2)
+                    arr = np.zeros((nw,), dt)
+                if arr.size < nw:
+                    arr = np.pad(arr, (0, nw - arr.size))
+                words = arr[:nw].view(np.int32)
+                if inj is not None:
+                    words = (inj.on_reply(name, words)
+                             if occ_idx is None
+                             else inj.on_reply(name, words, index=occ_idx))
+                if words is None:
+                    # injected reply drop: the callee RAN (host effects
+                    # stand) but its reply never lands — reader sees
+                    # zeros, status says DROPPED
+                    status = STATUS_DROPPED
+                else:
+                    rwords[rhead:rhead + nw] = words
+                    roff[k] = rhead
+                    rlen[k] = nw
+                    rhead += nw
+                    nbytes += 4 * nw
+            rstat[k] = status
+        per_name_calls[name] = per_name_calls.get(name, 0) + 1
+        per_name_bytes[name] = per_name_bytes.get(name, 0) + nbytes
+
+    def _settle_oldest():
+        nonlocal ahead_words
+        rec = inflight.pop(0)
+        call_obj, j, k, name, args, want, occ_idx, is_idem, nbytes = rec
+        ahead_words -= abs(want)
+        try:
+            out = lease.collect(call_obj, timeout)
+            status = STATUS_OK
+        except _CalleeTimeout as exc:
+            _log_callee_error(name, int(base) + j, 1, exc)
+            status, out = STATUS_TIMEOUT, None
+            redriven = lease.handle_timeout([r[0] for r in inflight])
+            for r, c in zip(inflight, redriven):
+                r[0] = c             # redriven on the replacement worker
+        except Exception as exc:     # noqa: BLE001 — the isolation point
+            _log_callee_error(name, int(base) + j, 1, exc)
+            status, out = STATUS_CALLEE_RAISED, None
+        _post(j, k, name, args, want, occ_idx, is_idem, status, out, 0,
+              nbytes)
+
     for j in range(lo, n):
+        if abandoned is not None and abandoned():
+            if inflight:
+                # the worker may still be executing a record whose result
+                # nobody will read — never pool it
+                lease.drop()
+                inflight.clear()
+            break
         k = j % cap
         cid = int(callee[k])
         name = names.get(cid)
@@ -1228,16 +1611,25 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
             else:
                 args.append(float(fvals[k, t]))
         want = int(rwant[k]) if reply is not None else 0
-        if want != 0 and rhead + abs(want) > reply[0].shape[0]:
+        if want != 0:
             # reply-arena overflow is checked BEFORE the callee runs, so
             # the drop is atomic like a request-arena drop: the record is
             # NOT executed (an effectful callee — fread consuming stream
             # bytes, remote malloc reserving heap — must not run when its
             # result can never reach the requester) and the reader sees
-            # zeros with ok=False
-            rdrops += 1
-            reply[3][k] = STATUS_REPLY_OVERFLOW
-            continue
+            # zeros with ok=False.  A pipelined record ahead may still
+            # land its own words, so its reservation counts until it
+            # settles; only if space is tight do we stall to learn the
+            # exact watermark (sync-identical drop decisions).
+            if rhead + ahead_words + abs(want) > rsize:
+                while inflight:
+                    _settle_oldest()
+                if rhead + abs(want) > rsize:
+                    rdrops += 1
+                    reply[3][k] = STATUS_REPLY_OVERFLOW
+                    continue
+        occ_idx = occ[j - lo] if occ is not None else None
+        is_idem = bool((idem or {}).get(name, False))
         if fast:
             try:
                 out = fn(*args)
@@ -1245,48 +1637,26 @@ def _replay_shard(callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
             except Exception as exc:     # noqa: BLE001 — isolation point
                 _log_callee_error(name, int(base) + j, 1, exc)
                 status, out = STATUS_CALLEE_RAISED, None
+            _post(j, k, name, args, want, occ_idx, is_idem, status, out,
+                  0, nbytes)
+        elif pipelined:
+            # the whole epoch is submitted before the first settle: the
+            # worker drains its inbox in one scheduling quantum and the
+            # final `while inflight` loop finds nearly every result
+            # already posted (O(1) context switches per epoch)
+            inflight.append([lease.submit(fn, args), j, k, name, args,
+                             want, occ_idx, is_idem, nbytes])
+            ahead_words += abs(want)
         else:
             status, out, rr = _invoke_record(
                 name, fn, args, int(base) + j, inj, retry, timeout,
-                bool((idem or {}).get(name, False)))
-            nretries += rr
-        if status != STATUS_OK:
-            cerrs += 1
-        if reply is not None:
-            rwords, roff, rlen, rstat = reply
-            if want != 0 and status == STATUS_OK:
-                nw = abs(want)
-                dt = np.int32 if want > 0 else np.float32
-                try:
-                    arr = (np.zeros((nw,), dt) if out is None
-                           else np.asarray(out).reshape(-1).astype(dt))
-                except (TypeError, ValueError):
-                    # a non-numeric return must fail only THIS record's
-                    # reply, not abort the drain and discard its siblings
-                    warnings.warn(
-                        f"RPC reply from {name!r} ({type(out).__name__}) "
-                        f"is not coercible to {dt.__name__}; its reader "
-                        "sees zeros", RuntimeWarning, stacklevel=2)
-                    arr = np.zeros((nw,), dt)
-                if arr.size < nw:
-                    arr = np.pad(arr, (0, nw - arr.size))
-                words = arr[:nw].view(np.int32)
-                if inj is not None:
-                    words = inj.on_reply(name, words)
-                if words is None:
-                    # injected reply drop: the callee RAN (host effects
-                    # stand) but its reply never lands — reader sees
-                    # zeros, status says DROPPED
-                    status = STATUS_DROPPED
-                else:
-                    rwords[rhead:rhead + nw] = words
-                    roff[k] = rhead
-                    rlen[k] = nw
-                    rhead += nw
-                    nbytes += 4 * nw
-            rstat[k] = status
-        per_name_calls[name] = per_name_calls.get(name, 0) + 1
-        per_name_bytes[name] = per_name_bytes.get(name, 0) + nbytes
+                is_idem, occ_index=occ_idx, lease=lease)
+            _post(j, k, name, args, want, occ_idx, is_idem, status, out,
+                  rr, nbytes)
+    while inflight:
+        _settle_oldest()
+    if lease is not None:
+        lease.release()
     return lo, rdrops, cerrs, nretries
 
 
@@ -1326,20 +1696,26 @@ def _finish_flush(drops: int, arena_drops: int, per_name_calls,
         REGISTRY.bump(name, None, per_name_bytes[name], 0, calls=calls)
 
 
-def _bind_drain(fn, handlers, retry=None, timeout=None):
-    """Close ``handlers`` and the queue's retry/timeout policy over a drain
-    callable — or return the stable module-level callable untouched when
-    there is nothing to bind (the jit cache and callback registry key on
-    callable identity, so the default path must always hand ``io_callback``
-    the same object).  The fault INJECTOR is deliberately not bound: it is
-    looked up at dispatch time, so one traced program runs with and
-    without faults."""
-    if not handlers and retry is None and timeout is None:
+def _bind_drain(fn, handlers, retry=None, timeout=None, shard_deadline=None):
+    """Close ``handlers`` and the queue's retry/timeout/deadline policy over
+    a drain callable — or return the stable module-level callable untouched
+    when there is nothing to bind (the jit cache and callback registry key
+    on callable identity, so the default path must always hand
+    ``io_callback`` the same object).  The fault INJECTOR is deliberately
+    not bound: it is looked up at dispatch time, so one traced program runs
+    with and without faults."""
+    if (not handlers and retry is None and timeout is None
+            and shard_deadline is None):
         return fn
     bound = dict(handlers) if handlers else None
 
-    def drain(*flat):
-        return fn(*flat, overrides=bound, retry=retry, timeout=timeout)
+    if shard_deadline is None:
+        def drain(*flat):
+            return fn(*flat, overrides=bound, retry=retry, timeout=timeout)
+    else:
+        def drain(*flat):
+            return fn(*flat, overrides=bound, retry=retry, timeout=timeout,
+                      shard_deadline=shard_deadline)
 
     return drain
 
@@ -1460,13 +1836,19 @@ def _drain_queue_sharded(callee, nargs, imask, pmask, ivals, fvals, plens,
 def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
                                  plens, pbuf, rwant, head, phead, adrops,
                                  base, rc, overrides=None, retry=None,
-                                 timeout=None):
+                                 timeout=None, shard_deadline=None):
     """Sharded two-phase flush: replay in ``(device, slot)`` order AND
     return per-device reply state stacked along the device axis —
     ``(rbuf (D, rc), roff (D, cap), rlen (D, cap), rstat (D, cap))``.
     Each shard's replies pack into ITS reply buffer in the deterministic
     replay order, so ``q.local(d).result(ticket, ...)`` reads device
-    ``d``'s results no matter how the drain interleaved the shards."""
+    ``d``'s results no matter how the drain interleaved the shards.
+
+    ``shard_deadline`` switches the serial per-device loop to CONCURRENT
+    per-shard workers with a shared wall-clock budget (partial-epoch
+    completion): one hung shard no longer stalls its siblings — its
+    records are stamped ``STATUS_TIMEOUT`` and everyone else's replies
+    land normally."""
     callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant = (
         np.asarray(x) for x in (callee, nargs, imask, pmask, ivals, fvals,
                                 plens, pbuf, rwant))
@@ -1474,6 +1856,11 @@ def _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals, fvals,
     adrops = np.asarray(adrops)
     base = np.asarray(base)
     rc = int(rc)
+    if shard_deadline is not None:
+        return _drain_sharded_replies_deadline(
+            callee, nargs, imask, pmask, ivals, fvals, plens, pbuf, rwant,
+            head, adrops, base, rc, shard_deadline, overrides, retry,
+            timeout)
     D, cap = callee.shape[0], callee.shape[1]
     rwords = np.zeros((D, rc), np.int32)
     roff = np.zeros((D, cap), np.int32)
@@ -1619,14 +2006,701 @@ def _drain_queue_sharded_san(callee, nargs, imask, pmask, ivals, fvals,
 def _drain_queue_sharded_replies_san(callee, nargs, imask, pmask, ivals,
                                      fvals, plens, pbuf, rwant, head, phead,
                                      adrops, base, rc, overrides=None,
-                                     retry=None, timeout=None):
+                                     retry=None, timeout=None,
+                                     shard_deadline=None):
     _san_precheck(callee, pmask, ivals, plens, pbuf, head, rwant=rwant,
                   sharded=True)
     return _drain_queue_sharded_replies(callee, nargs, imask, pmask, ivals,
                                         fvals, plens, pbuf, rwant, head,
                                         phead, adrops, base, rc,
                                         overrides=overrides, retry=retry,
-                                        timeout=timeout)
+                                        timeout=timeout,
+                                        shard_deadline=shard_deadline)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent sharded drain (per-shard deadlines) and the v6 async transport
+# ---------------------------------------------------------------------------
+
+
+def _reserve_occurrences(inj, names_in_order):
+    """Reserve per-callee occurrence indices for a concurrent/async drain,
+    in its canonical ``(device, slot)`` replay order.  Returns ``None``
+    when no injector is installed or it predates ``reserve`` (legacy
+    injectors then count occurrences themselves, which is only racy for
+    plans that straddle concurrently-draining shards)."""
+    if inj is None or not names_in_order:
+        return None
+    reserve = getattr(inj, "reserve", None)
+    if reserve is None:
+        return None
+    return list(reserve(names_in_order))
+
+
+def _surviving_names(callee_row, names, n: int) -> List[Optional[str]]:
+    """Callee names of one shard's surviving records, in replay order."""
+    cap = callee_row.shape[0]
+    lo = max(0, n - cap)
+    return [names.get(int(callee_row[j % cap])) for j in range(lo, n)]
+
+
+def _drain_sharded_replies_deadline(callee, nargs, imask, pmask, ivals,
+                                    fvals, plens, pbuf, rwant, head, adrops,
+                                    base, rc, shard_deadline, overrides,
+                                    retry, timeout):
+    """The ``shard_deadline`` branch of the sharded two-phase flush: one
+    worker thread per shard, all started together, each given the SHARED
+    wall-clock budget measured from drain start.  A shard that finishes in
+    time merges its (privately written) reply arrays and counters; a shard
+    that does not is ABANDONED — its row reads ``STATUS_TIMEOUT``, its
+    worker notices via the ``abandoned`` flag and stops early, and its
+    partial host effects stand (the same contract as a per-record
+    timeout).  Fault determinism survives the concurrency because
+    occurrence indices are reserved up front in the serial drain's
+    ``(device, slot)`` order."""
+    D, cap = callee.shape[0], callee.shape[1]
+    rwords = np.zeros((D, rc), np.int32)
+    roff = np.zeros((D, cap), np.int32)
+    rlen = np.zeros((D, cap), np.int32)
+    rstat = np.zeros((D, cap), np.int32)
+    with REGISTRY.lock:
+        names = dict(REGISTRY.batch_names)
+        hosts = dict(REGISTRY.hosts)
+        idem = dict(REGISTRY.idempotent)
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    per_dev_names = [_surviving_names(callee[d], names, int(head[d]))
+                     for d in range(D)]
+    flat = _reserve_occurrences(inj, [nm for row in per_dev_names
+                                      for nm in row])
+    occs: List[Optional[List[int]]] = [None] * D
+    if flat is not None:
+        pos = 0
+        for d in range(D):
+            occs[d] = flat[pos:pos + len(per_dev_names[d])]
+            pos += len(per_dev_names[d])
+    shard_out = [(np.zeros((rc,), np.int32), np.zeros((cap,), np.int32),
+                  np.zeros((cap,), np.int32), np.zeros((cap,), np.int32))
+                 for _ in range(D)]
+    results: List[Any] = [None] * D
+    done = [threading.Event() for _ in range(D)]
+    timed_out = [False] * D
+
+    def run(d: int) -> None:
+        pnc: Dict[str, int] = {}
+        pnb: Dict[str, int] = {}
+        try:
+            counters = _replay_shard(
+                callee[d], nargs[d], imask[d], pmask[d], ivals[d],
+                fvals[d], plens[d], pbuf[d], rwant[d], int(head[d]),
+                overrides, names, hosts, pnc, pnb, reply=shard_out[d],
+                base=int(base[d]), idem=idem, retry=retry, timeout=timeout,
+                occ=occs[d], abandoned=(lambda: timed_out[d]))
+            results[d] = (counters, pnc, pnb)
+        except BaseException as exc:  # noqa: BLE001 — relayed to coordinator
+            results[d] = exc
+        finally:
+            done[d].set()
+
+    threads = [threading.Thread(target=run, args=(d,), daemon=True,
+                                name=f"rpc-shard-drain-{d}")
+               for d in range(D)]
+    for t in threads:
+        t.start()
+    t0 = time.monotonic()
+    drops = rdrops = cerrs = nretries = stalled = 0
+    per_name_calls: Dict[str, int] = {}
+    per_name_bytes: Dict[str, int] = {}
+    for d in range(D):
+        remaining = shard_deadline - (time.monotonic() - t0)
+        if done[d].wait(max(0.0, remaining)):
+            res = results[d]
+            if isinstance(res, BaseException):
+                raise res
+            (sh_drops, sh_rdrops, sh_cerrs, sh_rr), pnc, pnb = res
+            rwords[d], roff[d], rlen[d], rstat[d] = shard_out[d]
+            drops += sh_drops
+            rdrops += sh_rdrops
+            cerrs += sh_cerrs
+            nretries += sh_rr
+            for nm, c in pnc.items():
+                per_name_calls[nm] = per_name_calls.get(nm, 0) + c
+                per_name_bytes[nm] = per_name_bytes.get(nm, 0) + pnb[nm]
+        else:
+            # partial-epoch completion: ONLY this shard's records fail;
+            # its private arrays are never merged (the late worker may
+            # still be writing them) and the whole row reads TIMEOUT
+            timed_out[d] = True
+            stalled += 1
+            rstat[d, :] = STATUS_TIMEOUT
+            cerrs += min(int(head[d]), cap)
+    if stalled:
+        warnings.warn(
+            f"RpcQueue sharded flush abandoned {stalled} shard(s) past the "
+            f"{shard_deadline}s per-shard drain deadline: their records "
+            "read STATUS_TIMEOUT while sibling shards completed "
+            "(partial-epoch completion).", RuntimeWarning, stacklevel=2)
+    _finish_flush(drops, int(adrops.sum()), per_name_calls, per_name_bytes,
+                  reply_drops=rdrops, callee_errors=cerrs, retries=nretries)
+    return rwords, roff, rlen, rstat
+
+
+#: Once-per-process latch for the CPU async-dispatch hazard warning.
+_ASYNC_DISPATCH_WARNED: List[bool] = []
+
+
+def _check_cpu_async_dispatch() -> None:
+    """Detect the CPU async-dispatch configuration under which an ordered
+    ``io_callback`` drain can deadlock (see the module docstring for the
+    three-thread cycle) and warn ONCE with the pin to apply — at
+    ``RpcQueue.create`` time, so the failure mode is named where the queue
+    is born instead of depending on every harness remembering the pin."""
+    if _ASYNC_DISPATCH_WARNED:
+        return
+    try:
+        if jax.default_backend() != "cpu":
+            return
+        # jax.config exposes the flag as an attribute on some versions and
+        # only through the .values mapping on others — probe both.
+        try:
+            enabled = bool(jax.config.jax_cpu_enable_async_dispatch)
+        except AttributeError:
+            enabled = bool(jax.config.values.get(
+                "jax_cpu_enable_async_dispatch", False))
+    except Exception:  # noqa: BLE001 — config probing must never break create
+        return
+    if enabled:
+        _ASYNC_DISPATCH_WARNED.append(True)
+        warnings.warn(
+            "jax_cpu_enable_async_dispatch is ENABLED on the CPU backend: "
+            "an ordered io_callback drain can DEADLOCK — the callback "
+            "thread blocks materializing a large operand whose definition "
+            "event is queued behind the computation the callback belongs "
+            "to, while the main thread sits in block_until_ready.  Pin "
+            'jax.config.update("jax_cpu_enable_async_dispatch", False) '
+            "before creating RpcQueues (tests/conftest.py and "
+            "benchmarks/common.py carry this pin).", RuntimeWarning,
+            stacklevel=3)
+
+
+class _CarryRec:
+    """One record carried across epochs under the cross-epoch retry budget:
+    its materialized args (copied out of the epoch's payload snapshot), its
+    global ticket, reply declaration, how many attempts its drains have
+    already spent, its reserved occurrence index, and how many carry
+    rounds remain."""
+
+    __slots__ = ("name", "args", "ticket", "want", "attempts_done",
+                 "occ_index", "tries_left")
+
+    def __init__(self, name, args, ticket, want, attempts_done, occ_index,
+                 tries_left):
+        self.name = name
+        self.args = [np.array(a) if isinstance(a, np.ndarray) else a
+                     for a in args]
+        self.ticket = int(ticket)
+        self.want = int(want)
+        self.attempts_done = int(attempts_done)
+        self.occ_index = occ_index
+        self.tries_left = int(tries_left)
+
+
+class _CarrySink:
+    """Collects the records of ONE drain that failed and are eligible to
+    carry into the next epoch (idempotent callees, ``carry_budget > 0``)."""
+
+    def __init__(self, budget: int):
+        self.budget = int(budget)
+        self.records: List[_CarryRec] = []
+
+    def accept(self, name, args, ticket, want, attempts_done, occ_index
+               ) -> bool:
+        if self.budget <= 0:
+            return False
+        self.records.append(_CarryRec(name, args, ticket, want,
+                                      attempts_done, occ_index, self.budget))
+        return True
+
+
+#: Bound on per-(slot, device) finalized carry outcomes kept for host reads.
+_OUTCOME_CAP = 4096
+
+
+class _EpochJob:
+    """One submitted epoch drain for one (slot, device): its reply
+    quadruple once drained, the post-drain carry depth, and a done event.
+    ``abandoned`` is set by a deadline-exceeded collect so the late drain
+    stops early and skips its carry adds."""
+
+    __slots__ = ("base", "out", "cdepth", "done", "abandoned")
+
+    def __init__(self, base: int):
+        self.base = int(base)
+        self.out = None
+        self.cdepth = 0
+        self.done = threading.Event()
+        self.abandoned = False
+
+
+class _QueueSlot:
+    """Host-side state of one async queue lineage (allocated at
+    ``create``): per-device single-thread executors (the FIFO per-shard
+    epoch sequence that makes independent drains deterministically
+    replayable), the in-flight epoch jobs, the cross-epoch carry lists,
+    finalized carry outcomes, and the cache of bound drain callables (so a
+    traced flush hands ``io_callback`` a stable object)."""
+
+    def __init__(self, sid: int):
+        self.id = sid
+        self.lock = threading.Lock()
+        self.execs: Dict[int, ThreadPoolExecutor] = {}
+        self.pending: Dict[int, deque] = {}
+        self.carry: Dict[int, List[_CarryRec]] = {}
+        self.outcomes: Dict[int, Dict[int, Tuple[int, Optional[np.ndarray]]]] = {}
+        self.drain_fns: Dict[Any, Callable] = {}
+
+    # -- submit / collect ---------------------------------------------------
+
+    def submit(self, dev: int, job: _EpochJob, runner: Callable
+               ) -> Optional[_EpochJob]:
+        """Queue ``runner`` on this (slot, dev)'s executor; returns the
+        epoch job it should pipeline BEHIND (the previous uncollected
+        one, if any)."""
+        with self.lock:
+            ex = self.execs.get(dev)
+            if ex is None:
+                ex = ThreadPoolExecutor(
+                    max_workers=1,
+                    thread_name_prefix=f"rpc-async-{self.id}-{dev}")
+                self.execs[dev] = ex
+            dq = self.pending.setdefault(dev, deque())
+            prev = dq[-1] if dq else None
+            dq.append(job)
+        ex.submit(runner)
+        return prev
+
+    def collect(self, dev: int, prev: Optional[_EpochJob],
+                deadline: Optional[float], cap: int, rc: int
+                ) -> Tuple[Tuple[np.ndarray, ...], int]:
+        """Wait for the PREVIOUS epoch's drain and return its reply
+        quadruple + carry depth.  First flush (no previous epoch) returns
+        zeros.  A ``deadline`` overrun abandons the job: fresh
+        TIMEOUT-stamped arrays are returned (never the job's possibly
+        still-being-written ones) and the late drain self-truncates."""
+        zeros = (np.zeros((rc,), np.int32), np.zeros((cap,), np.int32),
+                 np.zeros((cap,), np.int32), np.zeros((cap,), np.int32))
+        if prev is None:
+            with self.lock:
+                return zeros, len(self.carry.get(dev, ()))
+        ok = prev.done.wait(deadline) if deadline is not None else (
+            prev.done.wait() or True)
+        with self.lock:
+            dq = self.pending.get(dev)
+            if dq and dq[0] is prev:
+                dq.popleft()
+            cd = (prev.cdepth if ok else len(self.carry.get(dev, ())))
+        if not ok:
+            prev.abandoned = True
+            stamped = (zeros[0], zeros[1], zeros[2],
+                       np.full((cap,), STATUS_TIMEOUT, np.int32))
+            return stamped, cd
+        out = prev.out if prev.out is not None else zeros
+        return out, cd
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted epoch drain (all devices) has
+        completed; returns False on timeout.  Does NOT collect replies or
+        advance carry rounds — those ride the next flush."""
+        t0 = time.monotonic()
+        with self.lock:
+            jobs = [j for dq in self.pending.values() for j in dq]
+        for j in jobs:
+            left = (None if timeout is None
+                    else max(0.0, timeout - (time.monotonic() - t0)))
+            if not j.done.wait(left):
+                return False
+        return True
+
+    # -- carry bookkeeping --------------------------------------------------
+
+    def take_carry(self, dev: int) -> List[_CarryRec]:
+        with self.lock:
+            return self.carry.pop(dev, [])
+
+    def put_carry(self, dev: int, recs: List[_CarryRec]) -> None:
+        if not recs:
+            return
+        with self.lock:
+            self.carry.setdefault(dev, []).extend(recs)
+
+    def finalize(self, dev: int, ticket: int, status: int,
+                 words: Optional[np.ndarray]) -> None:
+        with self.lock:
+            out = self.outcomes.setdefault(dev, {})
+            out[ticket] = (int(status), words)
+            while len(out) > _OUTCOME_CAP:
+                out.pop(next(iter(out)))
+
+    def carried_tickets(self, dev: int) -> List[int]:
+        with self.lock:
+            return [r.ticket for r in self.carry.get(dev, ())]
+
+    def outcome(self, dev: int, ticket: int
+                ) -> Optional[Tuple[int, Optional[np.ndarray]]]:
+        with self.lock:
+            return self.outcomes.get(dev, {}).get(ticket)
+
+
+_SLOTS: Dict[int, _QueueSlot] = {}
+_SLOT_LOCK = threading.Lock()
+_NEXT_SLOT = [0]
+
+
+def _new_slot() -> int:
+    with _SLOT_LOCK:
+        sid = _NEXT_SLOT[0]
+        _NEXT_SLOT[0] += 1
+        _SLOTS[sid] = _QueueSlot(sid)
+        return sid
+
+
+def _slot(sid: int) -> _QueueSlot:
+    with _SLOT_LOCK:
+        return _SLOTS[sid]
+
+
+def _coerce_reply_words(name: str, out, want: int) -> Optional[np.ndarray]:
+    """Coerce one callee return to ``|want|`` int32 reply words (the same
+    pad/truncate/bitcast contract as the in-epoch reply path); None when
+    ``want == 0``."""
+    if want == 0:
+        return None
+    nw = abs(want)
+    dt = np.int32 if want > 0 else np.float32
+    try:
+        arr = (np.zeros((nw,), dt) if out is None
+               else np.asarray(out).reshape(-1).astype(dt))
+    except (TypeError, ValueError):
+        warnings.warn(
+            f"RPC reply from {name!r} ({type(out).__name__}) is not "
+            f"coercible to {dt.__name__}; its reader sees zeros",
+            RuntimeWarning, stacklevel=2)
+        arr = np.zeros((nw,), dt)
+    if arr.size < nw:
+        arr = np.pad(arr, (0, nw - arr.size))
+    return np.array(arr[:nw].view(np.int32))
+
+
+def _replay_carry(slot: _QueueSlot, dev: int, hosts, idem, overrides,
+                  timeout) -> Tuple[int, int]:
+    """Redrive the records carried into this epoch's drain, OLDEST FIRST,
+    one attempt per carry round each.  A record that succeeds (or finally
+    exhausts its budget / loses its reply to an injected drop) FINALIZES
+    into the slot's outcome table; one that fails with budget left goes
+    back on the carry list for the next epoch.  Returns ``(callee errors,
+    records finalized)``."""
+    recs = slot.take_carry(dev)
+    if not recs:
+        return 0, 0
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    cerrs = 0
+    finalized = 0
+    survivors: List[_CarryRec] = []
+    for rec in recs:
+        fn = (overrides or {}).get(rec.name) or hosts.get(rec.name)
+        if fn is None:
+            slot.finalize(dev, rec.ticket, STATUS_CALLEE_RAISED, None)
+            finalized += 1
+            continue
+        status, out, _ = _invoke_record(
+            rec.name, fn, rec.args, rec.ticket, inj, None, timeout,
+            bool((idem or {}).get(rec.name, False)),
+            first_attempt=rec.attempts_done + 1, occ_index=rec.occ_index)
+        if status == STATUS_OK:
+            words = _coerce_reply_words(rec.name, out, rec.want)
+            if inj is not None and words is not None:
+                words = (inj.on_reply(rec.name, words)
+                         if rec.occ_index is None
+                         else inj.on_reply(rec.name, words,
+                                           index=rec.occ_index))
+                if words is None:
+                    status = STATUS_DROPPED
+            slot.finalize(dev, rec.ticket, status, words)
+            finalized += 1
+            continue
+        cerrs += 1
+        rec.attempts_done += 1
+        rec.tries_left -= 1
+        if rec.tries_left <= 0:
+            slot.finalize(dev, rec.ticket, status, None)
+            finalized += 1
+        else:
+            survivors.append(rec)
+    slot.put_carry(dev, survivors)
+    return cerrs, finalized
+
+
+def _run_async_epoch(slot: _QueueSlot, dev: int, job: _EpochJob, arrs,
+                     rwant, n: int, adrops: int, base: int, rc: int,
+                     cap: int, carry_budget: int, occ, overrides, retry,
+                     timeout) -> None:
+    """The background body of one async epoch drain for one (slot, dev):
+    carry redrives first (oldest records), then this epoch's records, into
+    a reply quadruple published on the job.  Runs on the (slot, dev)
+    executor — strictly AFTER the previous epoch's drain, concurrently
+    with the device compute that follows the flush."""
+    callee, nargs, imask, pmask, ivals, fvals, plens, pbuf = arrs
+    pnc: Dict[str, int] = {}
+    pnb: Dict[str, int] = {}
+    try:
+        with REGISTRY.lock:
+            names = dict(REGISTRY.batch_names)
+            hosts = dict(REGISTRY.hosts)
+            idem = dict(REGISTRY.idempotent)
+        ccerrs, _ = _replay_carry(slot, dev, hosts, idem, overrides, timeout)
+        reply = None
+        if rc:
+            reply = (np.zeros((rc,), np.int32), np.zeros((cap,), np.int32),
+                     np.zeros((cap,), np.int32), np.zeros((cap,), np.int32))
+        sink = (_CarrySink(carry_budget)
+                if (carry_budget and rc and not job.abandoned) else None)
+        drops, rdrops, cerrs, nretries = _replay_shard(
+            callee, nargs, imask, pmask, ivals, fvals, plens, pbuf,
+            rwant, n, overrides, names, hosts, pnc, pnb, reply=reply,
+            base=base, idem=idem, retry=retry, timeout=timeout, occ=occ,
+            carry=sink, abandoned=(lambda: job.abandoned))
+        if sink is not None and not job.abandoned:
+            slot.put_carry(dev, sink.records)
+        job.out = reply
+        _finish_flush(drops, adrops, pnc, pnb, reply_drops=rdrops,
+                      callee_errors=cerrs + ccerrs, retries=nretries)
+    except BaseException as exc:  # noqa: BLE001 — background isolation
+        _log_callee_error("<async-drain>", base, 1, exc)
+        warnings.warn(
+            f"async RpcQueue drain failed wholesale: {exc!r} (traceback "
+            "in repro.core.rpc.error_log(); the epoch's records read "
+            "status 0/zeros)", RuntimeWarning, stacklevel=2)
+    finally:
+        with slot.lock:
+            job.cdepth = len(slot.carry.get(dev, ()))
+        job.done.set()
+
+
+def _async_flush_shard(slot: _QueueSlot, dev: int, arrs, rwant, n: int,
+                       adrops: int, base: int, rc: int, sanitize: bool,
+                       carry_budget: int, deadline: Optional[float],
+                       overrides, retry, timeout, occ):
+    """Submit one shard's epoch and collect its previous one (the
+    double-buffer hand-off).  ``arrs`` must already be this epoch's COPIES
+    — jax may reuse the callback operands' buffers after it returns."""
+    cap = arrs[0].shape[0]
+    if sanitize:
+        _san_precheck(arrs[0], arrs[3], arrs[4], arrs[6], arrs[7], n,
+                      rwant=rwant)
+    job = _EpochJob(base)
+    runner = (lambda: _run_async_epoch(
+        slot, dev, job, arrs, rwant, n, adrops, base, rc, cap,
+        carry_budget, occ, overrides, retry, timeout))
+    prev = slot.submit(dev, job, runner)
+    return slot.collect(dev, prev, deadline, cap, rc)
+
+
+def _drain_queue_async_replies(slot_id: int, sanitize: bool,
+                               carry_budget: int, deadline: Optional[float],
+                               callee, nargs, imask, pmask, ivals, fvals,
+                               plens, pbuf, rwant, head, phead, adrops,
+                               base, rc, overrides=None, retry=None,
+                               timeout=None):
+    """Host side of the ASYNC two-phase flush: copy this epoch's operands,
+    submit its drain to the slot's executor, and return the PREVIOUS
+    epoch's reply quadruple plus the carried-record depth.  The device
+    installs the returned window under ``(rbase, rcount) = (pbase,
+    pcount)`` — replies land one epoch late."""
+    arrs = tuple(np.array(x) for x in (callee, nargs, imask, pmask, ivals,
+                                       fvals, plens, pbuf))
+    rwant = np.array(rwant)
+    n = int(head)
+    rc = int(rc)
+    slot = _slot(slot_id)
+    with REGISTRY.lock:
+        names = dict(REGISTRY.batch_names)
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    occ = _reserve_occurrences(inj, _surviving_names(arrs[0], names, n))
+    (rwords, roff, rlen, rstat), cdepth = _async_flush_shard(
+        slot, 0, arrs, rwant, n, int(adrops), int(base), rc, sanitize,
+        carry_budget, deadline, overrides, retry, timeout, occ)
+    return rwords, roff, rlen, rstat, np.int32(cdepth)
+
+
+def _drain_queue_async(slot_id: int, sanitize: bool, carry_budget: int,
+                       deadline: Optional[float], callee, nargs, imask,
+                       pmask, ivals, fvals, plens, pbuf, head, phead,
+                       adrops, base, overrides=None, retry=None,
+                       timeout=None):
+    """Reply-less async flush: submit this epoch, wait out the previous
+    one (ordering only — there is no reply state to install), return the
+    carried depth (always 0: carry requires a reply lane)."""
+    arrs = tuple(np.array(x) for x in (callee, nargs, imask, pmask, ivals,
+                                       fvals, plens, pbuf))
+    n = int(head)
+    slot = _slot(slot_id)
+    with REGISTRY.lock:
+        names = dict(REGISTRY.batch_names)
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    occ = _reserve_occurrences(inj, _surviving_names(arrs[0], names, n))
+    _, cdepth = _async_flush_shard(
+        slot, 0, arrs, None, n, int(adrops), int(base), 0, sanitize,
+        0, deadline, overrides, retry, timeout, occ)
+    return np.int32(cdepth)
+
+
+def _drain_queue_sharded_async_replies(slot_id: int, sanitize: bool,
+                                       carry_budget: int,
+                                       deadline: Optional[float], callee,
+                                       nargs, imask, pmask, ivals, fvals,
+                                       plens, pbuf, rwant, head, phead,
+                                       adrops, base, rc, overrides=None,
+                                       retry=None, timeout=None):
+    """Sharded async flush: one epoch job per shard on per-(slot, device)
+    executors — independent drains, NO gather barrier.  Each shard's
+    previous epoch is collected under its own ``deadline`` slice
+    (partial-epoch completion: a stalled shard's rows read
+    ``STATUS_TIMEOUT`` while its siblings' replies land).  Determinism:
+    per-shard epoch sequences are FIFO on their executor, and occurrence
+    indices are reserved here in canonical ``(device, slot)`` order before
+    any job starts."""
+    arrs = tuple(np.array(x) for x in (callee, nargs, imask, pmask, ivals,
+                                       fvals, plens, pbuf))
+    rwant = np.array(rwant)
+    head = np.asarray(head)
+    adrops = np.asarray(adrops)
+    base = np.asarray(base)
+    rc = int(rc)
+    D, cap = arrs[0].shape[0], arrs[0].shape[1]
+    slot = _slot(slot_id)
+    with REGISTRY.lock:
+        names = dict(REGISTRY.batch_names)
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    per_dev_names = [_surviving_names(arrs[0][d], names, int(head[d]))
+                     for d in range(D)]
+    flat = _reserve_occurrences(inj, [nm for row in per_dev_names
+                                      for nm in row])
+    occs: List[Optional[List[int]]] = [None] * D
+    if flat is not None:
+        pos = 0
+        for d in range(D):
+            occs[d] = flat[pos:pos + len(per_dev_names[d])]
+            pos += len(per_dev_names[d])
+    rwords = np.zeros((D, rc), np.int32)
+    roff = np.zeros((D, cap), np.int32)
+    rlen = np.zeros((D, cap), np.int32)
+    rstat = np.zeros((D, cap), np.int32)
+    cdepths = np.zeros((D,), np.int32)
+    pending = []
+    for d in range(D):
+        sh_arrs = tuple(a[d] for a in arrs)
+        if sanitize:
+            _san_precheck(sh_arrs[0], sh_arrs[3], sh_arrs[4], sh_arrs[6],
+                          sh_arrs[7], int(head[d]), rwant=rwant[d])
+        job = _EpochJob(int(base[d]))
+        runner = (lambda j=job, a=sh_arrs, rw=rwant[d], nn=int(head[d]),
+                  ad=int(adrops[d]), bb=int(base[d]), oc=occs[d], dd=d:
+                  _run_async_epoch(slot, dd, j, a, rw, nn, ad, bb, rc, cap,
+                                   carry_budget, oc, overrides, retry,
+                                   timeout))
+        prev = slot.submit(d, job, runner)
+        pending.append(prev)
+    t0 = time.monotonic()
+    for d in range(D):
+        left = (None if deadline is None
+                else max(0.0, deadline - (time.monotonic() - t0)))
+        (rwords[d], roff[d], rlen[d], rstat[d]), cd = slot.collect(
+            d, pending[d], left, cap, rc)
+        cdepths[d] = cd
+    return rwords, roff, rlen, rstat, cdepths
+
+
+def _bind_async_drain(q, handlers) -> Callable:
+    """Return the drain callable for an async queue's flush, bound over
+    its slot/sanitize/carry/deadline aux (and this flush's ``handlers``).
+    Handler-less bindings are CACHED on the slot so a traced flush hands
+    ``io_callback`` a stable object (the jit cache and callback registry
+    key on callable identity)."""
+    sharded = q.callee.ndim == 2
+    if q.reply_capacity:
+        fn = (_drain_queue_sharded_async_replies if sharded
+              else _drain_queue_async_replies)
+    else:
+        fn = _drain_queue_sharded_async if sharded else _drain_queue_async
+    slot = _slot(q.qslot)
+    key = (fn.__name__, bool(q.sanitize), int(q.carry_budget),
+           q.shard_deadline, q.retry, q.timeout)
+    bound = dict(handlers) if handlers else None
+    if bound is None:
+        with slot.lock:
+            cached = slot.drain_fns.get(key)
+        if cached is not None:
+            return cached
+    sid, san, cb, dl = q.qslot, bool(q.sanitize), int(q.carry_budget), \
+        q.shard_deadline
+    retry, timeout = q.retry, q.timeout
+
+    def drain(*flat):
+        return fn(sid, san, cb, dl, *flat, overrides=bound, retry=retry,
+                  timeout=timeout)
+
+    if bound is None:
+        with slot.lock:
+            slot.drain_fns[key] = drain
+    return drain
+
+
+def _drain_queue_sharded_async(slot_id: int, sanitize: bool,
+                               carry_budget: int, deadline: Optional[float],
+                               callee, nargs, imask, pmask, ivals, fvals,
+                               plens, pbuf, head, phead, adrops, base,
+                               overrides=None, retry=None, timeout=None):
+    """Reply-less sharded async flush (ordering + carry depth only)."""
+    arrs = tuple(np.array(x) for x in (callee, nargs, imask, pmask, ivals,
+                                       fvals, plens, pbuf))
+    head = np.asarray(head)
+    adrops = np.asarray(adrops)
+    base = np.asarray(base)
+    D, cap = arrs[0].shape[0], arrs[0].shape[1]
+    slot = _slot(slot_id)
+    with REGISTRY.lock:
+        names = dict(REGISTRY.batch_names)
+    inj = _FAULT_INJECTOR[0] if _FAULT_INJECTOR else None
+    per_dev_names = [_surviving_names(arrs[0][d], names, int(head[d]))
+                     for d in range(D)]
+    flat = _reserve_occurrences(inj, [nm for row in per_dev_names
+                                      for nm in row])
+    occs: List[Optional[List[int]]] = [None] * D
+    if flat is not None:
+        pos = 0
+        for d in range(D):
+            occs[d] = flat[pos:pos + len(per_dev_names[d])]
+            pos += len(per_dev_names[d])
+    cdepths = np.zeros((D,), np.int32)
+    pending = []
+    for d in range(D):
+        sh_arrs = tuple(a[d] for a in arrs)
+        if sanitize:
+            _san_precheck(sh_arrs[0], sh_arrs[3], sh_arrs[4], sh_arrs[6],
+                          sh_arrs[7], int(head[d]))
+        job = _EpochJob(int(base[d]))
+        runner = (lambda j=job, a=sh_arrs, nn=int(head[d]),
+                  ad=int(adrops[d]), bb=int(base[d]), oc=occs[d], dd=d:
+                  _run_async_epoch(slot, dd, j, a, None, nn, ad, bb, 0, cap,
+                                   0, oc, overrides, retry, timeout))
+        prev = slot.submit(d, job, runner)
+        pending.append(prev)
+    t0 = time.monotonic()
+    for d in range(D):
+        left = (None if deadline is None
+                else max(0.0, deadline - (time.monotonic() - t0)))
+        _, cd = slot.collect(d, pending[d], left, cap, 0)
+        cdepths[d] = cd
+    return cdepths
 
 
 def _payload_words(a: jax.Array) -> Tuple[jax.Array, bool]:
@@ -1679,6 +2753,15 @@ class RpcQueue:
     serviced epoch's ``(rbase, rcount)`` window — a ticket outside the
     window (stale, or from a dropped enqueue) reads zeros with
     ``ok=False``, it can never alias a later epoch's bytes.
+
+    **Async epochs (v6).**  ``create(..., mode="async")`` double-buffers
+    the epochs: ``flush`` SUBMITS the closing epoch's drain to the
+    queue's host slot and installs the PREVIOUS epoch's replies, so the
+    reply window trails one epoch behind and ``pbase``/``pcount`` track
+    the submitted-but-uncollected epoch (its tickets read
+    ``STATUS_PENDING``).  ``cdepth`` mirrors the slot's carried-record
+    depth (``carry_budget``) back onto the device for ``pressure()``.
+    Sync queues keep all three at zero — nothing else changes shape.
     """
     callee: jax.Array    # (N,) int32 — batch callee id per record
     nargs: jax.Array     # (N,) int32 — args used in this record
@@ -1707,24 +2790,41 @@ class RpcQueue:
     fonce: jax.Array     # () int32 — 1 once this queue's lineage has flushed
     #                       (a device leaf, NOT static aux: a mid-loop flush
     #                       must not change the while_loop carry's treedef)
+    pbase: jax.Array     # () int32 — async: base of the SUBMITTED epoch
+    #                       whose drain has not been collected yet (its
+    #                       tickets read STATUS_PENDING); sync: stays 0
+    pcount: jax.Array    # () int32 — async: records in that pending epoch
+    cdepth: jax.Array    # () int32 — async: carried-record depth reported
+    #                       by the last collected drain (pressure() input)
     sanitize: bool = False  # static: canary-wrapped payload reservations +
     #                         sanitized drains (see sanitize_stats())
     retry: Optional[RetryPolicy] = None  # static: drain-side retry of
     #                                      idempotent callees' failures
     timeout: Optional[float] = None      # static: per-callee wall-clock
     #                                      deadline (seconds) at drain
+    mode: str = "sync"   # static: "sync" (drain on the flush clock) or
+    #                      "async" (double-buffered epochs, v6)
+    qslot: Optional[int] = None  # static: host slot id of an async lineage
+    carry_budget: int = 0        # static: extra cross-epoch redrive rounds
+    #                              for failed idempotent records (async)
+    shard_deadline: Optional[float] = None  # static: per-shard drain
+    #                              deadline (seconds) — concurrent sharded
+    #                              drains / async collect budget
 
     def tree_flatten(self):
         return ((self.callee, self.nargs, self.imask, self.pmask, self.ivals,
                  self.fvals, self.plens, self.pbuf, self.head, self.phead,
                  self.adrops, self.rwant, self.rbuf, self.roff, self.rlen,
-                 self.rstat, self.base, self.rbase, self.rcount, self.fonce),
-                (bool(self.sanitize), self.retry, self.timeout))
+                 self.rstat, self.base, self.rbase, self.rcount, self.fonce,
+                 self.pbase, self.pcount, self.cdepth),
+                (bool(self.sanitize), self.retry, self.timeout, self.mode,
+                 self.qslot, self.carry_budget, self.shard_deadline))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves, sanitize=bool(aux[0]), retry=aux[1],
-                   timeout=aux[2])
+                   timeout=aux[2], mode=aux[3], qslot=aux[4],
+                   carry_budget=aux[5], shard_deadline=aux[6])
 
     @property
     def capacity(self) -> int:
@@ -1753,7 +2853,10 @@ class RpcQueue:
                reply_capacity: int = 0,
                sanitize: bool = False,
                retry: Optional[RetryPolicy] = None,
-               timeout: Optional[float] = None) -> "RpcQueue":
+               timeout: Optional[float] = None,
+               mode: str = "sync",
+               carry_budget: int = 0,
+               shard_deadline: Optional[float] = None) -> "RpcQueue":
         """``payload_capacity`` is the arena size in 4-byte words shared by
         every payload between two flushes (0 = scalar-only queue: array
         args are rejected at trace time).  ``reply_capacity`` is the REPLY
@@ -1775,11 +2878,39 @@ class RpcQueue:
         ``idempotent=True`` callee failed, with host-side exponential
         backoff; ``timeout`` (seconds) puts a wall-clock deadline on every
         callee this queue drains (overrun -> ``STATUS_TIMEOUT``, drain
-        continues).  Both are static queue metadata (pytree aux)."""
+        continues).  Both are static queue metadata (pytree aux).
+
+        ``mode="async"`` switches to the v6 double-buffered epoch
+        transport: flushes submit + collect-previous instead of draining
+        inline (replies land one epoch late; see the class docstring).
+        ``carry_budget`` (async, reply-carrying queues) grants failed
+        idempotent records that many extra cross-epoch redrive rounds;
+        ``shard_deadline`` (seconds) bounds each shard's drain — a sync
+        sharded flush then drains shards CONCURRENTLY with partial-epoch
+        completion, an async flush bounds the previous epoch's collect."""
         if not 0 < width <= 31:
             raise ValueError(
                 f"width must be in [1, 31] to fit the int32 interleave "
                 f"mask; got {width}")
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async'; got {mode!r}")
+        if carry_budget:
+            if mode != "async":
+                raise ValueError(
+                    "carry_budget requires mode='async' (the carry list "
+                    "lives on the async slot; a sync drain has nowhere to "
+                    "redrive from)")
+            if not reply_capacity:
+                raise ValueError(
+                    "carry_budget requires reply_capacity > 0: a carried "
+                    "record's PENDING stamp and final outcome need the "
+                    "status lane")
+        if shard_deadline is not None and not reply_capacity:
+            raise ValueError(
+                "shard_deadline requires reply_capacity > 0: a stalled "
+                "shard's records are stamped STATUS_TIMEOUT in the status "
+                "lane")
+        _check_cpu_async_dispatch()
         rslots = capacity if reply_capacity else 0
         q = RpcQueue(
             jnp.zeros((capacity,), jnp.int32),
@@ -1802,12 +2933,17 @@ class RpcQueue:
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
             jnp.zeros((), jnp.int32),
-            sanitize=bool(sanitize), retry=retry, timeout=timeout)
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((), jnp.int32),
+            sanitize=bool(sanitize), retry=retry, timeout=timeout,
+            mode=mode, qslot=(_new_slot() if mode == "async" else None),
+            carry_budget=int(carry_budget), shard_deadline=shard_deadline)
         events.emit("queue_create", _refs=(q,), qid=id(q),
                     capacity=capacity, width=width,
                     payload_capacity=payload_capacity,
                     reply_capacity=reply_capacity, sanitize=bool(sanitize),
-                    retry=retry is not None)
+                    retry=retry is not None, mode=mode)
         REGISTRY.note_queue_geometry(
             {"capacity": int(capacity), "width": int(width),
              "payload_capacity": int(payload_capacity),
@@ -2041,6 +3177,41 @@ class RpcQueue:
         z = jnp.zeros((), jnp.int32)
         one = jnp.ones_like(self.fonce)
         rc = self.reply_capacity
+        if self.mode == "async":
+            # double-buffered epoch hand-off: SUBMIT this epoch's drain,
+            # COLLECT the previous one — the installed reply window is the
+            # PREVIOUS epoch's ((rbase, rcount) <- (pbase, pcount)) and
+            # the epoch just closed becomes the pending window
+            drain = _bind_async_drain(self, handlers)
+            if rc:
+                cap = self.capacity
+                shapes = (jax.ShapeDtypeStruct((rc,), jnp.int32),
+                          jax.ShapeDtypeStruct((cap,), jnp.int32),
+                          jax.ShapeDtypeStruct((cap,), jnp.int32),
+                          jax.ShapeDtypeStruct((cap,), jnp.int32),
+                          jax.ShapeDtypeStruct((), jnp.int32))
+                rbuf, roff, rlen, rstat, cdepth = io_callback(
+                    drain, shapes, *records, self.rwant, *heads, self.base,
+                    jnp.int32(rc), ordered=True)
+                out = dataclasses.replace(
+                    self, head=z, phead=z, adrops=z, rbuf=rbuf, roff=roff,
+                    rlen=rlen, rstat=rstat, base=self.base + self.head,
+                    rbase=self.pbase, rcount=self.pcount, pbase=self.base,
+                    pcount=self.head, cdepth=cdepth, fonce=one)
+            else:
+                cdepth = io_callback(
+                    drain, jax.ShapeDtypeStruct((), jnp.int32), *records,
+                    *heads, self.base, ordered=True)
+                out = dataclasses.replace(
+                    self, head=z, phead=z, adrops=z,
+                    base=self.base + self.head, pbase=self.base,
+                    pcount=self.head, cdepth=cdepth, fonce=one)
+            if events.active():
+                events.emit("rpc_flush", _refs=(self, out), qid=id(self),
+                            qid_out=id(out), capacity=self.capacity,
+                            payload_capacity=self.payload_capacity,
+                            reply_capacity=rc, mode="async")
+            return out
         if rc:
             cap = self.capacity
             shapes = (jax.ShapeDtypeStruct((rc,), jnp.int32),
@@ -2071,8 +3242,31 @@ class RpcQueue:
             events.emit("rpc_flush", _refs=(self, out), qid=id(self),
                         qid_out=id(out), capacity=self.capacity,
                         payload_capacity=self.payload_capacity,
-                        reply_capacity=rc)
+                        reply_capacity=rc, mode="sync")
         return out
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Async queues: block until every SUBMITTED epoch drain has
+        completed on the host (all devices of the slot); True on success,
+        False on ``timeout``.  Does not install replies or advance carry
+        rounds — flush an (empty) epoch to collect; this only guarantees
+        host effects and ``flush_stats()`` are settled.  Sync queues
+        return True immediately (their flushes drain inline)."""
+        if self.qslot is None:
+            return True
+        return _slot(self.qslot).join(timeout)
+
+    def carry_outcomes(self, dev: int = 0) -> Dict[int, Tuple[int, Any]]:
+        """Final outcomes of records that were CARRIED across epochs on
+        this queue's slot: ``{ticket: (status, words-or-None)}``.  Only
+        async queues with ``carry_budget > 0`` populate it; entries appear
+        as carry rounds resolve (run ``join()`` after the final flush for
+        a settled view) and the newest ``4096`` are kept."""
+        if self.qslot is None:
+            return {}
+        slot = _slot(self.qslot)
+        with slot.lock:
+            return dict(slot.outcomes.get(dev, {}))
 
     def result(self, ticket, shape=(), dtype=None) -> jax.Array:
         """Read ticket ``ticket``'s reply from the LAST flush.
@@ -2176,9 +3370,16 @@ class RpcQueue:
         st = (self.rstat[slot] if self.rstat.shape[0]
               else jnp.int32(STATUS_OK))
         in_window = (local >= 0) & (local < self.rcount)
+        # async: tickets of the SUBMITTED, not-yet-collected epoch read
+        # PENDING (their drain may still be running on the slot executor);
+        # sync queues keep pcount == 0 so this branch never fires
+        plocal = t - self.pbase
+        pend = (plocal >= 0) & (plocal < self.pcount)
         return jnp.where(
             t < 0, jnp.int32(STATUS_DROPPED),
-            jnp.where(in_window, st, jnp.int32(STATUS_STALE)))
+            jnp.where(in_window, st,
+                      jnp.where(pend, jnp.int32(STATUS_PENDING),
+                                jnp.int32(STATUS_STALE))))
 
     def pressure(self) -> jax.Array:
         """Device-visible backpressure in ``[0, 1+)``: the max of ring,
@@ -2197,6 +3398,11 @@ class RpcQueue:
             declared = jnp.sum(jnp.abs(self.rwant) * live)
             p = jnp.maximum(
                 p, declared.astype(jnp.float32) / self.reply_capacity)
+        # retry-aware backpressure: records the host is CARRYING across
+        # epochs (failing callees being redriven) occupy future drain
+        # capacity — a degrading host pushes pressure up even when the
+        # device-side ring is empty (sync queues keep cdepth == 0)
+        p = jnp.maximum(p, self.cdepth.astype(jnp.float32) / cap)
         return p
 
     def _reply_spec(self, shape, dtype):
@@ -2232,7 +3438,14 @@ class RpcQueue:
         For concrete (post-flush, outside-jit) queues on driver/serving
         hot paths, where per-ticket :meth:`result` calls would each pay an
         eager program dispatch + transfer.  Same semantics as
-        :meth:`result_ok`, ticket for ticket."""
+        :meth:`result_ok`, ticket for ticket.
+
+        On an async queue, a ticket whose record was CARRIED across
+        epochs resolves through the slot's outcome table (its reply never
+        lands in a device window), so a carried record that eventually
+        succeeded reads its value here like any other — single-queue
+        slots only (device 0); sharded consumers use
+        :meth:`carry_outcomes` per device."""
         shape, dtype, nw = self._reply_spec(shape, dtype)
         rbuf = np.asarray(self.rbuf)
         roff = np.asarray(self.roff)
@@ -2240,9 +3453,25 @@ class RpcQueue:
         rstat = np.asarray(self.rstat)
         rbase, rcount = int(self.rbase), int(self.rcount)
         np_dtype = np.dtype(dtype.name)
+        outcomes = (self.carry_outcomes(0)
+                    if (self.qslot is not None and self.carry_budget)
+                    else {})
         out = []
         for t in tickets:
             t = int(t)
+            oc = outcomes.get(t)
+            if oc is not None:
+                st, words = oc
+                ok = (st == STATUS_OK and words is not None
+                      and words.size == nw)
+                if ok:
+                    vals = (words.view(np.float32).astype(np_dtype)
+                            if np.issubdtype(np_dtype, np.floating)
+                            else words.astype(np_dtype))
+                else:
+                    vals = np.zeros((nw,), np_dtype)
+                out.append((vals.reshape(shape), ok))
+                continue
             local = t - rbase
             slot = local % self.capacity if local >= 0 else 0
             ok = (t >= 0 and 0 <= local < rcount and int(rlen[slot]) == nw
@@ -2271,15 +3500,32 @@ class RpcQueue:
                 "the queue with reply_capacity > 0")
         rstat = np.asarray(self.rstat)
         rbase, rcount = int(self.rbase), int(self.rcount)
+        pbase, pcount = int(self.pbase), int(self.pcount)
+        outcomes: Dict[int, Any] = {}
+        carried: set = set()
+        if self.qslot is not None and self.carry_budget:
+            # carried records resolve host-side: a finalized outcome wins
+            # over any (older) device window stamp, a still-carried ticket
+            # reads PENDING (single-queue slots: device 0)
+            outcomes = self.carry_outcomes(0)
+            carried = set(_slot(self.qslot).carried_tickets(0))
         out = []
         for t in tickets:
             t = int(t)
             if t < 0:
                 out.append(STATUS_DROPPED)
                 continue
+            oc = outcomes.get(t)
+            if oc is not None:
+                out.append(int(oc[0]))
+                continue
+            if t in carried:
+                out.append(STATUS_PENDING)
+                continue
             local = t - rbase
             if not 0 <= local < rcount:
-                out.append(STATUS_STALE)
+                out.append(STATUS_PENDING if 0 <= t - pbase < pcount
+                           else STATUS_STALE)
                 continue
             slot = local % self.capacity
             out.append(int(rstat[slot]) if rstat.size else STATUS_OK)
@@ -2348,10 +3594,16 @@ class ShardedRpcQueue:
                reply_capacity: int = 0,
                sanitize: bool = False,
                retry: Optional[RetryPolicy] = None,
-               timeout: Optional[float] = None) -> "ShardedRpcQueue":
+               timeout: Optional[float] = None,
+               mode: str = "sync",
+               carry_budget: int = 0,
+               shard_deadline: Optional[float] = None
+               ) -> "ShardedRpcQueue":
         q = RpcQueue.create(capacity, width, payload_capacity,
                             reply_capacity, sanitize=sanitize,
-                            retry=retry, timeout=timeout)
+                            retry=retry, timeout=timeout, mode=mode,
+                            carry_budget=carry_budget,
+                            shard_deadline=shard_deadline)
         sq = ShardedRpcQueue(jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), q))
         REGISTRY.note_queue_geometry(queue_geometry(sq))
@@ -2370,7 +3622,7 @@ class ShardedRpcQueue:
                         capacity=view.capacity, width=view.width,
                         payload_capacity=view.payload_capacity,
                         reply_capacity=view.reply_capacity,
-                        sanitize=view.sanitize)
+                        sanitize=view.sanitize, mode=view.mode)
         return view
 
     def with_local(self, local: RpcQueue) -> "ShardedRpcQueue":
@@ -2397,11 +3649,57 @@ class ShardedRpcQueue:
         z = jnp.zeros((D,), jnp.int32)
         one = jnp.ones_like(self.q.fonce)
         traced = any(isinstance(x, jax.core.Tracer) for x in records + heads)
+        if self.q.mode == "async":
+            # per-device INDEPENDENT drains: one epoch job per shard on
+            # the slot's per-device executors, no gather barrier — the
+            # callback returns the PREVIOUS epoch's stacked replies
+            drain = _bind_async_drain(self.q, handlers)
+            if rc:
+                operands = records + (self.q.rwant,) + heads + (self.q.base,)
+                if traced:
+                    shapes = (jax.ShapeDtypeStruct((D, rc), jnp.int32),
+                              jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                              jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                              jax.ShapeDtypeStruct((D, cap), jnp.int32),
+                              jax.ShapeDtypeStruct((D,), jnp.int32))
+                    rbuf, roff, rlen, rstat, cdepth = io_callback(
+                        drain, shapes, *operands, jnp.int32(rc),
+                        ordered=True)
+                else:
+                    rbuf, roff, rlen, rstat, cdepth = (
+                        jnp.asarray(a) for a in drain(*operands,
+                                                      np.int32(rc)))
+                out = dataclasses.replace(self, q=dataclasses.replace(
+                    self.q, head=z, phead=z, adrops=z,
+                    rbuf=rbuf, roff=roff, rlen=rlen, rstat=rstat,
+                    base=self.q.base + self.q.head,
+                    rbase=self.q.pbase, rcount=self.q.pcount,
+                    pbase=self.q.base, pcount=self.q.head, cdepth=cdepth,
+                    fonce=one))
+            else:
+                if traced:
+                    cdepth = io_callback(
+                        drain, jax.ShapeDtypeStruct((D,), jnp.int32),
+                        *records, *heads, self.q.base, ordered=True)
+                else:
+                    cdepth = jnp.asarray(drain(*records, *heads,
+                                               self.q.base))
+                out = dataclasses.replace(self, q=dataclasses.replace(
+                    self.q, head=z, phead=z, adrops=z,
+                    base=self.q.base + self.q.head,
+                    pbase=self.q.base, pcount=self.q.head, cdepth=cdepth,
+                    fonce=one))
+            if events.active():
+                events.emit("rpc_flush", _refs=(self, out), qid=id(self.q),
+                            qid_out=id(out.q), capacity=cap,
+                            payload_capacity=self.payload_capacity,
+                            reply_capacity=rc, sharded=True, mode="async")
+            return out
         if rc:
             drain_fn = (_drain_queue_sharded_replies_san if self.q.sanitize
                         else _drain_queue_sharded_replies)
             drain = _bind_drain(drain_fn, handlers, self.q.retry,
-                                self.q.timeout)
+                                self.q.timeout, self.q.shard_deadline)
             operands = records + (self.q.rwant,) + heads + (self.q.base,)
             if traced:
                 shapes = (jax.ShapeDtypeStruct((D, rc), jnp.int32),
@@ -2438,8 +3736,24 @@ class ShardedRpcQueue:
             events.emit("rpc_flush", _refs=(self, out), qid=id(self.q),
                         qid_out=id(out.q), capacity=cap,
                         payload_capacity=self.payload_capacity,
-                        reply_capacity=rc, sharded=True)
+                        reply_capacity=rc, sharded=True, mode="sync")
         return out
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Async sharded queues: wait for every shard's submitted epoch
+        drains (see :meth:`RpcQueue.join`)."""
+        if self.q.qslot is None:
+            return True
+        return _slot(self.q.qslot).join(timeout)
+
+    def carry_outcomes(self, dev: int = 0) -> Dict[int, Tuple[int, Any]]:
+        """Device ``dev``'s finalized cross-epoch carry outcomes (see
+        :meth:`RpcQueue.carry_outcomes`)."""
+        if self.q.qslot is None:
+            return {}
+        slot = _slot(self.q.qslot)
+        with slot.lock:
+            return dict(slot.outcomes.get(dev, {}))
 
     def result(self, dev, ticket, shape=(), dtype=None) -> jax.Array:
         """Device ``dev``'s reply for ``ticket`` from the last flush (the

@@ -156,16 +156,22 @@ class ServingEngine:
 
         ``spill_timeout`` bounds each sink invocation's wall clock: a
         hung sink marks that record ``TIMEOUT`` in the reply status lane
-        instead of wedging the tick loop.  A failed delivery (timeout,
-        raising sink, lost reply) is re-enqueued and re-flushed in a
-        fresh epoch up to ``spill_retries`` more times; a record that
-        still fails acks ``None`` and its request id lands in
+        instead of wedging the tick loop.  Delivery rides the v6
+        double-buffered transport with a cross-epoch carry budget of
+        ``spill_retries``: a record whose sink raises or times out is
+        stamped ``PENDING`` and redriven by the transport itself on the
+        following epoch drains — the engine no longer hand-rolls
+        re-enqueue rounds.  A record that exhausts the budget acks
+        ``None`` and its request id lands in
         ``self.recompute_on_readmit`` — the tiered-KV consumer's signal
         that the pages were never durably spilled and a readmitted
-        request must recompute from the prompt.  Enqueues are gated on
-        ``spill_q.pressure()``: when ring/arena occupancy crosses
-        :data:`_SPILL_PRESSURE`, the engine drains mid-batch so nothing
-        drops."""
+        request must recompute from the prompt.  A LOST reply
+        (reply-arena overflow, injected drop) is not redriven — the sink
+        may already have run, so the record acks ``None`` and joins
+        ``recompute_on_readmit`` conservatively.  Enqueues are gated on
+        ``spill_q.pressure()`` (which counts carried records still
+        retrying): when occupancy crosses :data:`_SPILL_PRESSURE`, the
+        engine drains mid-batch so nothing drops."""
         self.model = model
         self.cfg = model.cfg
         assert self.cfg.family in ("dense", "moe", "vlm"), \
@@ -187,7 +193,8 @@ class ServingEngine:
                 capacity=max(2 * batch_slots, 8), width=3,
                 payload_capacity=max(batch_slots * maxp, 8),
                 reply_capacity=max(2 * batch_slots, 8),
-                timeout=spill_timeout)
+                timeout=spill_timeout, mode="async",
+                carry_budget=self.spill_retries)
         self.slots: List[_Slot] = [_Slot() for _ in range(batch_slots)]
         self.queue: List[Tuple[int, List[int], int]] = []
         self.finished: Dict[int, List[int]] = {}
@@ -274,15 +281,20 @@ class ServingEngine:
 
     def _deliver_spills(self, records) -> None:
         """Deliver ``(rid, n_tokens, pages)`` spill records with retry
-        and graceful degradation.
+        and graceful degradation — the retry rounds now live in the
+        TRANSPORT (v6 cross-epoch carry), not in this method.
 
-        Each delivery round enqueues pending records — draining early
-        whenever ``spill_q.pressure()`` crosses :data:`_SPILL_PRESSURE`
-        so the ring/arenas never overflow — then reads the status lane.
-        Records whose status is not OK (raising sink, per-record
-        ``spill_timeout``, lost reply) are carried into the next round,
-        up to ``spill_retries`` re-deliveries.  A record that exhausts
-        its retries acks ``None`` and joins ``recompute_on_readmit``."""
+        Records are enqueued — draining early whenever
+        ``spill_q.pressure()`` crosses :data:`_SPILL_PRESSURE` so the
+        ring/arenas never overflow — then each chunk takes one
+        submit/collect flush pair: the first flush hands the epoch to
+        the background drain, the second publishes its replies.  A
+        record whose sink raised or timed out comes back ``PENDING``
+        (the drain carried it under the ``spill_retries`` budget); the
+        engine grants the carried set its remaining epoch drains, joins
+        the slot, and reads the finalized outcomes.  A record whose
+        carry budget still ends in failure — or whose reply was lost
+        outright — acks ``None`` and joins ``recompute_on_readmit``."""
         sink = self.spill_sink
 
         def handler(rid, n_tokens, pages):
@@ -294,38 +306,54 @@ class ServingEngine:
             return np.int32(len(pages)) if out is None else out
 
         handlers = {_SPILL_RPC: handler}
-        failed = list(records)
-        for _attempt in range(1 + max(0, self.spill_retries)):
-            if not failed:
-                break
-            pending, failed = failed, []
-            i = 0
-            while i < len(pending):
-                batch = []
-                while i < len(pending):
-                    rid, n_tok, pages = pending[i]
-                    self.spill_q, t = self.spill_q.enqueue_ticketed(
-                        _SPILL_RPC, jnp.int32(rid), n_tok, pages,
-                        returns=jax.ShapeDtypeStruct((), jnp.int32))
-                    batch.append((pending[i], t))
-                    i += 1
-                    if float(self.spill_q.pressure()) >= _SPILL_PRESSURE:
-                        break           # drain before enqueueing more
+        pending: List[Tuple[Any, Any]] = []     # (record, ticket) carried
+        i = 0
+        while i < len(records):
+            chunk = []
+            while i < len(records):
+                rid, n_tok, pages = records[i]
+                self.spill_q, t = self.spill_q.enqueue_ticketed(
+                    _SPILL_RPC, jnp.int32(rid), n_tok, pages,
+                    returns=jax.ShapeDtypeStruct((), jnp.int32))
+                chunk.append((records[i], t))
+                i += 1
+                if float(self.spill_q.pressure()) >= _SPILL_PRESSURE:
+                    break               # drain before enqueueing more
+            self.spill_q = self.spill_q.flush(handlers=handlers)  # submit
+            self.spill_q = self.spill_q.flush(handlers=handlers)  # collect
+            tix = [t for _, t in chunk]
+            statuses = self.spill_q.statuses_host(tix)
+            acks = self.spill_q.results_host(tix)
+            for (rec, t), st, (val, ok) in zip(chunk, statuses, acks):
+                if st == rpc_mod.STATUS_OK and ok:
+                    self.spill_acks[rec[0]] = int(val)
+                elif st == rpc_mod.STATUS_PENDING:
+                    pending.append((rec, t))
+                else:
+                    self._spill_failed(rec)
+        if pending:
+            # the collect flush above already submitted one carry-redrive
+            # epoch; grant the rest of the budget, then join so every
+            # carried record has FINALIZED into the slot's outcome table
+            for _ in range(max(0, self.spill_retries - 1)):
                 self.spill_q = self.spill_q.flush(handlers=handlers)
-                tix = [t for _, t in batch]
-                statuses = self.spill_q.statuses_host(tix)
-                acks = self.spill_q.results_host(tix)
-                for (rec, _), st, (val, ok) in zip(batch, statuses, acks):
-                    if st == rpc_mod.STATUS_OK and ok:
-                        self.spill_acks[rec[0]] = int(val)
-                    else:
-                        failed.append(rec)
-        for rec in failed:
-            # delivery exhausted its retries: the pages were never
-            # durably spilled — None ack (distinct from a 0 ack) and the
-            # request must recompute from the prompt if readmitted
-            self.spill_acks[rec[0]] = None
-            self.recompute_on_readmit.add(rec[0])
+            self.spill_q.join()
+            tix = [t for _, t in pending]
+            statuses = self.spill_q.statuses_host(tix)
+            acks = self.spill_q.results_host(tix)
+            for (rec, _), st, (val, ok) in zip(pending, statuses, acks):
+                if st == rpc_mod.STATUS_OK and ok:
+                    self.spill_acks[rec[0]] = int(val)
+                else:
+                    self._spill_failed(rec)
+
+    def _spill_failed(self, rec) -> None:
+        # delivery exhausted the transport's carry budget (or the reply
+        # was lost): the pages were never provably spilled — None ack
+        # (distinct from a 0 ack) and the request must recompute from
+        # the prompt if readmitted
+        self.spill_acks[rec[0]] = None
+        self.recompute_on_readmit.add(rec[0])
 
     def drain_spill_acks(self) -> Dict[int, Optional[int]]:
         """Collect-and-clear the accumulated spill acks (request id ->
@@ -437,7 +465,8 @@ class ServingEngine:
                 capacity=max(2 * self.B, 8), width=3,
                 payload_capacity=max(self.B * maxp, 8),
                 reply_capacity=max(2 * self.B, 8),
-                timeout=spill_timeout)
+                timeout=spill_timeout, mode="async",
+                carry_budget=self.spill_retries)
         self.slots = [_Slot() for _ in range(self.B)]
         self.queue = []
         self.finished = {}

@@ -21,6 +21,18 @@ generated from a seed via :meth:`FaultPlan.generate`; a plan holds
 mutable occurrence counters, so call :meth:`FaultPlan.reset` (or build a
 fresh plan from the same seed) before replaying it.
 
+**Concurrent drains (async / sharded-async transports).**  When drains
+run on background threads, arrival order at ``on_call`` is scheduler
+noise — so the implicit counters above would make fault addressing
+nondeterministic.  Those drains instead call :meth:`FaultPlan.reserve`
+at SUBMIT time (still on the caller thread, in canonical
+``(device, slot)`` record order) to atomically claim each record's
+occurrence index up front, then pass it back explicitly via the
+``index=`` keyword of ``on_call`` / ``on_reply``, which bypasses the
+internal counters entirely.  A record carried across epochs for redrive
+keeps its ORIGINAL index, so a fault pinned to occurrence *k* follows
+the record through retries regardless of which epoch retires it.
+
 Usage::
 
     plan = FaultPlan.generate(seed=7, callees=["log", "read"])
@@ -32,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -84,13 +97,39 @@ class FaultPlan:
         self.fired: List[Tuple[str, str, int, int]] = []
         self._occ: Dict[str, int] = {}       # next first-attempt index
         self._cur: Dict[str, int] = {}       # index of the in-flight call
+        self._lock = threading.Lock()        # guards _occ/_cur/fired
 
     # -- injector protocol -------------------------------------------------
-    def on_call(self, name: str, attempt: int) -> Optional[float]:
-        if attempt == 1:
-            idx = self._occ.get(name, 0)
-            self._occ[name] = idx + 1
-            self._cur[name] = idx
+    def reserve(self, names: Sequence[Optional[str]]) -> List[int]:
+        """Atomically claim occurrence indices for ``names`` in order.
+
+        Concurrent drains call this at submit time (caller thread,
+        canonical record order) and pass the returned indices back via
+        ``on_call(..., index=)`` / ``on_reply(..., index=)`` so fault
+        addressing stays deterministic under threaded replay.  ``None``
+        entries (records with no callee, e.g. already-failed slots) get
+        index ``-1`` and advance nothing.
+        """
+        out: List[int] = []
+        with self._lock:
+            for name in names:
+                if name is None:
+                    out.append(-1)
+                    continue
+                idx = self._occ.get(name, 0)
+                self._occ[name] = idx + 1
+                out.append(idx)
+        return out
+
+    def on_call(self, name: str, attempt: int,
+                index: Optional[int] = None) -> Optional[float]:
+        if index is not None:
+            idx = index
+        elif attempt == 1:
+            with self._lock:
+                idx = self._occ.get(name, 0)
+                self._occ[name] = idx + 1
+                self._cur[name] = idx
         else:
             idx = self._cur.get(name, 0)
         for f in self.faults:
@@ -107,8 +146,9 @@ class FaultPlan:
                 return float(f.delay)
         return None
 
-    def on_reply(self, name: str, words: np.ndarray):
-        idx = self._cur.get(name, 0)
+    def on_reply(self, name: str, words: np.ndarray,
+                 index: Optional[int] = None):
+        idx = self._cur.get(name, 0) if index is None else index
         for f in self.faults:
             if f.callee != name or f.call_index != idx:
                 continue
@@ -125,9 +165,10 @@ class FaultPlan:
     def reset(self) -> None:
         """Zero the occurrence counters (and the fired log) so the same
         plan replays identically against another transport."""
-        self.fired = []
-        self._occ = {}
-        self._cur = {}
+        with self._lock:
+            self.fired = []
+            self._occ = {}
+            self._cur = {}
 
     def __enter__(self) -> "FaultPlan":
         rpc.set_fault_injector(self)

@@ -17,7 +17,10 @@ import pytest  # noqa: E402
 # the test sits in block_until_ready.  Environment-dependent (kernel /
 # thread-pool sizing) and reproducible on some containers; synchronous
 # dispatch removes the race without changing any tested semantics.
-# benchmarks/common.py carries the same pin for the bench processes.
+# benchmarks/common.py carries the same pin for the bench processes, and
+# ``RpcQueue.create`` warns (once per process) if it ever sees the flag
+# live — rpc._check_cpu_async_dispatch — so a dropped pin surfaces as a
+# RuntimeWarning at queue construction instead of a hung suite.
 jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 

@@ -7,6 +7,15 @@ host effects.  The CI ``chaos`` job widens the seed matrix via
 ``RPC_FAULT_SEEDS`` (comma-separated ints); the tier-1 default keeps a
 small fixed set so the suite always runs.
 
+The v6 async transports join the matrix: the same seeded plans must
+produce bit-identical STATUSES on the batched sync drain, the double-
+buffered async drain, and the sharded-async drain (occurrence indices
+are reserved in canonical ``(device, slot)`` order at submit time, so
+background-thread scheduling cannot reshuffle fault addressing).  Host
+effects stay order-identical on the single async queue — one FIFO
+executor per (slot, device) — and multiset-identical on the sharded-
+async one, whose cross-shard interleaving is deliberately unspecified.
+
 Also home to the satellite fixes' unit coverage: the drain-side error
 log (`error_log()`, ``flush_stats()['callee_errors']``), the
 once-per-queue failed-ticket-read warning, and the ``sanitize=True``
@@ -22,13 +31,16 @@ import pytest
 
 from repro.core import rpc
 from repro.core.rpc import (REGISTRY, RetryPolicy, RpcQueue,
-                            STATUS_CALLEE_RAISED, STATUS_DROPPED, STATUS_OK,
-                            STATUS_TIMEOUT, flush_stats, reset_rpc_stats)
+                            ShardedRpcQueue, STATUS_CALLEE_RAISED,
+                            STATUS_DROPPED, STATUS_OK, STATUS_TIMEOUT,
+                            flush_stats, reset_rpc_stats)
 from repro.testing.faults import Fault, FaultPlan
 
 # the conformance runners + record set live next to the reference model
-from test_rpc_differential import (_CONFORMANCE_RECORDS, _run_batched,
-                                   _run_immediate, _run_sharded)
+from test_rpc_differential import (_CONFORMANCE_RECORDS, _SEEN, CAP, PC, RC,
+                                   WIDTH, _dev_enqueue, _payload_for,
+                                   _run_batched, _run_immediate,
+                                   _run_sharded)
 
 _I32 = jax.ShapeDtypeStruct((), jnp.int32)
 
@@ -94,6 +106,116 @@ def test_chaos_callee_raises_first_attempt(seed):
         assert all(s == STATUS_OK for i, s in enumerate(st_a) if i != idx)
         n_effects = len(_CONFORMANCE_RECORDS) - (0 if retry else 1)
         assert len(fx_a) == n_effects
+
+
+# ---------------------------------------------------------------------------
+# v6 async legs: the same seeded plans on the double-buffered transports
+# ---------------------------------------------------------------------------
+
+def _run_async(records, plan, retry):
+    """Transport (d): v6 double-buffered queue — one flush submits the
+    epoch, a second collects it, ``join()`` settles the background drain.
+    ``carry_budget`` stays 0 so the status lane is comparable record for
+    record with the synchronous legs."""
+    _SEEN.clear()
+    q = RpcQueue.create(max(CAP, len(records)), width=WIDTH,
+                        payload_capacity=4 * PC, reply_capacity=4 * RC,
+                        mode="async",
+                        retry=RetryPolicy(max_attempts=2) if retry else None)
+    tix = []
+    for kind, tag, plen, nrep in records:
+        payload = _payload_for(kind, plen, tag)
+        q, t = _dev_enqueue(q, kind, tag, nrep, payload, None)
+        tix.append(t)
+    # the injector must stay installed until the BACKGROUND drain is done
+    # (it consults the process-wide injector at drain time, not submit)
+    rpc.set_fault_injector(plan)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            q = q.flush()                  # submit
+            q = q.flush()                  # collect
+        assert q.join()
+        jax.effects_barrier()
+    finally:
+        rpc.set_fault_injector(None)
+    return q.statuses_host(tix), list(_SEEN)
+
+
+def _run_sharded_async(records, plan, retry, D=2):
+    """Transport (e): 2-shard sharded-async queue — per-device epochs on
+    independent executors, block-distributed records so the canonical
+    ``(device, slot)`` reservation order equals the batched order."""
+    _SEEN.clear()
+    sq = ShardedRpcQueue.create(D, max(CAP, len(records)), width=WIDTH,
+                                payload_capacity=4 * PC,
+                                reply_capacity=4 * RC, mode="async",
+                                retry=RetryPolicy(max_attempts=2)
+                                if retry else None)
+    per = -(-len(records) // D)
+    locals_ = [sq.local(d) for d in range(D)]
+    tix = []
+    for i, (kind, tag, plen, nrep) in enumerate(records):
+        d = i // per
+        payload = _payload_for(kind, plen, tag)
+        locals_[d], t = _dev_enqueue(locals_[d], kind, tag, nrep,
+                                     payload, None)
+        tix.append((d, t))
+    stacked = ShardedRpcQueue(
+        jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
+    rpc.set_fault_injector(plan)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            stacked = stacked.flush()      # submit per device
+            stacked = stacked.flush()      # collect per device
+        assert stacked.join()
+        jax.effects_barrier()
+    finally:
+        rpc.set_fault_injector(None)
+    return [int(stacked.result_status(d, t)) for d, t in tix], list(_SEEN)
+
+
+@pytest.mark.parametrize("seed", FAULT_SEEDS)
+@pytest.mark.parametrize("retry", [False, True])
+def test_chaos_async_transport_conformance(seed, retry):
+    """One seeded fault plan, three drains: batched sync, async,
+    sharded-async — statuses must be bit-identical.  Reply arenas are
+    sized so no record overflows: the async submit RESERVES occurrence
+    indices for every surviving record while a sync drain skips records
+    it atomically drops at reply overflow, so overflow would
+    legitimately diverge fault addressing between the legs."""
+    base = FaultPlan.generate(seed, ["diff.int", "diff.float"],
+                              n_faults=3, max_index=6)
+    legs = []
+    for runner in (_run_batched, _run_async, _run_sharded_async):
+        reset_rpc_stats()
+        legs.append(runner(_CONFORMANCE_RECORDS, FaultPlan(base.faults),
+                           retry))
+    (st_b, fx_b), (st_a, fx_a), (st_s, fx_s) = legs
+    assert st_b == st_a == st_s            # bit-identical statuses
+    assert fx_b == fx_a                    # single async: FIFO executor
+    # sharded-async: per-shard suborder is deterministic, the cross-shard
+    # merge is not — compare as a multiset
+    assert sorted(fx_b, key=repr) == sorted(fx_s, key=repr)
+
+
+@pytest.mark.parametrize("retry", [False, True])
+def test_chaos_async_callee_raise_conformance(retry):
+    """The acceptance scenario on the async legs: diff.int occurrence 1
+    raises on its first attempt — CALLEE_RAISED everywhere without
+    retry, OK everywhere with one (idempotent-gated) retry."""
+    victim = Fault("raise", "diff.int", 1)
+    legs = []
+    for runner in (_run_batched, _run_async, _run_sharded_async):
+        reset_rpc_stats()
+        legs.append(runner(_CONFORMANCE_RECORDS, FaultPlan([victim]),
+                           retry))
+    (st_b, fx_b), (st_a, fx_a), (st_s, _fx_s) = legs
+    assert st_b == st_a == st_s
+    want = STATUS_OK if retry else STATUS_CALLEE_RAISED
+    assert st_a[1] == want                 # records: i11 [i12] f13 ...
+    assert fx_b == fx_a
 
 
 # ---------------------------------------------------------------------------

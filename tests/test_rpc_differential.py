@@ -44,6 +44,21 @@ isolation, and idempotent-gated retry.  Seeded
 identical twin plan drives the model — statuses, host effects, fired
 faults, and ``callee_errors``/``retries`` stats must agree bit-for-bit,
 on the single and the 2-shard sharded transport.
+
+**v6 async differential.**  :class:`RefAsyncQueue` extends the model with
+the double-buffered transport's semantics: ``flush`` drains the closing
+epoch but publishes the PREVIOUS epoch's reply/status window (the
+just-submitted epoch's tickets read ``STATUS_PENDING``), fault occurrence
+indices are reserved at flush time over the epoch's surviving records
+(the concurrent-drain protocol of ``FaultPlan.reserve``), and failing
+idempotent records with a ``carry_budget`` are carried across epochs —
+redriven at the head of each subsequent drain under their ORIGINAL
+occurrence index and finalized into an outcome table that the host reads
+(``statuses_host`` / ``results_host``) fold in first.  The async driver
+``join()``s the device queue after every flush so the background drain's
+carry state is settled, then compares EVERY ticket ever issued —
+PENDING/window/outcome/STALE transitions included — plus host effects
+and drop/error stats.
 """
 import os
 import random
@@ -62,8 +77,9 @@ except ModuleNotFoundError:
 
 from repro.core.rpc import (REGISTRY, RetryPolicy, RpcQueue, ShardedRpcQueue,
                             STATUS_CALLEE_RAISED, STATUS_DROPPED, STATUS_OK,
-                            STATUS_REPLY_OVERFLOW, STATUS_STALE, flush_stats,
-                            reset_rpc_stats, set_fault_injector)
+                            STATUS_PENDING, STATUS_REPLY_OVERFLOW,
+                            STATUS_STALE, flush_stats, reset_rpc_stats,
+                            set_fault_injector)
 from repro.testing.faults import Fault, FaultPlan, InjectedFault
 
 # Small geometry so ring overwrite, arena drops and reply drops all actually
@@ -755,6 +771,302 @@ def _run_sharded(records, plan, retry, D=2):
     jax.effects_barrier()
     return [int(stacked.local(d).result_status(t)) for d, t in tix], \
         list(_SEEN)
+
+
+# ---------------------------------------------------------------------------
+# v6 async reference model: epoch-late windows + cross-epoch carry
+# ---------------------------------------------------------------------------
+
+class RefAsyncQueue(RefQueue):
+    """The v6 double-buffered transport in plain python.
+
+    ``flush`` drains the closing epoch EAGERLY (the device serializes a
+    queue's epochs on a single-thread slot executor, so eager evaluation
+    preserves the host-effect order) but publishes the PREVIOUS epoch's
+    reply/status tables — the window trails one epoch and the
+    just-submitted epoch's tickets read ``STATUS_PENDING``.  Failing
+    idempotent records with a carry budget stamp PENDING and redrive at
+    the head of each subsequent drain (oldest first, ORIGINAL occurrence
+    index), finalizing into an outcome table that ``result_status`` /
+    ``result`` fold in first — mirroring the device's ``statuses_host`` /
+    ``results_host``.  Fault occurrence indices are reserved at flush
+    time over the epoch's surviving records, matching the concurrent-
+    drain protocol (``FaultPlan.reserve``)."""
+
+    def __init__(self, cap=CAP, pc=PC, rc=RC, carry_budget=0):
+        super().__init__(cap, pc, rc)
+        self.carry_budget = carry_budget
+        self.pbase = 0                 # window of the submitted epoch
+        self.pcount = 0
+        self._staged = None            # its (rtab, stab): published NEXT
+        self.carry = []                # records being redriven
+        self.outcomes = {}             # ticket -> (status, words|None)
+
+    def flush(self, plan=None, retry_attempts=1, idem=None):
+        n = self.head
+        lo = max(0, n - self.cap)
+        occ = None
+        if plan is not None:           # submit-time reservation
+            names = ["diff.int" if self.slots[j % self.cap][0] == "i"
+                     else "diff.float" for j in range(lo, n)]
+            occ = plan.reserve(names)
+        seen, cerrs = [], 0
+        # carry redrives run FIRST, oldest first (the device drain order)
+        survivors = []
+        for rec in self.carry:
+            attempt = rec["attempts"] + 1
+            raised = False
+            if plan is not None:
+                try:
+                    plan.on_call(rec["name"], attempt, index=rec["occ"])
+                except InjectedFault:
+                    raised = True
+            if not raised:
+                seen.append((rec["kind"], rec["tag"], rec["payload"]))
+                status, words = STATUS_OK, None
+                if rec["nrep"] > 0:
+                    vals = _MODEL_HOSTS[rec["kind"]](
+                        rec["tag"], rec["nrep"], rec["payload"])
+                    dt = np.int32 if rec["kind"] == "i" else np.float32
+                    words = np.asarray(vals, dt).view(np.int32)
+                    if plan is not None:
+                        words = plan.on_reply(rec["name"], words,
+                                              index=rec["occ"])
+                    if words is None:
+                        status = STATUS_DROPPED
+                self.outcomes[rec["ticket"]] = (
+                    status,
+                    None if words is None else [int(w) for w in words])
+                continue
+            cerrs += 1
+            rec["attempts"] += 1
+            rec["tries"] -= 1
+            if rec["tries"] <= 0:
+                self.outcomes[rec["ticket"]] = (STATUS_CALLEE_RAISED, None)
+            else:
+                survivors.append(rec)
+        self.carry = survivors
+        # this epoch's records
+        rtab, stab = {}, {}
+        rhead = rdrops = 0
+        for pos, j in enumerate(range(lo, n)):
+            k = j % self.cap
+            kind, tag, nrep, payload = self.slots[k]
+            if nrep > 0 and rhead + nrep > self.rc:
+                rdrops += 1            # atomic drain drop: callee not run
+                stab[k] = STATUS_REPLY_OVERFLOW
+                continue
+            name = "diff.int" if kind == "i" else "diff.float"
+            o = None if occ is None else occ[pos]
+            raised = False
+            if plan is not None:
+                try:
+                    plan.on_call(name, 1, index=o)
+                except InjectedFault:
+                    raised = True
+            status = STATUS_OK
+            if raised:
+                cerrs += 1
+                if self.carry_budget and _IDEM.get(name, False):
+                    status = STATUS_PENDING
+                    self.carry.append(dict(
+                        name=name, kind=kind, tag=tag, nrep=nrep,
+                        payload=payload, ticket=self.gbase + j,
+                        attempts=1, tries=self.carry_budget, occ=o))
+                else:
+                    status = STATUS_CALLEE_RAISED
+            else:
+                seen.append((kind, tag, payload))
+                if nrep > 0:
+                    vals = _MODEL_HOSTS[kind](tag, nrep, payload)
+                    dt = np.int32 if kind == "i" else np.float32
+                    words = np.asarray(vals, dt).view(np.int32)
+                    if plan is not None:
+                        words = plan.on_reply(name, words, index=o)
+                    if words is None:
+                        status = STATUS_DROPPED
+                    else:
+                        rtab[k] = [int(w) for w in words]
+                        rhead += nrep
+            stab[k] = status
+        # double-buffer hand-off: publish the PREVIOUS epoch's window
+        self.reply, self.stab = self._staged or ({}, {})
+        self.rbase, self.rcount = self.pbase, self.pcount
+        self._staged = (rtab, stab)
+        self.pbase, self.pcount = self.gbase, n
+        adrops, self.adrops = self.adrops, 0
+        self.gbase += n
+        self.head = self.phead = 0
+        return seen, lo, adrops, rdrops, cerrs, 0
+
+    def result_status(self, ticket):
+        if ticket < 0:
+            return STATUS_DROPPED
+        oc = self.outcomes.get(ticket)
+        if oc is not None:             # finalized carry outcome wins
+            return oc[0]
+        if any(r["ticket"] == ticket for r in self.carry):
+            return STATUS_PENDING      # still being redriven
+        local = ticket - self.rbase
+        if 0 <= local < self.rcount:
+            return self.stab.get(local % self.cap, STATUS_OK)
+        if 0 <= ticket - self.pbase < self.pcount:
+            return STATUS_PENDING      # submitted, not collected
+        return STATUS_STALE
+
+    def result(self, ticket, nrep, kind):
+        oc = self.outcomes.get(ticket) if self.carry_budget else None
+        if oc is not None:
+            st, words = oc
+            if st != STATUS_OK or words is None or len(words) != nrep:
+                return [0] * nrep if kind == "i" else [0.0] * nrep
+            arr = np.asarray(words, np.int32)
+            return ([int(v) for v in arr] if kind == "i"
+                    else [float(v) for v in arr.view(np.float32)])
+        return super().result(ticket, nrep, kind)
+
+
+def _check_single_async(plan, fault_seed=None, faults=None, carry_budget=0):
+    """One interleaving on the v6 async transport vs the epoch-late model.
+
+    Every device flush is followed by ``join()`` (the background drain —
+    including its carry redrives — completes, so host-side carry state is
+    settled) and then EVERY ticket ever issued must agree on status and
+    value: PENDING for the uncollected epoch, window reads for the
+    collected one, outcome folds for carried records, STALE once the
+    window slid past.  The tail protocol mirrors real consumers: one
+    flush submits the last epoch, one collects it, and ``carry_budget``
+    further flushes retire any still-carried records."""
+    reset_rpc_stats()
+    _SEEN.clear()
+    dev_plan = ref_plan = None
+    if faults is not None:
+        dev_plan, ref_plan = FaultPlan(faults), FaultPlan(faults)
+    elif fault_seed is not None:
+        dev_plan = FaultPlan.generate(fault_seed, ["diff.int", "diff.float"])
+        ref_plan = FaultPlan(dev_plan.faults)
+    if dev_plan is not None:
+        set_fault_injector(dev_plan)
+    q = RpcQueue.create(CAP, width=WIDTH, payload_capacity=PC,
+                        reply_capacity=RC, mode="async",
+                        carry_budget=carry_budget)
+    ref = RefAsyncQueue(carry_budget=carry_budget)
+    tickets = []                       # (ticket, nrep, kind), ever issued
+    expect_seen = []
+    drops = adrops = rdrops = cerrs = 0
+
+    def do_flush(q):
+        nonlocal drops, adrops, rdrops, cerrs
+        assert int(q.head) == ref.head
+        assert int(q.phead) == ref.phead
+        assert int(q.adrops) == ref.adrops
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            q = q.flush()
+        seen, d, a, r, c, _ = ref.flush(ref_plan)
+        expect_seen.extend(seen)
+        drops += d
+        adrops += a
+        rdrops += r
+        cerrs += c
+        assert q.join()                # settle the submitted drain
+        jax.effects_barrier()
+        tix = [t for t, _, _ in tickets]
+        assert q.statuses_host(tix) == \
+            [ref.result_status(t) for t in tix]
+        for t, nrep, kind in tickets:
+            if nrep > 0:
+                dt = jnp.int32 if kind == "i" else jnp.float32
+                (val, _ok), = q.results_host([t], (nrep,), dt)
+                vals = ([int(v) for v in np.asarray(val)] if kind == "i"
+                        else [float(v) for v in np.asarray(val)])
+                assert vals == ref.result(t, nrep, kind), (t, nrep, kind)
+        return q
+
+    try:
+        for op in plan:
+            if op[0] == "flush":
+                q = do_flush(q)
+            else:
+                _, kind, tag, plen, nrep, where = op
+                payload = _payload_for(kind, plen, tag)
+                q, t_dev = _dev_enqueue(q, kind, tag, nrep, payload, where)
+                t_ref = ref.enqueue(kind, tag, nrep, payload, where)
+                assert t_dev == t_ref
+                tickets.append((t_dev, nrep, kind))
+        q = do_flush(q)                # submit the tail epoch
+        q = do_flush(q)                # collect it
+        for _ in range(carry_budget):
+            q = do_flush(q)            # retire any carried records
+    finally:
+        set_fault_injector(None)
+
+    assert [(k, t, a) for k, t, a in _SEEN] == expect_seen
+    stats = flush_stats()
+    assert stats["drops"] == drops
+    assert stats["arena_drops"] == adrops
+    assert stats["reply_drops"] == rdrops
+    assert stats["callee_errors"] == cerrs
+    assert stats["retries"] == 0
+    if dev_plan is not None:
+        assert dev_plan.fired == ref_plan.fired
+
+
+def test_directed_async_epoch_late_and_stale():
+    """Replies land one flush late, and a second collect slides the
+    window: live -> PENDING -> OK -> STALE, matching the model."""
+    plan = [("enq", "i", 1, -1, 2, None), ("flush",),
+            ("enq", "f", 2, -1, 1, None), ("enq", "i", 3, 2, 2, None),
+            ("flush",), ("flush",)]
+    _check_single_async(plan)
+
+
+def test_directed_async_overflow_and_conditional():
+    """Ring overwrite, atomic request-arena drops, reply-arena drops and
+    conditional no-ops all behave identically under epoch-late windows."""
+    plan = [("enq", "i", t, -1, 2, None) for t in range(CAP + 2)] + \
+        [("flush",),
+         ("enq", "i", 9, 7, 4, None),
+         ("enq", "f", 8, 7, 4, None),
+         ("enq", "i", 7, 5, 2, None),      # atomic request-arena drop
+         ("enq", "i", 6, -1, 4, None),     # reply overflow at drain
+         ("enq", "i", 5, 3, 1, False),     # conditional no-op
+         ("flush",)]
+    _check_single_async(plan)
+
+
+def test_directed_async_carry_matches_model():
+    """A raise fault on diff.int occurrence 1 with carry_budget=2: the
+    victim reads PENDING through its collect flush, is redriven under its
+    ORIGINAL occurrence index at the next drain, and finalizes OK in the
+    outcome fold — flush for flush against the model."""
+    plan = [("enq", "i", 1, -1, 2, None), ("enq", "i", 2, 3, 2, None),
+            ("enq", "f", 3, -1, 1, None), ("flush",),
+            ("enq", "i", 4, -1, 1, None), ("flush",)]
+    _check_single_async(plan, faults=(Fault("raise", "diff.int", 1),),
+                        carry_budget=2)
+
+
+def test_directed_async_carry_budget_exhaustion():
+    """A fault that raises on every attempt (attempts 1..3 pinned to one
+    occurrence) exhausts carry_budget=2 and finalizes CALLEE_RAISED."""
+    faults = tuple(Fault("raise", "diff.int", 0, attempt=a)
+                   for a in (1, 2, 3))
+    plan = [("enq", "i", 1, -1, 2, None), ("enq", "f", 2, -1, 1, None),
+            ("flush",)]
+    _check_single_async(plan, faults=faults, carry_budget=2)
+
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_differential_async_queue(seed):
+    _check_single_async(_random_plan(random.Random(5000 + seed)))
+
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_differential_async_queue_faults(seed):
+    rng = random.Random(6000 + seed)
+    _check_single_async(_random_plan(rng), fault_seed=seed,
+                        carry_budget=seed % 3)
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2, 7])

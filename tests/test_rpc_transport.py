@@ -1162,6 +1162,205 @@ def test_adopt_manifest_rejects_mismatched_signature():
         rpc_mod.adopt_manifest(tampered)
 
 
+# ---------------------------------------------------------------------------
+# Transport v6: async double-buffered epoch queues
+# ---------------------------------------------------------------------------
+
+def test_async_flush_pipelines_epochs():
+    """An async flush SUBMITS its epoch — the ticket reads PENDING — and
+    the NEXT flush collects the replies."""
+    from repro.core import rpc as rpc_mod
+    REGISTRY.register("as.echo", lambda x: np.int32(x) + 1)
+
+    q = RpcQueue.create(8, width=2, reply_capacity=8, mode="async")
+    q, t = q.enqueue_ticketed("as.echo", jnp.int32(41), returns=I32)
+    q = q.flush()                                  # submit only
+    assert int(q.result_status(t)) == rpc_mod.STATUS_PENDING
+    assert q.statuses_host([t]) == [rpc_mod.STATUS_PENDING]
+    q = q.flush()                                  # collect the epoch
+    assert int(q.result_status(t)) == rpc_mod.STATUS_OK
+    assert int(q.result(t)) == 42
+    (val, ok), = q.results_host([t])
+    assert int(val) == 42 and ok
+    assert q.join()
+
+
+def test_async_flush_inside_jitted_loop():
+    """The async flush lowers inside jit + fori_loop: every in-loop flush
+    submits an epoch, the boundary collect publishes the LAST epoch."""
+    from jax import lax
+    REGISTRY.register("as.loop", lambda x: np.int32(x) + 100)
+
+    @jax.jit
+    def prog():
+        q = RpcQueue.create(8, width=2, reply_capacity=8, mode="async")
+
+        def body(i, carry):
+            q, _t = carry
+            q, t = q.enqueue_ticketed("as.loop", i, returns=I32)
+            return (q.flush(), t)
+
+        q0, t0 = q.enqueue_ticketed("as.loop", jnp.int32(0), returns=I32)
+        q, t = lax.fori_loop(1, 4, body, (q0.flush(), t0))
+        return q, t
+
+    q, t = prog()
+    q = q.flush()                      # collect the final in-loop epoch
+    assert int(q.result(t)) == 103
+    assert q.join()
+
+
+def test_async_carry_redrives_across_epochs():
+    """A failing idempotent record is carried under ``carry_budget``:
+    PENDING while retrying, redriven once per subsequent epoch drain, and
+    FINALIZED into the outcome table the host readers fold in."""
+    from repro.core import rpc as rpc_mod
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return np.int32(x)
+
+    REGISTRY.register("as.flaky", flaky, idempotent=True)
+    q = RpcQueue.create(8, width=2, reply_capacity=8, mode="async",
+                        carry_budget=3)
+    q, t = q.enqueue_ticketed("as.flaky", jnp.int32(7), returns=I32)
+    q = q.flush()                      # submit: attempt 1 fails -> carried
+    q = q.flush()                      # collect: PENDING; redrive 2 fails
+    assert q.statuses_host([t]) == [rpc_mod.STATUS_PENDING]
+    # satellite: carried/retrying records fold into pressure(), so the
+    # engine's spill ceiling sees a degrading host
+    assert float(q.pressure()) > 0.0
+    q = q.flush()                      # redrive 3 succeeds -> outcome
+    assert q.join()
+    assert calls["n"] == 3
+    assert q.carry_outcomes()[int(t)][0] == rpc_mod.STATUS_OK
+    assert q.statuses_host([t]) == [rpc_mod.STATUS_OK]
+    (val, ok), = q.results_host([t])
+    assert int(val) == 7 and ok
+
+
+def test_async_carry_budget_exhaustion_finalizes_failure():
+    """A record that fails every redrive finalizes with the FAILING
+    status once the budget is spent — never stuck PENDING forever."""
+    from repro.core import rpc as rpc_mod
+
+    def always(x):
+        raise RuntimeError("permanent")
+
+    REGISTRY.register("as.perma", always, idempotent=True)
+    q = RpcQueue.create(8, width=2, reply_capacity=8, mode="async",
+                        carry_budget=2)
+    q, t = q.enqueue_ticketed("as.perma", jnp.int32(1), returns=I32)
+    q = q.flush()                      # submit: attempt 1 fails
+    q = q.flush()                      # collect + redrive 1 (fails)
+    q = q.flush()                      # redrive 2 (fails: budget spent)
+    assert q.join()
+    assert q.carry_outcomes()[int(t)][0] == rpc_mod.STATUS_CALLEE_RAISED
+    assert q.statuses_host([t]) == [rpc_mod.STATUS_CALLEE_RAISED]
+
+
+def test_async_create_validations():
+    with pytest.raises(ValueError, match="mode"):
+        RpcQueue.create(8, width=2, mode="turbo")
+    with pytest.raises(ValueError, match="carry_budget requires mode"):
+        RpcQueue.create(8, width=2, reply_capacity=8, carry_budget=2)
+    with pytest.raises(ValueError, match="carry_budget requires reply"):
+        RpcQueue.create(8, width=2, mode="async", carry_budget=2)
+    with pytest.raises(ValueError, match="shard_deadline requires reply"):
+        RpcQueue.create(8, width=2, shard_deadline=0.1)
+
+
+def test_async_dispatch_detected_at_create():
+    """Satellite bugfix: the hazardous jax_cpu_enable_async_dispatch
+    config is detected where the queue is BORN — one pointed warning per
+    process instead of every harness remembering the pin."""
+    import warnings as _warnings
+    from repro.core import rpc as rpc_mod
+    saved = list(rpc_mod._ASYNC_DISPATCH_WARNED)
+    rpc_mod._ASYNC_DISPATCH_WARNED.clear()
+    jax.config.update("jax_cpu_enable_async_dispatch", True)
+    try:
+        with pytest.warns(RuntimeWarning,
+                          match="jax_cpu_enable_async_dispatch"):
+            RpcQueue.create(4, width=1)
+        with _warnings.catch_warnings():           # latched: warned once
+            _warnings.simplefilter("error")
+            RpcQueue.create(4, width=1)
+    finally:
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+        rpc_mod._ASYNC_DISPATCH_WARNED.clear()
+        rpc_mod._ASYNC_DISPATCH_WARNED.extend(saved)
+
+
+def test_sharded_deadline_partial_epoch():
+    """Satellite bugfix: one hung shard no longer stalls its siblings —
+    with ``shard_deadline`` the gathered drain runs shards concurrently,
+    stamps the stalled shard's records STATUS_TIMEOUT, and completes the
+    rest of the epoch (regression: FaultPlan delay pinned to one shard)."""
+    from repro.core import rpc as rpc_mod
+    from repro.testing.faults import Fault, FaultPlan
+    REGISTRY.register("as.sd", lambda x: np.int32(x) * 2)
+
+    q = ShardedRpcQueue.create(2, 8, width=2, reply_capacity=8,
+                               shard_deadline=0.25)
+    locals_ = [q.local(d) for d in range(2)]
+    tks = []
+    for d in range(2):
+        locals_[d], t = locals_[d].enqueue_ticketed(
+            "as.sd", jnp.int32(10 + d), returns=I32)
+        tks.append(t)
+    sq = ShardedRpcQueue(jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
+    # occurrence 1 in canonical (device, slot) order = device 1's record
+    plan = FaultPlan([Fault("delay", "as.sd", call_index=1, delay=2.0)])
+    with plan, pytest.warns(RuntimeWarning, match="partial-epoch"):
+        sq = sq.flush()
+    assert int(sq.result_status(0, tks[0])) == rpc_mod.STATUS_OK
+    assert int(sq.result(0, tks[0])) == 20         # sibling completed
+    assert int(sq.result_status(1, tks[1])) == rpc_mod.STATUS_TIMEOUT
+
+
+def test_sharded_async_independent_drains():
+    """Sharded async flush: per-device epochs drain on independent slot
+    executors (no gather barrier); the collect flush publishes every
+    device's replies."""
+    from repro.core import rpc as rpc_mod
+    REGISTRY.register("as.sh", lambda x: np.int32(x) + 5)
+
+    q = ShardedRpcQueue.create(2, 8, width=2, reply_capacity=8,
+                               mode="async")
+    locals_ = [q.local(d) for d in range(2)]
+    tks = []
+    for d in range(2):
+        locals_[d], t = locals_[d].enqueue_ticketed(
+            "as.sh", jnp.int32(100 * (d + 1)), returns=I32)
+        tks.append(t)
+    sq = ShardedRpcQueue(jax.tree.map(lambda *xs: jnp.stack(xs), *locals_))
+    sq = sq.flush()                                # submit per device
+    sq = sq.flush()                                # collect per device
+    assert sq.join()
+    for d in range(2):
+        assert int(sq.result_status(d, tks[d])) == rpc_mod.STATUS_OK
+        assert int(sq.result(d, tks[d])) == 100 * (d + 1) + 5
+
+
+def test_device_run_queue_async_boundary():
+    """device_run(queue_async=True) owns the boundary protocol: hooks
+    deliver identically to the sync queue, and every host effect has
+    retired by the time the call returns (no trailing effects_barrier
+    needed)."""
+    seen = []
+    hook = HostHook(every=2, extract=lambda i, s: s,
+                    host_fn=lambda i, v: seen.append((i, v)),
+                    name="hook.async_test", batched=True)
+    final = device_run(lambda i, s: s + 1.0, jnp.float32(0.0), 6,
+                       hooks=[hook], donate=False, queue_async=True)
+    assert float(final) == 6.0
+    assert seen == [(2, 2.0), (4, 4.0), (6, 6.0)]
+
+
 def test_adopt_manifest_requires_hosts():
     """A manifest callee with no registered host function is a hard error
     naming the callee (silent no-op binding would drop its records)."""
